@@ -1,0 +1,46 @@
+"""§Roofline report: read dry-run artifacts and print the per-cell table."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+HDR = ("arch shape mesh chips bottleneck t_compute_s t_memory_s "
+       "t_collective_s useful_ratio roofline_frac per_dev_GB").split()
+
+
+def render(results_path: str = "dryrun_results.json", csv: bool = False):
+    if not os.path.exists(results_path):
+        print(f"(no {results_path} yet — run repro.launch.dryrun first)")
+        return []
+    rows = []
+    for r in json.load(open(results_path)):
+        if "error" in r:
+            rows.append([r["arch"], r["shape"], r["mesh"], "-", "ERROR",
+                         "-", "-", "-", "-", "-", "-"])
+            continue
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], r["chips"], r["bottleneck"],
+            f"{r['t_compute_s']:.3g}", f"{r['t_memory_s']:.3g}",
+            f"{r['t_collective_s']:.3g}",
+            f"{r['useful_flops_ratio']:.3f}",
+            f"{r['roofline_fraction']:.3f}",
+            f"{r['per_device_bytes']/1e9:.2f}",
+        ])
+    sep = "," if csv else None
+    w = [max(len(str(x)) for x in [h] + [row[i] for row in rows])
+         for i, h in enumerate(HDR)]
+    if csv:
+        print(",".join(HDR))
+        for row in rows:
+            print(",".join(str(x) for x in row))
+    else:
+        print("  ".join(h.ljust(w[i]) for i, h in enumerate(HDR)))
+        for row in rows:
+            print("  ".join(str(x).ljust(w[i]) for i, x in enumerate(row)))
+    return rows
+
+
+if __name__ == "__main__":
+    render(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json",
+           csv="--csv" in sys.argv)

@@ -1,0 +1,66 @@
+"""Benchmark driver — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark row, plus the
+roofline table from the latest dry-run artifacts if present.
+
+  PYTHONPATH=src python -m benchmarks.run [--rows N] [--quick]
+"""
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=None,
+                    help="base table rows (default 2M; --quick = 200k)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-collab", action="store_true")
+    args = ap.parse_args()
+    n_rows = args.rows or (200_000 if args.quick else 2_000_000)
+
+    from . import vcs_tables as V
+
+    print("name,us_per_call,derived")
+
+    # ---- Table 1: clone vs insert
+    for r in V.table1_clone(n_rows):
+        print(f"table1/{r['op']},{r['time_s']*1e6:.0f},"
+              f"space_bytes={r['space_bytes']}")
+    sys.stdout.flush()
+
+    # ---- Tables 2/3: diff + merge, builtin vs SQL
+    for r in V.table23_diff_merge(n_rows):
+        kind = "table2" if r["op"].startswith("Diff") else "table3"
+        print(f"{kind}/{r['op']}/{r['change']}/builtin,"
+              f"{r['builtin_s']*1e6:.0f},speedup="
+              f"{r['sql_s']/max(r['builtin_s'],1e-9):.1f}x")
+        print(f"{kind}/{r['op']}/{r['change']}/sql,{r['sql_s']*1e6:.0f},")
+    sys.stdout.flush()
+
+    if not args.skip_collab:
+        # ---- Tables 4/5: collaborative, no conflicts
+        for r in V.collaborative(n_rows, overlap=0.0):
+            print(f"table45/{r['op']}/{r['change']}/diff,"
+                  f"{r['diff_avg_s']*1e6:.0f},")
+            print(f"table45/{r['op']}/{r['change']}/merge,"
+                  f"{r['merge_avg_s']*1e6:.0f},"
+                  f"timeline={'|'.join(str(t) for t in r['merge_times'])}")
+        sys.stdout.flush()
+        # ---- Tables 6/7: collaborative, 10% overlap conflicts
+        for r in V.collaborative(n_rows, overlap=0.10):
+            print(f"table67/{r['op']}/{r['change']}/diff,"
+                  f"{r['diff_avg_s']*1e6:.0f},conflicts={r['true_conflicts']}")
+            print(f"table67/{r['op']}/{r['change']}/merge,"
+                  f"{r['merge_avg_s']*1e6:.0f},"
+                  f"timeline={'|'.join(str(t) for t in r['merge_times'])}")
+        sys.stdout.flush()
+
+    # ---- Roofline table (from dry-run artifacts, if present)
+    from . import roofline
+    print()
+    roofline.render("dryrun_results.json")
+
+
+if __name__ == '__main__':
+    main()

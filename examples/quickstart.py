@@ -1,0 +1,63 @@
+"""Quickstart: the paper's git-for-data operations in 60 lines.
+
+Runs the paper §3 workflow (Listing 1): snapshot → clone → independent
+edits → diff → three-way merge, on a small lineitem-like table.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.paper_vcs import LINEITEM_SCHEMA, gen_lineitem
+from repro.core import (ConflictMode, Engine, snapshot_diff,
+                        three_way_merge)
+
+engine = Engine()
+engine.create_table("lineitem", LINEITEM_SCHEMA)
+engine.insert("lineitem", gen_lineitem(100_000))
+print(f"lineitem: {engine.table('lineitem').count():,} rows")
+
+# CREATE SNAPSHOT sn1 FOR TABLE lineitem        (a git tag)
+sn1 = engine.create_snapshot("sn1", "lineitem")
+
+# CREATE TABLE t FROM SNAPSHOT lineitem{sn1}    (instant clone)
+engine.clone_table("t", "sn1")
+print(f"clone cost: {engine.table('t').directory.meta_nbytes()} metadata "
+      f"bytes (data shared, zero copy)")
+
+# both branches evolve independently (values actually change!)
+base = gen_lineitem(100_000)
+
+
+def edited(sl, price_bump, tag):
+    out = {k: v[sl].copy() for k, v in base.items()}
+    out["l_extendedprice"] = out["l_extendedprice"] * price_bump
+    out["l_comment"] = np.array(
+        [b"%s-%d" % (tag, i) for i in range(len(out["l_comment"]))],
+        dtype=object)
+    return out
+
+
+engine.update_by_keys("lineitem", edited(slice(0, 12), 1.10, b"repriced"))
+tx = engine.begin()                           # branch: fix eight comments
+tx.update_by_keys("t", edited(slice(40, 48), 1.0, b"fixed"))
+tx.commit()
+sn2 = engine.create_snapshot("sn2", "lineitem")
+sn3 = engine.create_snapshot("sn3", "t")
+
+# SNAPSHOT DIFF lineitem{sn2} AND t{sn3}
+d = snapshot_diff(engine.store, sn2, sn3)
+print(f"diff: {d.n_groups} differing value-groups; "
+      f"scanned {d.stats.rows_scanned:,} rows "
+      f"(vs {engine.table('lineitem').count():,} full scan)")
+
+# SNAPSHOT MERGE TABLE lineitem FROM t{sn3} [BASED ON sn1] ACCEPT
+rep = three_way_merge(engine, "lineitem", sn3, base=sn1,
+                      mode=ConflictMode.ACCEPT)
+print(f"merge: {rep.true_conflicts} true / {rep.false_conflicts} false "
+      f"conflicts, +{rep.inserted}/-{rep.deleted} rows, "
+      f"commit ts {rep.commit_ts}")
+
+# verify: lineitem now contains t's comment fixes AND its own repricing
+d2 = snapshot_diff(engine.store, engine.current_snapshot("lineitem"), sn3)
+print(f"post-merge diff vs branch: {d2.n_groups} groups "
+      f"(= main's own repricing, as expected)")

@@ -1,0 +1,47 @@
+"""End-to-end training on versioned data with fault-tolerant checkpoints.
+
+Demonstrates the full production loop on a reduced model:
+  1. ingest a corpus into a versioned table, pin a snapshot, train;
+  2. a fault is injected mid-run — the trainer detects the NaN state and
+     rolls back to the last versioned checkpoint (instant metadata restore);
+  3. a data engineer merges curated extra data into the corpus (the paper's
+     branch-review-merge), a new snapshot is pinned, training continues —
+     while the first run's pinned snapshot is untouched (isolation).
+
+  PYTHONPATH=src python examples/train_versioned.py
+"""
+import numpy as np
+
+from repro.core import ConflictMode, Engine, snapshot_diff, three_way_merge
+from repro.data import add_samples, create_token_table, synth_corpus
+from repro.launch.train import train_loop
+
+# --- phase 1: train with an injected fault (rollback demo) -------------
+state, losses, engine = train_loop(
+    "qwen1.5-0.5b", steps=40, seq_len=64, global_batch=8,
+    ckpt_every=10, inject_fault_at=25, log_every=10)
+print(f"phase 1: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+      f"({len(losses)} healthy steps, incl. rollback recovery)")
+
+# --- phase 2: curate more data on a branch and merge it ----------------
+engine.clone_table("corpus_dev", engine.snapshots[
+    [s for s in engine.snapshots if s.startswith("train-pin")][0]])
+rng = np.random.default_rng(1)
+new_ids = np.arange(1000, 1064)
+add_samples(engine, "corpus_dev", new_ids,
+            [rng.integers(2, 512, size=65).astype(np.uint32)
+             for _ in new_ids])
+dev_snap = engine.create_snapshot("curated", "corpus_dev")
+d = snapshot_diff(engine.store,
+                  engine.current_snapshot("corpus"), dev_snap)
+print(f"phase 2: review diff = {d.n_groups} new/changed samples")
+rep = three_way_merge(engine, "corpus", dev_snap, mode=ConflictMode.ACCEPT)
+print(f"phase 2: merged {rep.inserted} curated samples into corpus "
+      f"(atomic publish, ts={rep.commit_ts})")
+
+# --- phase 3: continue training on the enriched corpus -----------------
+state2, losses2, _ = train_loop(
+    "qwen1.5-0.5b", steps=20, seq_len=64, global_batch=8,
+    ckpt_every=10, engine=engine, log_every=10)
+print(f"phase 3: loss {losses2[0]:.3f} -> {losses2[-1]:.3f} on merged data")
+print("done: versioned data + versioned checkpoints, one engine.")

@@ -1,0 +1,9 @@
+"""Architecture registry: one module per assigned architecture."""
+from .base import (ArchConfig, MoECfg, SSMCfg, ShapeCfg, LM_SHAPES,  # noqa
+                   SUBQUADRATIC, cells_for, get_config, all_arch_names)
+
+from . import (granite_20b, qwen1_5_0_5b, deepseek_7b, internlm2_1_8b,  # noqa
+               whisper_medium, llama_3_2_vision_90b, jamba_1_5_large_398b,
+               phi3_5_moe_42b, mixtral_8x7b, rwkv6_7b, paper_vcs)
+
+ALL = True  # marker: all configs registered

@@ -1,0 +1,213 @@
+"""Architecture configs: the assigned 10 architectures + the paper workload.
+
+Every architecture is selectable via ``--arch <id>`` in the launchers. The
+config captures the exact published hyperparameters; smoke tests use
+``reduced()`` copies (same family/block pattern, tiny widths).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int = 2
+    every: int = 1          # MoE FFN every k-th layer (1 = all layers)
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMCfg:
+    kind: str = "mamba"     # "mamba" (SSD form) | "rwkv6"
+    d_state: int = 16       # mamba state size / rwkv6 key head dim
+    head_dim: int = 64      # channels per decay head
+    d_conv: int = 4         # mamba causal conv width
+    expand: int = 2         # mamba inner expansion
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None    # default d_model // n_heads
+    qkv_bias: bool = False
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None      # SWA (mixtral)
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    # layer pattern: period length and the slot kinds within one period
+    period: int = 1
+    slots: Tuple[str, ...] = ("attn",)        # attn | mamba | rwkv | cross
+    ffn_slots: Optional[Tuple[str, ...]] = None  # mlp | moe (default all mlp
+    #                                              or all moe if moe set)
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    # cross-attention context length (vlm patches / audio frames)
+    cross_len: int = 0
+    learned_pos: bool = False                 # whisper-style abs positions
+    max_seq: int = 8192                       # learned-pos table size
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # notes for DESIGN/roofline
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % self.period == 0, (self.name, self.n_layers,
+                                                  self.period)
+        return self.n_layers // self.period
+
+    def slot_kinds(self) -> Tuple[str, ...]:
+        assert len(self.slots) == self.period
+        return self.slots
+
+    def ffn_kinds(self) -> Tuple[str, ...]:
+        if self.ffn_slots is not None:
+            assert len(self.ffn_slots) == self.period
+            return self.ffn_slots
+        kind = "moe" if self.moe else "mlp"
+        return tuple(kind for _ in range(self.period))
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def n_params(self) -> float:
+        """Approximate parameter count (for 6ND roofline math)."""
+        d, hd = self.d_model, self.hd
+        per_layer = {}
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        mlp = 3 * d * self.d_ff     # gated
+        kinds = self.slot_kinds()
+        ffns = self.ffn_kinds()
+        total = 0.0
+        for s, f in zip(kinds, ffns):
+            if s in ("attn", "cross"):
+                total += attn
+            elif s == "mamba":
+                di = self.ssm.expand * d
+                total += 2 * d * di + di * d + di * (2 * self.ssm.d_state + 2)
+            elif s == "rwkv":
+                total += 4 * d * d + d * d  # r,k,v,g,o (+ small decay mlps)
+            if f == "moe":
+                total += self.moe.n_experts * 3 * d * self.d_ff
+            else:
+                total += mlp
+        total *= self.n_periods
+        if self.is_encdec:  # encoder stack: self-attn + mlp per layer
+            total += self.encoder_layers * (attn + 3 * d * self.d_ff)
+        total += 2 * self.vocab * d  # embed + lm head
+        return float(total)
+
+    def n_params_encoder(self) -> float:
+        """Encoder-stack params only (enc-dec archs)."""
+        if not self.is_encdec:
+            return 0.0
+        d, hd = self.d_model, self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        return float(self.encoder_layers * (attn + 3 * d * self.d_ff))
+
+    def n_params_active(self) -> float:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        moe_total = 0.0
+        for f in self.ffn_kinds():
+            if f == "moe":
+                moe_total += self.moe.n_experts * 3 * d * self.d_ff
+        moe_total *= self.n_periods
+        active_moe = moe_total * self.moe.top_k / self.moe.n_experts
+        return self.n_params() - moe_total + active_moe
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        scale = {}
+        scale["d_model"] = 64
+        scale["n_heads"] = 4
+        scale["n_kv_heads"] = max(1, min(self.n_kv_heads, 2))
+        scale["head_dim"] = 16
+        scale["d_ff"] = 128
+        scale["vocab"] = 512
+        scale["n_layers"] = 2 * self.period
+        scale["encoder_layers"] = 2 if self.is_encdec else 0
+        scale["cross_len"] = 8 if (self.cross_len or self.is_encdec) else 0
+        scale["max_seq"] = 256
+        if self.moe:
+            scale["moe"] = MoECfg(n_experts=4, top_k=2, every=self.moe.every,
+                                  capacity_factor=self.moe.capacity_factor)
+        if self.ssm:
+            scale["ssm"] = SSMCfg(kind=self.ssm.kind, d_state=4, head_dim=16,
+                                  d_conv=self.ssm.d_conv, expand=2)
+        if self.sliding_window:
+            scale["sliding_window"] = 16
+        return dataclasses.replace(self, **scale)
+
+
+# ---------------------------------------------------------------- shapes
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+LM_SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is sub-quadratic in context (SSM state, hybrid with
+# sparse attention, or bounded sliding window) — eligible for long_500k
+SUBQUADRATIC = {"rwkv6-7b", "jamba-1.5-large-398b", "mixtral-8x7b"}
+
+
+def cells_for(arch: ArchConfig):
+    """The (arch × shape) dry-run cells; long_500k only if sub-quadratic."""
+    out = []
+    for s in LM_SHAPES.values():
+        if s.name == "long_500k" and arch.name not in SUBQUADRATIC:
+            continue
+        out.append(s)
+    return out
+
+
+_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(fn: Callable[[], ArchConfig]):
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def get_config(name: str) -> ArchConfig:
+    from . import ALL  # noqa: F401  (forces registration of all configs)
+    return _REGISTRY[name]()
+
+
+def all_arch_names():
+    from . import ALL  # noqa: F401
+    return sorted(_REGISTRY.keys())

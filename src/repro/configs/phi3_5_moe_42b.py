@@ -1,0 +1,14 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE, GQA kv=8.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from .base import ArchConfig, MoECfg, register
+
+
+@register
+def phi3_5_moe_42b() -> ArchConfig:
+    return ArchConfig(
+        name="phi3.5-moe-42b-a6.6b", family="moe",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=6400, vocab=32064,
+        moe=MoECfg(n_experts=16, top_k=2, every=1),
+        source="hf:microsoft/Phi-3.5-MoE-instruct; hf",
+    )

@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: a git-for-data version-control
+engine over immutable columnar storage with MVCC (MatrixOne §§3-5).
+
+Public API:
+    Engine, Txn          — tables, transactions, snapshots, clone/restore
+    Schema, Column, CType
+    snapshot_diff, sql_diff, DiffResult
+    three_way_merge, two_way_merge, ConflictMode, MergeReport
+    compact_table, compact_objects
+"""
+from .schema import CType, Column, Schema                      # noqa: F401
+from .directory import Directory, Snapshot                     # noqa: F401
+from .engine import Engine, PKViolation, Txn, TxnConflict      # noqa: F401
+from .diff import DiffResult, gather_payload, snapshot_diff, sql_diff  # noqa: F401
+from .merge import (ConflictMode, MergeConflictError, MergeReport,  # noqa: F401
+                    ThreeWayDiff, three_way_diff, three_way_merge,
+                    two_way_merge)
+from .compaction import compact_objects, compact_table         # noqa: F401
+from .wal import WAL                                           # noqa: F401

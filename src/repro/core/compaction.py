@@ -1,0 +1,110 @@
+"""Background compaction + GC (paper §4, §5.4).
+
+Compaction is a transaction that rewrites the *visible* rows of a set of
+data objects into fresh, fully-sorted objects and drops the old data objects
+together with every tombstone object that exclusively targets them
+(invariant: a tombstone object never outlives its target data objects —
+otherwise dropped tombstones would resurrect rows).
+
+Rows keep their ORIGINAL commit timestamps, so MVCC reads at older horizons
+remain correct through the PITR directory history; named snapshots pin the
+pre-compaction objects against GC. Moves produced here (same value, new
+position) are what §5.2's move-handling must absorb during merge — tests
+cover that path explicitly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .objects import OBJECT_CAPACITY, DataObject, seal_data_object
+from .schema import concat_batches, take_batch
+from .visibility import VisibilityIndex
+
+
+def pick_compaction_sources(engine, table: str,
+                            min_objects: int = 2,
+                            small_frac: float = 0.25) -> Sequence[int]:
+    """Deterministic policy: compact data objects that are small (< 25% of
+    capacity) or carry any dead rows, once there are at least two of them."""
+    t = engine.table(table)
+    vi = VisibilityIndex(engine.store, t.directory)
+    picked = []
+    for oid in t.directory.data_oids:
+        obj: DataObject = engine.store.get(oid)
+        if obj.nrows < OBJECT_CAPACITY * small_frac:
+            picked.append(oid)
+            continue
+        if vi.killed_mask(obj).any():
+            picked.append(oid)
+    return picked if len(picked) >= min_objects else []
+
+
+def compact_objects(engine, table: str, src_oids: Sequence[int],
+                    *, _log: bool = True) -> int:
+    """Rewrite the visible rows of ``src_oids`` into fresh objects.
+
+    Returns the number of new data objects written."""
+    t = engine.table(table)
+    src = [o for o in src_oids if o in set(t.directory.data_oids)]
+    if not src:
+        return 0
+    vi = VisibilityIndex(engine.store, t.directory)
+    batches, tss, rlo, rhi, klo, khi, lsigs = [], [], [], [], [], [], []
+    for oid in src:
+        obj: DataObject = engine.store.get(oid)
+        idx = np.flatnonzero(vi.visible_mask(obj))
+        if idx.shape[0] == 0:
+            continue
+        batches.append(take_batch(obj.cols, idx))
+        tss.append(obj.commit_ts[idx])         # ORIGINAL commit ts preserved
+        rlo.append(obj.row_lo[idx])
+        rhi.append(obj.row_hi[idx])
+        klo.append(obj.key_lo[idx])
+        khi.append(obj.key_hi[idx])
+        lsigs.append({k: v[idx] for k, v in obj.lob_sigs.items()})
+    new_oids = []
+    if batches:
+        batch = concat_batches(t.schema, batches)
+        ts = np.concatenate(tss)
+        row_lo, row_hi = np.concatenate(rlo), np.concatenate(rhi)
+        key_lo, key_hi = np.concatenate(klo), np.concatenate(khi)
+        lob = {k: np.concatenate([d[k] for d in lsigs])
+               for k in (lsigs[0] if lsigs else {})}
+        order = np.lexsort((key_hi, key_lo))
+        for s in range(0, order.shape[0], OBJECT_CAPACITY):
+            idx = order[s:s + OBJECT_CAPACITY]
+            obj = seal_data_object(
+                engine.store.new_oid(), t.schema, take_batch(batch, idx),
+                ts[idx], row_lo[idx], row_hi[idx], key_lo[idx], key_hi[idx],
+                {k: v[idx] for k, v in lob.items()})
+            engine.store.put(obj)
+            new_oids.append(obj.oid)
+
+    # drop tombstone objects that only target compacted data objects
+    src_set = set(src)
+    drop_tombs = []
+    for toid in t.directory.tomb_oids:
+        tomb = engine.store.get(toid)
+        targets = set(int(x) for x in np.unique(
+            (tomb.target >> np.uint64(32)).astype(np.int64)))
+        if targets and targets <= src_set:
+            drop_tombs.append(toid)
+
+    apply_ts = engine.next_ts()
+    t.set_directory(t.directory.replace(
+        drop_data=src, drop_tombs=drop_tombs, add_data=new_oids,
+        ts=apply_ts))
+    if _log:
+        engine.wal.append("compact", table=table, src_oids=tuple(src),
+                          ts=apply_ts)
+    return len(new_oids)
+
+
+def compact_table(engine, table: str) -> int:
+    """Run one round of policy-driven compaction. Returns #objects written."""
+    src = pick_compaction_sources(engine, table)
+    if not src:
+        return 0
+    return compact_objects(engine, table, src)

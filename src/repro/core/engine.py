@@ -1,0 +1,428 @@
+"""The version-control engine: transactions, snapshots, clone/restore,
+lineage bookkeeping, WAL + deterministic replay (paper §§3–5).
+
+Single-node stand-in for MatrixOne's CN/TN/LogService split: commits are
+serialized through ``_commit`` (the TN role), every logical change is WAL'd
+(the LogService role), and all bulk row work is vectorized over the kernel
+ops (the CN role).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .directory import Directory, Snapshot
+from .objects import (OBJECT_CAPACITY, DataObject, ObjectStore,
+                      TombstoneObject, pack_rowid, rowid_off, rowid_oid,
+                      seal_data_object)
+from .schema import Schema, concat_batches, take_batch
+from .sigs import compute_sigs, key_sigs_for_lookup
+from .table import Table
+from .visibility import VisibilityIndex
+from .wal import WAL
+
+
+class TxnConflict(Exception):
+    """Write-write conflict: a target row vanished before commit."""
+
+
+class PKViolation(Exception):
+    pass
+
+
+SnapshotRef = Union[str, Snapshot]
+
+
+class Txn:
+    """Optimistic transaction: workspace of inserts + resolved delete rowids."""
+
+    def __init__(self, engine: "Engine"):
+        self.engine = engine
+        self.read_ts = engine.ts
+        self._ins: Dict[str, List[Dict[str, np.ndarray]]] = {}
+        self._del: Dict[str, List[np.ndarray]] = {}
+        self.committed: Optional[int] = None
+
+    def insert(self, table: str, batch) -> None:
+        t = self.engine.table(table)
+        self._ins.setdefault(table, []).append(t.schema.normalize_batch(batch))
+
+    def delete_rowids(self, table: str, rowids: np.ndarray) -> None:
+        self._del.setdefault(table, []).append(np.asarray(rowids, np.uint64))
+
+    def delete_by_keys(self, table: str, key_batch) -> int:
+        """Resolve PK -> rowids against the current state; returns #resolved."""
+        t = self.engine.table(table)
+        key_batch = {k: np.asarray(v) for k, v in key_batch.items()}
+        klo, khi = key_sigs_for_lookup(t.schema, key_batch)
+        rid = t.locate_keys(klo, khi)
+        hit = rid != 0
+        self.delete_rowids(table, rid[hit])
+        return int(hit.sum())
+
+    def update_by_keys(self, table: str, batch) -> int:
+        """Upsert semantics used by the paper's UPDATE experiments: delete the
+        existing row for each key (if any), insert the new version."""
+        t = self.engine.table(table)
+        batch = t.schema.normalize_batch(batch)
+        n = self.delete_by_keys(
+            table, {k: batch[k] for k in t.schema.primary_key})
+        self.insert(table, batch)
+        return n
+
+    def commit(self) -> int:
+        # expand with secondary-index maintenance (same-commit atomic)
+        if self.engine.indices:
+            from .indices import maintain_on_commit
+            for name in list(self._ins.keys() | self._del.keys()):
+                if name in self.engine.indices:
+                    dels = (np.unique(np.concatenate(self._del[name]))
+                            if self._del.get(name)
+                            else np.zeros((0,), np.uint64))
+                    maintain_on_commit(self.engine, self, name,
+                                       self._ins.get(name, []), dels)
+        ts = self.engine._commit(self)
+        self.committed = ts
+        return ts
+
+
+class Engine:
+    def __init__(self, retention_versions: int = 1024):
+        self.store = ObjectStore()
+        self.wal = WAL()
+        self.ts = 0
+        self.tables: Dict[str, Table] = {}
+        self.snapshots: Dict[str, Snapshot] = {}
+        self.retention_versions = retention_versions
+        # lineage: latest common base snapshot per unordered table pair
+        self._base: Dict[Tuple[str, str], Snapshot] = {}
+        # secondary indices (paper §5.5.4): base table -> [IndexSpec]
+        self.indices: Dict[str, list] = {}
+
+    # ------------------------------------------------------------ basics
+    def next_ts(self) -> int:
+        self.ts += 1
+        return self.ts
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]
+
+    def create_table(self, name: str, schema: Schema, *, _log=True) -> Table:
+        if name in self.tables:
+            raise ValueError(f"table {name} exists")
+        t = Table(name, schema, self.store, self.ts)
+        self.tables[name] = t
+        if _log:
+            self.wal.append("create_table", name=name, schema=schema)
+        return t
+
+    def drop_table(self, name: str, *, _log=True) -> None:
+        del self.tables[name]
+        self._base = {k: v for k, v in self._base.items() if name not in k}
+        if _log:
+            self.wal.append("drop_table", name=name)
+
+    def begin(self) -> Txn:
+        return Txn(self)
+
+    # convenience single-op transactions
+    def insert(self, table: str, batch) -> int:
+        tx = self.begin()
+        tx.insert(table, batch)
+        return tx.commit()
+
+    def delete_by_keys(self, table: str, key_batch) -> int:
+        tx = self.begin()
+        n = tx.delete_by_keys(table, key_batch)
+        tx.commit()
+        return n
+
+    def update_by_keys(self, table: str, batch) -> int:
+        tx = self.begin()
+        n = tx.update_by_keys(table, batch)
+        tx.commit()
+        return n
+
+    # ------------------------------------------------------------ commit
+    def _seal_inserts(self, schema: Schema, batches, ts: int):
+        """Globally key-sort the txn's inserts and seal capacity-sized
+        objects with disjoint zones."""
+        batch = concat_batches(schema, batches)
+        n = schema.validate_batch(batch)
+        if n == 0:
+            return [], None
+        row_lo, row_hi, key_lo, key_hi, lob_sigs = compute_sigs(schema, batch)
+        order = np.lexsort((key_hi, key_lo))
+        oids = []
+        tsa = np.full((n,), np.uint64(ts))
+        for s in range(0, n, OBJECT_CAPACITY):
+            idx = order[s:s + OBJECT_CAPACITY]
+            obj = seal_data_object(
+                self.store.new_oid(), schema, take_batch(batch, idx),
+                tsa[:idx.shape[0]], row_lo[idx], row_hi[idx],
+                key_lo[idx], key_hi[idx],
+                {k: v[idx] for k, v in lob_sigs.items()})
+            self.store.put(obj)
+            oids.append(obj.oid)
+        return oids, (key_lo, key_hi)
+
+    def _seal_tombstones(self, targets: np.ndarray, ts: int) -> List[int]:
+        if targets.shape[0] == 0:
+            return []
+        targets = np.sort(targets)
+        klo = np.empty_like(targets)
+        khi = np.empty_like(targets)
+        toids = rowid_oid(targets)
+        offs = rowid_off(targets)
+        for oid in np.unique(toids):
+            m = toids == oid
+            obj: DataObject = self.store.get(int(oid))
+            klo[m] = obj.key_lo[offs[m]]
+            khi[m] = obj.key_hi[offs[m]]
+        oids = []
+        for s in range(0, targets.shape[0], OBJECT_CAPACITY):
+            sl = slice(s, s + OBJECT_CAPACITY)
+            t = TombstoneObject(
+                oid=self.store.new_oid(), nrows=int(targets[sl].shape[0]),
+                target=targets[sl], key_lo=klo[sl], key_hi=khi[sl],
+                commit_ts=np.full(targets[sl].shape, np.uint64(ts)),
+                target_oids=tuple(int(x) for x in np.unique(toids)))
+            self.store.put(t)
+            oids.append(t.oid)
+        return oids
+
+    def _commit(self, tx: Txn, *, _log=True) -> int:
+        names = sorted(set(tx._ins) | set(tx._del))
+        ts = self.next_ts()
+        for name in names:
+            t = self.table(name)
+            dels = (np.unique(np.concatenate(tx._del[name]))
+                    if tx._del.get(name) else np.zeros((0,), np.uint64))
+            # write-write conflict check: every target must still be visible
+            if dels.shape[0]:
+                vi = VisibilityIndex(self.store, t.directory)
+                if vi.killed_rowids(dels).any():
+                    raise TxnConflict(f"{name}: delete target already deleted")
+                for oid in np.unique(rowid_oid(dels)):
+                    if int(oid) not in set(t.directory.data_oids):
+                        raise TxnConflict(f"{name}: target object gone")
+            ins = tx._ins.get(name, [])
+            data_oids, key_sigs = self._seal_inserts(t.schema, ins, ts)
+            # PK enforcement
+            if t.schema.has_pk and key_sigs is not None:
+                klo, khi = key_sigs
+                pairs = np.stack([klo, khi], 1)
+                if np.unique(pairs, axis=0).shape[0] != pairs.shape[0]:
+                    self._unwind(data_oids)
+                    raise PKViolation(f"{name}: duplicate key in insert batch")
+                existing = t.locate_keys(klo, khi)
+                live = existing != 0
+                if live.any():
+                    dset = set(dels.tolist())
+                    if any(int(r) not in dset for r in existing[live]):
+                        self._unwind(data_oids)
+                        raise PKViolation(f"{name}: key already exists")
+            tomb_oids = self._seal_tombstones(dels, ts)
+            t.set_directory(t.directory.with_objects(
+                data_oids, tomb_oids, ts=ts))
+            if _log:
+                self.wal.append("commit", table=name, ts=ts,
+                                inserts=ins, deletes=dels)
+        return ts
+
+    def _unwind(self, oids: Sequence[int]) -> None:
+        for o in oids:
+            self.store.delete(o)
+
+    # --------------------------------------------------------- snapshots
+    def resolve_snapshot(self, ref: SnapshotRef) -> Snapshot:
+        return self.snapshots[ref] if isinstance(ref, str) else ref
+
+    def create_snapshot(self, name: str, table: str, *, _log=True) -> Snapshot:
+        """CREATE SNAPSHOT name FOR TABLE table (a git tag)."""
+        if name in self.snapshots:
+            raise ValueError(f"snapshot {name} exists")
+        t = self.table(table)
+        snap = Snapshot(name=name, table=table, schema=t.schema,
+                        directory=t.directory, created_ts=self.ts)
+        self.snapshots[name] = snap
+        if _log:
+            self.wal.append("snapshot", name=name, table=table)
+        return snap
+
+    def drop_snapshot(self, name: str, *, _log=True) -> None:
+        del self.snapshots[name]
+        self._base = {k: v for k, v in self._base.items()
+                      if v.name != name or v.name is None}
+        if _log:
+            self.wal.append("drop_snapshot", name=name)
+
+    def snapshot_at(self, table: str, ts: int) -> Snapshot:
+        """T{mo_ts = ts} — PITR timestamp snapshot (a git commit)."""
+        t = self.table(table)
+        return Snapshot(name=None, table=table, schema=t.schema,
+                        directory=t.directory_at(ts), created_ts=ts)
+
+    def current_snapshot(self, table: str) -> Snapshot:
+        t = self.table(table)
+        return Snapshot(name=None, table=table, schema=t.schema,
+                        directory=t.directory, created_ts=self.ts)
+
+    # ------------------------------------------------------ clone/restore
+    def clone_table(self, new_name: str, src: SnapshotRef, *,
+                    with_indices: bool = False, _log=True) -> Table:
+        """CREATE TABLE new FROM SNAPSHOT src — metadata-only copy.
+
+        ``with_indices`` (beyond paper §5.5.4): also clone the auxiliary
+        index tables — still metadata-only."""
+        snap = self.resolve_snapshot(src)
+        if new_name in self.tables:
+            raise ValueError(f"table {new_name} exists")
+        t = Table(new_name, snap.schema, self.store, snap.ts)
+        t.directory = snap.directory
+        t.history = [(snap.ts, snap.directory)]
+        self.tables[new_name] = t
+        self.set_common_base(new_name, snap.table, snap)
+        if with_indices:
+            from .indices import IndexSpec
+            for spec in self.indices.get(snap.table, []):
+                new_spec = IndexSpec(spec.name, new_name, spec.columns)
+                self.clone_table(new_spec.aux_table,
+                                 self.current_snapshot(spec.aux_table),
+                                 _log=False)
+                self.indices.setdefault(new_name, []).append(new_spec)
+        if _log:
+            self.wal.append("clone", new=new_name, snap=snap,
+                            with_indices=with_indices)
+        return t
+
+    def restore_table(self, table: str, src: SnapshotRef, *, _log=True) -> None:
+        """RESTORE TABLE table FROM SNAPSHOT src — git reset --hard."""
+        snap = self.resolve_snapshot(src)
+        t = self.table(table)
+        if snap.table != table and not t.schema.compatible_with(snap.schema):
+            raise ValueError("restore: incompatible schema")
+        t.schema = snap.schema  # PITR across schema change (paper §5.5.6)
+        t.set_directory(Directory(snap.directory.data_oids,
+                                  snap.directory.tomb_oids, snap.ts))
+        if snap.table != table:
+            self.set_common_base(table, snap.table, snap)
+        if _log:
+            self.wal.append("restore", table=table, snap=snap)
+
+    # ------------------------------------------------------ schema change
+    def alter_table_add_column(self, table: str, column, default, *,
+                               _log=True) -> None:
+        """ALTER TABLE ADD COLUMN (paper §5.5.6): rewrites the table under
+        the new schema (row signatures depend on the full row, so a rewrite
+        keeps value identity consistent). Old snapshots keep the old schema;
+        diff/merge across schema versions is refused (compatible_with),
+        matching the paper's advice to alter before cloning."""
+        from .schema import Schema
+        t = self.table(table)
+        batch, _ = t.scan()
+        n = batch[t.schema.names[0]].shape[0] if t.schema.names else 0
+        new_schema = Schema(t.schema.columns + (column,),
+                            primary_key=t.schema.primary_key)
+        if column.ctype.value == "lob":
+            fill = np.empty((n,), object)
+            fill[:] = default
+        else:
+            fill = np.full((n,), default,
+                           dtype=new_schema.np_dtype(column.name))
+        batch[column.name] = fill
+        t.schema = new_schema
+        t.directory = t.directory.replace(
+            drop_data=t.directory.data_oids,
+            drop_tombs=t.directory.tomb_oids, ts=t.directory.ts)
+        t.history.append((t.directory.ts, t.directory))
+        if n:
+            tx = self.begin()
+            tx.insert(table, batch)
+            tx.commit()
+        if _log:
+            self.wal.append("alter_add_column", table=table, column=column,
+                            default=default)
+
+    # ----------------------------------------------------------- lineage
+    def set_common_base(self, a: str, b: str, snap: Snapshot) -> None:
+        self._base[tuple(sorted((a, b)))] = snap
+
+    def find_common_base(self, a: str, b: str) -> Optional[Snapshot]:
+        return self._base.get(tuple(sorted((a, b))))
+
+    # ------------------------------------------------------------ replay
+    @staticmethod
+    def replay(wal: WAL) -> "Engine":
+        """Deterministically rebuild an engine from its WAL (crash recovery)."""
+        from .compaction import compact_objects  # local import: cycle
+        e = Engine()
+        for rec in wal:
+            k, p = rec.kind, rec.payload
+            if k == "create_table":
+                e.create_table(p["name"], p["schema"], _log=False)
+            elif k == "drop_table":
+                e.drop_table(p["name"], _log=False)
+            elif k == "commit":
+                tx = e.begin()
+                for b in p["inserts"]:
+                    tx._ins.setdefault(p["table"], []).append(b)
+                if p["deletes"].shape[0]:
+                    tx.delete_rowids(p["table"], p["deletes"])
+                e._commit(tx, _log=False)
+            elif k == "snapshot":
+                e.create_snapshot(p["name"], p["table"], _log=False)
+            elif k == "drop_snapshot":
+                e.drop_snapshot(p["name"], _log=False)
+            elif k == "clone":
+                snap = p["snap"]
+                snap = e.snapshots.get(snap.name, snap) if snap.name else snap
+                e.clone_table(p["new"], snap, _log=False)
+            elif k == "restore":
+                snap = p["snap"]
+                snap = e.snapshots.get(snap.name, snap) if snap.name else snap
+                e.restore_table(p["table"], snap, _log=False)
+            elif k == "set_base":
+                e.set_common_base(p["a"], p["b"], p["snap"])
+            elif k == "create_index":
+                from .indices import create_index
+                create_index(e, p["table"], p["name"], p["columns"],
+                             _log=False)
+            elif k == "drop_index":
+                from .indices import drop_index
+                drop_index(e, p["table"], p["name"], _log=False)
+            elif k == "alter_add_column":
+                e.alter_table_add_column(p["table"], p["column"],
+                                         p["default"], _log=False)
+            elif k == "compact":
+                compact_objects(e, p["table"], p["src_oids"], _log=False)
+            else:
+                raise ValueError(f"unknown WAL record {k}")
+        # replay must land on the same timestamp
+        e.ts = max(e.ts, max((r.payload.get("ts", 0) for r in wal), default=0))
+        return e
+
+    # ------------------------------------------------------- GC (mark-sweep)
+    def gc(self) -> int:
+        """Drop objects unreachable from current tables, retained PITR
+        history, and named snapshots. Returns #objects collected."""
+        marked = set()
+        for t in self.tables.values():
+            t.history = t.history[-self.retention_versions:]
+            for _, d in t.history:
+                marked.update(d.data_oids)
+                marked.update(d.tomb_oids)
+            marked.update(t.directory.data_oids)
+            marked.update(t.directory.tomb_oids)
+        for s in self.snapshots.values():
+            marked.update(s.directory.data_oids)
+            marked.update(s.directory.tomb_oids)
+        for s in self._base.values():
+            marked.update(s.directory.data_oids)
+            marked.update(s.directory.tomb_oids)
+        dead = [o for o in list(self.store.oids()) if o not in marked]
+        for o in dead:
+            self.store.delete(o)
+        return len(dead)

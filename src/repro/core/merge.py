@@ -1,0 +1,561 @@
+"""SNAPSHOT MERGE (paper §3, §5.2, §5.3).
+
+Three-way merge of a source snapshot into the *current* version of a target
+table, with an explicit or implicit (lineage) common base revision, or with
+an empty base when none exists (§5.3). Conflict modes: FAIL / SKIP (keep
+target's version) / ACCEPT (take source's version).
+
+Implementation follows §5.2:
+  1. signed Δ streams of each branch vs. the base (cost ∝ changed data),
+  2. per-branch collapse per key: DEL / INS / UPD, with *move* detection
+     (value-identical reposition ⇒ treated as unchanged — false conflict),
+  3. cancellation of identical changes across branches (same-row deletions,
+     same-value insertions),
+  4. residual keys changed by both branches = true conflicts; single-branch
+     keys = false conflicts, auto-applied,
+  5. all edits applied to the target in ONE transaction (atomic publish).
+
+NoPK tables use the §3 cardinality rules (δ arithmetic per value group) on
+the residuals after cancellation. NOTE (documented in DESIGN.md): for
+branch-internal value-neutral rewrites (delete a row + insert an identical
+one) §3's raw-count rule and §5's cancel-then-classify mechanics disagree;
+we implement the §5 mechanics, like the paper's system does.
+
+Without a common base (§5.3) merge runs on ONE cross delta
+``signed_delta(target, source)`` — shared objects are skipped wholesale, so
+merging estranged clones stays ∝ their divergence.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..kernels import ops
+from .delta import DeltaStats, SignedStream, signed_delta
+from .diff import gather_payload
+from .directory import Snapshot
+from .engine import Engine
+from .schema import Schema
+
+
+class ConflictMode(enum.Enum):
+    FAIL = "fail"
+    SKIP = "skip"      # keep target's version ("accept yours")
+    ACCEPT = "accept"  # take source's version ("accept mine")
+    CELL = "cell"      # BEYOND-PAPER (paper §5.5.3 future work): auto-merge
+    #                    update-vs-update conflicts at CELL level when the
+    #                    two branches changed different columns; same-cell
+    #                    divergence still fails
+
+
+class MergeConflictError(Exception):
+    def __init__(self, report: "MergeReport"):
+        super().__init__(
+            f"merge failed: {report.true_conflicts} true conflict(s)")
+        self.report = report
+
+
+@dataclass
+class MergeReport:
+    true_conflicts: int = 0
+    cell_merged: int = 0       # CELL mode: row conflicts merged column-wise
+    false_conflicts: int = 0
+    moves_ignored: int = 0
+    inserted: int = 0
+    deleted: int = 0
+    commit_ts: Optional[int] = None
+    used_base: bool = True
+    # conflicting keys, for FAIL-mode reporting / manual resolution
+    conflict_key_lo: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.uint64))
+    conflict_key_hi: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.uint64))
+    stats: DeltaStats = field(default_factory=DeltaStats)
+
+
+_NONE = np.iinfo(np.int64).max  # "no entry" sentinel for position reductions
+
+OP_DEL, OP_INS, OP_UPD = np.int8(0), np.int8(1), np.int8(2)
+
+
+@dataclass
+class PKChanges:
+    """Per-key collapsed change set of one branch vs. the base (§5.2)."""
+    key_lo: np.ndarray       # (k,) uint64, sorted by (lo, hi)
+    key_hi: np.ndarray
+    op: np.ndarray           # (k,) int8: OP_DEL / OP_INS / OP_UPD
+    minus_rowid: np.ndarray  # base row deleted (0 if none)
+    plus_rowid: np.ndarray   # new visible row (0 if none)
+    plus_row_lo: np.ndarray  # value signature of the new row (0 if none)
+    plus_row_hi: np.ndarray
+
+    @property
+    def k(self) -> int:
+        return int(self.key_lo.shape[0])
+
+
+def collapse_pk(stream: SignedStream) -> Tuple[PKChanges, int]:
+    """Collapse a branch Δ stream per primary key; drop pure moves.
+
+    Returns (changes, n_moves_dropped). PK uniqueness guarantees at most one
+    − (the base/left row) and one + (the new/right row) per key."""
+    if stream.n == 0:
+        z64 = np.zeros((0,), np.uint64)
+        return PKChanges(z64, z64, np.zeros((0,), np.int8), z64.copy(),
+                         z64.copy(), z64.copy(), z64.copy()), 0
+    order, agg = ops.diff_aggregate(stream.key_lo, stream.key_hi, stream.sign)
+    s = stream.take(order)
+    n = s.n
+    pos = np.arange(n, dtype=np.int64)
+    first_minus = np.minimum.reduceat(
+        np.where(s.sign < 0, pos, _NONE), agg.run_starts)
+    first_plus = np.minimum.reduceat(
+        np.where(s.sign > 0, pos, _NONE), agg.run_starts)
+    has_minus = first_minus != _NONE
+    has_plus = first_plus != _NONE
+    fm = np.minimum(first_minus, n - 1)
+    fp = np.minimum(first_plus, n - 1)
+    moved = (has_minus & has_plus
+             & (s.row_lo[fm] == s.row_lo[fp])
+             & (s.row_hi[fm] == s.row_hi[fp]))
+    keep = ~moved
+    op = np.where(has_minus & has_plus, OP_UPD,
+                  np.where(has_plus, OP_INS, OP_DEL)).astype(np.int8)
+    starts = agg.run_starts
+    ch = PKChanges(
+        key_lo=s.key_lo[starts][keep],
+        key_hi=s.key_hi[starts][keep],
+        op=op[keep],
+        minus_rowid=np.where(has_minus, s.rowid[fm], 0).astype(np.uint64)[keep],
+        plus_rowid=np.where(has_plus, s.rowid[fp], 0).astype(np.uint64)[keep],
+        plus_row_lo=np.where(has_plus, s.row_lo[fp], 0).astype(np.uint64)[keep],
+        plus_row_hi=np.where(has_plus, s.row_hi[fp], 0).astype(np.uint64)[keep],
+    )
+    return ch, int(moved.sum())
+
+
+def _align_keys(t: PKChanges, s: PKChanges):
+    """Merge-join the two branches' per-key change sets.
+
+    Returns (t_idx, s_idx): equal-length arrays over the union of keys;
+    -1 where that branch has no change for the key."""
+    key_lo = np.concatenate([t.key_lo, s.key_lo])
+    key_hi = np.concatenate([t.key_hi, s.key_hi])
+    side = np.concatenate([np.zeros((t.k,), np.int8), np.ones((s.k,), np.int8)])
+    srcpos = np.concatenate([np.arange(t.k), np.arange(s.k)])
+    order, agg = ops.diff_aggregate(
+        key_lo, key_hi, np.ones((t.k + s.k,), np.int32))
+    side_o, srcpos_o = side[order], srcpos[order]
+    n = side_o.shape[0]
+    pos = np.arange(n, dtype=np.int64)
+    first_t = np.minimum.reduceat(
+        np.where(side_o == 0, pos, _NONE), agg.run_starts)
+    first_s = np.minimum.reduceat(
+        np.where(side_o == 1, pos, _NONE), agg.run_starts)
+    t_idx = np.where(first_t != _NONE,
+                     srcpos_o[np.minimum(first_t, max(n - 1, 0))], -1)
+    s_idx = np.where(first_s != _NONE,
+                     srcpos_o[np.minimum(first_s, max(n - 1, 0))], -1)
+    return t_idx.astype(np.int64), s_idx.astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# PK paths
+# --------------------------------------------------------------------------
+
+def _merge_pk(engine: Engine, target: str, source: Snapshot,
+              base_dir, mode: ConflictMode, report: MergeReport):
+    """Three-way PK merge. Returns (del_key_lo, del_key_hi, ins_rowids)."""
+    t_tab = engine.table(target)
+    d_t = signed_delta(engine.store, base_dir, t_tab.directory, report.stats)
+    d_s = signed_delta(engine.store, base_dir, source.directory, report.stats)
+    ch_t, mv_t = collapse_pk(d_t)
+    ch_s, mv_s = collapse_pk(d_s)
+    report.moves_ignored = mv_t + mv_s
+
+    t_idx, s_idx = _align_keys(ch_t, ch_s)
+    both = (t_idx >= 0) & (s_idx >= 0)
+    only_s = (t_idx < 0) & (s_idx >= 0)
+
+    # identical changes cancel (no conflict, already reflected in target)
+    ti, si = t_idx[both], s_idx[both]
+    same_del = (ch_t.op[ti] == OP_DEL) & (ch_s.op[si] == OP_DEL)
+    same_val = ((ch_t.op[ti] != OP_DEL) & (ch_s.op[si] != OP_DEL)
+                & (ch_t.plus_row_lo[ti] == ch_s.plus_row_lo[si])
+                & (ch_t.plus_row_hi[ti] == ch_s.plus_row_hi[si]))
+    identical = same_del | same_val
+    conflict_ti, conflict_si = ti[~identical], si[~identical]
+    report.false_conflicts += int(identical.sum()) + int(only_s.sum())
+    report.true_conflicts = int(conflict_si.shape[0])
+
+    if report.true_conflicts and mode is ConflictMode.FAIL:
+        report.conflict_key_lo = ch_s.key_lo[conflict_si]
+        report.conflict_key_hi = ch_s.key_hi[conflict_si]
+        raise MergeConflictError(report)
+
+    del_lo, del_hi, ins = [], [], []
+
+    # false conflicts: apply source's op (scenarios 2 & 4)
+    fi = s_idx[only_s]
+    ops_s = ch_s.op[fi]
+    needs_del = ops_s != OP_INS
+    del_lo.append(ch_s.key_lo[fi][needs_del])
+    del_hi.append(ch_s.key_hi[fi][needs_del])
+    ins.append(ch_s.plus_rowid[fi][ops_s != OP_DEL])
+
+    # true conflicts under ACCEPT: force source's version (scenarios 3 & 6)
+    if report.true_conflicts and mode is ConflictMode.ACCEPT:
+        t_has_row = ch_t.op[conflict_ti] != OP_DEL
+        del_lo.append(ch_s.key_lo[conflict_si][t_has_row])
+        del_hi.append(ch_s.key_hi[conflict_si][t_has_row])
+        ins.append(ch_s.plus_rowid[conflict_si][ch_s.op[conflict_si] != OP_DEL])
+
+    # CELL mode (beyond paper, §5.5.3): merge UPD-vs-UPD conflicts per
+    # column against the base row; fail on same-cell divergence or on
+    # structural conflicts (DEL involved / no base row).
+    merged_batch = None
+    if report.true_conflicts and mode is ConflictMode.CELL:
+        updud = ((ch_t.op[conflict_ti] == OP_UPD)
+                 & (ch_s.op[conflict_si] == OP_UPD))
+        if not updud.all():
+            report.conflict_key_lo = ch_s.key_lo[conflict_si][~updud]
+            report.conflict_key_hi = ch_s.key_hi[conflict_si][~updud]
+            raise MergeConflictError(report)
+        schema = engine.table(target).schema
+        base_rows = gather_payload(engine.store, schema,
+                                   ch_t.minus_rowid[conflict_ti])
+        t_rows = gather_payload(engine.store, schema,
+                                ch_t.plus_rowid[conflict_ti])
+        s_rows = gather_payload(engine.store, schema,
+                                ch_s.plus_rowid[conflict_si])
+        merged = {}
+        cell_conflict = np.zeros((conflict_ti.shape[0],), bool)
+        for col in schema.names:
+            b_c, t_c, s_c = base_rows[col], t_rows[col], s_rows[col]
+            if schema.np_dtype(col) == np.object_:  # LOB: bytes equality
+                t_chg = np.asarray([x != y for x, y in zip(t_c, b_c)])
+                s_chg = np.asarray([x != y for x, y in zip(s_c, b_c)])
+                t_ne_s = np.asarray([x != y for x, y in zip(t_c, s_c)])
+                merged[col] = np.where(s_chg, s_c, t_c)
+            else:
+                t_chg = t_c != b_c
+                s_chg = s_c != b_c
+                t_ne_s = t_c != s_c
+                merged[col] = np.where(s_chg, s_c, t_c)
+            cell_conflict |= t_chg & s_chg & t_ne_s
+        if cell_conflict.any():
+            report.conflict_key_lo = ch_s.key_lo[conflict_si][cell_conflict]
+            report.conflict_key_hi = ch_s.key_hi[conflict_si][cell_conflict]
+            raise MergeConflictError(report)
+        report.cell_merged = int(conflict_ti.shape[0])
+        del_lo.append(ch_s.key_lo[conflict_si])
+        del_hi.append(ch_s.key_hi[conflict_si])
+        merged_batch = merged
+
+    cat = lambda xs: (np.concatenate(xs) if xs else np.zeros((0,), np.uint64))
+    return cat(del_lo), cat(del_hi), cat(ins), merged_batch
+
+
+def _merge_pk_nobase(engine: Engine, target: str, source: Snapshot,
+                     mode: ConflictMode, report: MergeReport):
+    """§5.3 no-base PK merge on ONE cross delta (shared objects skipped).
+
+    Per key: − only ⇒ target-only (keep); + only ⇒ source-only (insert);
+    both with equal values ⇒ no-op; both with different values ⇒ true
+    conflict. Returns (del_rowids, ins_rowids) — deletes are direct current
+    rowids (the − rows ARE the target's current rows)."""
+    t_tab = engine.table(target)
+    cross = signed_delta(engine.store, t_tab.directory, source.directory,
+                         report.stats)
+    ch, moves = collapse_pk(cross)  # "moved" == value-identical in both
+    report.moves_ignored = moves
+    conflicts = ch.op == OP_UPD
+    inserts = ch.op == OP_INS
+    report.false_conflicts += int(inserts.sum()) + moves
+    report.true_conflicts = int(conflicts.sum())
+    if report.true_conflicts and mode is ConflictMode.FAIL:
+        report.conflict_key_lo = ch.key_lo[conflicts]
+        report.conflict_key_hi = ch.key_hi[conflicts]
+        raise MergeConflictError(report)
+    del_rowids = [np.zeros((0,), np.uint64)]
+    ins_rowids = [ch.plus_rowid[inserts]]
+    if report.true_conflicts and mode is ConflictMode.ACCEPT:
+        del_rowids.append(ch.minus_rowid[conflicts])
+        ins_rowids.append(ch.plus_rowid[conflicts])
+    return np.concatenate(del_rowids), np.concatenate(ins_rowids)
+
+
+# --------------------------------------------------------------------------
+# NoPK paths
+# --------------------------------------------------------------------------
+
+def _merge_nopk(engine: Engine, target: str, source: Snapshot,
+                base_dir, mode: ConflictMode, report: MergeReport):
+    """Three-way NoPK merge (§3 cardinality rules on post-cancel residuals).
+
+    Returns (del_sig_lo, del_sig_hi, del_need, ins_rowids): delete
+    ``del_need[i]`` visible duplicates of value-signature i; insert the
+    (possibly repeated) payload rowids."""
+    t_tab = engine.table(target)
+    d_t = signed_delta(engine.store, base_dir, t_tab.directory, report.stats)
+    d_s = signed_delta(engine.store, base_dir, source.directory, report.stats)
+
+    # cancellation #1: deletions of the same base row (same physical rowid)
+    common_del = np.intersect1d(d_t.rowid[d_t.sign < 0],
+                                d_s.rowid[d_s.sign < 0])
+
+    def residual(stream: SignedStream) -> SignedStream:
+        if common_del.shape[0] == 0 or stream.n == 0:
+            return stream
+        drop = (stream.sign < 0) & np.isin(stream.rowid, common_del)
+        return stream.take(np.flatnonzero(~drop))
+
+    d_t, d_s = residual(d_t), residual(d_s)
+
+    row_lo = np.concatenate([d_t.row_lo, d_s.row_lo])
+    row_hi = np.concatenate([d_t.row_hi, d_s.row_hi])
+    side = np.concatenate([np.zeros((d_t.n,), np.int8),
+                           np.ones((d_s.n,), np.int8)])
+    sign = np.concatenate([d_t.sign, d_s.sign])
+    rowid = np.concatenate([d_t.rowid, d_s.rowid])
+    if row_lo.shape[0] == 0:
+        z = np.zeros((0,), np.uint64)
+        return z, z.copy(), np.zeros((0,), np.int64), z.copy()
+    order, agg = ops.diff_aggregate(row_lo, row_hi, np.ones_like(sign))
+    ro_lo, ro_hi = row_lo[order], row_hi[order]
+    sd, sg, rid = side[order], sign[order], rowid[order]
+    starts = agg.run_starts
+    k = starts.shape[0]
+    plus_t = np.add.reduceat(((sd == 0) & (sg > 0)).astype(np.int64), starts)
+    plus_s = np.add.reduceat(((sd == 1) & (sg > 0)).astype(np.int64), starts)
+    net_t = np.add.reduceat(np.where(sd == 0, sg, 0), starts).astype(np.int64)
+    net_s = np.add.reduceat(np.where(sd == 1, sg, 0), starts).astype(np.int64)
+    # cancellation #2: insertions of identical values on both branches
+    c_ins = np.minimum(plus_t, plus_s)
+    dt = net_t - c_ins   # residual δ_T per value group
+    ds = net_s - c_ins   # residual δ_TClone
+
+    conflict = (dt != 0) & (ds != 0)
+    false_c = (dt == 0) & (ds != 0)
+    report.true_conflicts = int(conflict.sum())
+    report.false_conflicts += int(false_c.sum())
+    if report.true_conflicts and mode is ConflictMode.FAIL:
+        report.conflict_key_lo = ro_lo[starts][conflict]
+        report.conflict_key_hi = ro_hi[starts][conflict]
+        raise MergeConflictError(report)
+
+    apply_net = np.zeros((k,), np.int64)
+    apply_net[false_c] = ds[false_c]
+    if mode is ConflictMode.ACCEPT:
+        # force target to the source's count: N3 − N2 == net_s − net_t
+        apply_net[conflict] = (net_s - net_t)[conflict]
+
+    # representative payload rowid per group: prefer a source + row, else a
+    # − row (base object — the paper's base-revision lookup)
+    n = sg.shape[0]
+    pos = np.arange(n, dtype=np.int64)
+    first_sp = np.minimum.reduceat(
+        np.where((sd == 1) & (sg > 0), pos, _NONE), starts)
+    first_mn = np.minimum.reduceat(np.where(sg < 0, pos, _NONE), starts)
+    rep_pos = np.where(first_sp != _NONE, first_sp, first_mn)
+    rep_rowid = rid[np.minimum(rep_pos, n - 1)]
+
+    ins = np.flatnonzero(apply_net > 0)
+    dele = np.flatnonzero(apply_net < 0)
+    ins_rowids = np.repeat(rep_rowid[ins], apply_net[ins])
+    return (ro_lo[starts][dele], ro_hi[starts][dele], -apply_net[dele],
+            ins_rowids)
+
+
+def _merge_nopk_nobase(engine: Engine, target: str, source: Snapshot,
+                       mode: ConflictMode, report: MergeReport):
+    """§5.3 no-base NoPK merge on one cross delta.
+
+    Per value group of the cross stream (net = N_source − N_target):
+    net == 0 ⇒ cancelled; only-− ⇒ target-only value (keep); only-+ ⇒
+    source-only value (insert all); mixed ⇒ true conflict (counts differ and
+    both have the value). Returns (del_rowids, ins_rowids) — direct rowids."""
+    t_tab = engine.table(target)
+    cross = signed_delta(engine.store, t_tab.directory, source.directory,
+                         report.stats)
+    if cross.n == 0:
+        z = np.zeros((0,), np.uint64)
+        return z, z.copy()
+    order, agg = ops.diff_aggregate(cross.row_lo, cross.row_hi, cross.sign)
+    s = cross.take(order)
+    starts, lens, nets = agg.run_starts, agg.run_lens, agg.run_sums
+    minus_cnt = np.add.reduceat((s.sign < 0).astype(np.int64), starts)
+    plus_cnt = np.add.reduceat((s.sign > 0).astype(np.int64), starts)
+    mixed = (minus_cnt > 0) & (plus_cnt > 0) & (nets != 0)
+    pure_ins = (minus_cnt == 0) & (nets > 0)
+    report.true_conflicts = int(mixed.sum())
+    report.false_conflicts += int(pure_ins.sum())
+    if report.true_conflicts and mode is ConflictMode.FAIL:
+        report.conflict_key_lo = s.row_lo[starts][mixed]
+        report.conflict_key_hi = s.row_hi[starts][mixed]
+        raise MergeConflictError(report)
+
+    apply_net = np.zeros(nets.shape, np.int64)
+    apply_net[pure_ins] = nets[pure_ins]
+    if mode is ConflictMode.ACCEPT:
+        apply_net[mixed] = nets[mixed]
+
+    # element-wise selection: within each run take the first |net| rows of
+    # the needed sign (ranks via run-relative cumulative counts)
+    run_ids = agg.run_ids
+    is_plus = (s.sign > 0).astype(np.int64)
+    is_minus = (s.sign < 0).astype(np.int64)
+    cp, cm = np.cumsum(is_plus), np.cumsum(is_minus)
+    base_p = cp[starts] - is_plus[starts]
+    base_m = cm[starts] - is_minus[starts]
+    rank_p = cp - base_p[run_ids]   # 1-based among + within run
+    rank_m = cm - base_m[run_ids]
+    net_e = apply_net[run_ids]
+    take_ins = (s.sign > 0) & (net_e > 0) & (rank_p <= net_e)
+    take_del = (s.sign < 0) & (net_e < 0) & (rank_m <= -net_e)
+    return s.rowid[take_del], s.rowid[take_ins]
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+
+def three_way_merge(engine: Engine, target: str, source: Snapshot,
+                    base: Optional[Snapshot] = None,
+                    mode: ConflictMode = ConflictMode.FAIL) -> MergeReport:
+    """SNAPSHOT MERGE TABLE target FROM source [BASED ON base]
+    [WHEN CONFLICT FAIL|SKIP|ACCEPT]."""
+    t_tab = engine.table(target)
+    if not t_tab.schema.compatible_with(source.schema):
+        raise ValueError("SNAPSHOT MERGE: incompatible schemas")
+    if base is None:
+        base = engine.find_common_base(target, source.table)
+    if mode is ConflictMode.CELL and (not t_tab.schema.has_pk
+                                      or base is None):
+        raise ValueError("CELL conflict mode needs a primary key and a "
+                         "common base revision")
+    report = MergeReport(used_base=base is not None)
+    schema = t_tab.schema
+
+    tx = engine.begin()
+    merged_batch = None
+    if schema.has_pk:
+        if base is not None:
+            del_lo, del_hi, ins_rowids, merged_batch = _merge_pk(
+                engine, target, source, base.directory, mode, report)
+            if del_lo.shape[0]:
+                rid = t_tab.locate_keys(del_lo, del_hi)
+                tx.delete_rowids(target, rid[rid != 0])
+                report.deleted = int((rid != 0).sum())
+        else:
+            del_rowids, ins_rowids = _merge_pk_nobase(
+                engine, target, source, mode, report)
+            if del_rowids.shape[0]:
+                tx.delete_rowids(target, del_rowids)
+                report.deleted = int(del_rowids.shape[0])
+    else:
+        if base is not None:
+            sig_lo, sig_hi, need, ins_rowids = _merge_nopk(
+                engine, target, source, base.directory, mode, report)
+            if sig_lo.shape[0]:
+                found = t_tab.locate_rowsig_multi(sig_lo, sig_hi, need)
+                rids = (np.concatenate(found) if found
+                        else np.zeros((0,), np.uint64))
+                if rids.shape[0]:
+                    tx.delete_rowids(target, rids)
+                report.deleted = int(rids.shape[0])
+        else:
+            del_rowids, ins_rowids = _merge_nopk_nobase(
+                engine, target, source, mode, report)
+            if del_rowids.shape[0]:
+                tx.delete_rowids(target, del_rowids)
+                report.deleted = int(del_rowids.shape[0])
+
+    if ins_rowids.shape[0]:
+        payload = gather_payload(engine.store, schema, ins_rowids)
+        tx.insert(target, payload)
+        report.inserted = int(ins_rowids.shape[0])
+    if merged_batch is not None and len(next(iter(merged_batch.values()))):
+        tx.insert(target, merged_batch)
+        report.inserted += int(len(next(iter(merged_batch.values()))))
+
+    if report.inserted or report.deleted:
+        report.commit_ts = tx.commit()
+    # lineage: the merged-in source snapshot becomes the new common base
+    if source.table != target and source.table in engine.tables:
+        engine.set_common_base(target, source.table, source)
+        engine.wal.append("set_base", a=target, b=source.table, snap=source)
+    return report
+
+
+def two_way_merge(engine: Engine, target: str, source: Snapshot,
+                  mode: ConflictMode = ConflictMode.FAIL) -> MergeReport:
+    """Merge without BASED ON: lineage gives the implicit base (§5.3), else
+    the empty-base cross-delta path (shared objects skipped)."""
+    return three_way_merge(engine, target, source, base=None, mode=mode)
+
+
+# --------------------------------------------------------------------------
+# Three-way diff (BEYOND PAPER): the paper notes (§5.5.1) the diff
+# aggregation's signs carry exactly the information needed but chooses not
+# to expose it. We do: per-key classification of how two branches diverged
+# from a common base — the PR-review view for complex histories.
+# --------------------------------------------------------------------------
+
+TW_TARGET_ONLY, TW_SOURCE_ONLY, TW_BOTH_SAME, TW_BOTH_DIFFER = 0, 1, 2, 3
+
+
+@dataclass
+class ThreeWayDiff:
+    key_lo: np.ndarray      # (k,) uint64 — keys changed by either branch
+    key_hi: np.ndarray
+    status: np.ndarray      # (k,) int8 — TW_* classification
+    t_op: np.ndarray        # (k,) int8 — OP_DEL/INS/UPD or -1 (untouched)
+    s_op: np.ndarray
+    t_rowid: np.ndarray     # payload rows for review (0 = none)
+    s_rowid: np.ndarray
+
+    @property
+    def k(self) -> int:
+        return int(self.key_lo.shape[0])
+
+
+def three_way_diff(engine: Engine, base: Snapshot, target: Snapshot,
+                   source: Snapshot) -> ThreeWayDiff:
+    """Classify every key changed by either branch vs. the base."""
+    if not (base.schema.compatible_with(target.schema)
+            and base.schema.compatible_with(source.schema)):
+        raise ValueError("three_way_diff: incompatible schemas")
+    d_t = signed_delta(engine.store, base.directory, target.directory)
+    d_s = signed_delta(engine.store, base.directory, source.directory)
+    ch_t, _ = collapse_pk(d_t)
+    ch_s, _ = collapse_pk(d_s)
+    t_idx, s_idx = _align_keys(ch_t, ch_s)
+    k = t_idx.shape[0]
+    key_lo = np.where(t_idx >= 0, ch_t.key_lo[np.maximum(t_idx, 0)],
+                      ch_s.key_lo[np.maximum(s_idx, 0)])
+    key_hi = np.where(t_idx >= 0, ch_t.key_hi[np.maximum(t_idx, 0)],
+                      ch_s.key_hi[np.maximum(s_idx, 0)])
+    t_op = np.where(t_idx >= 0, ch_t.op[np.maximum(t_idx, 0)], -1)
+    s_op = np.where(s_idx >= 0, ch_s.op[np.maximum(s_idx, 0)], -1)
+    t_rowid = np.where(t_idx >= 0, ch_t.plus_rowid[np.maximum(t_idx, 0)],
+                       0).astype(np.uint64)
+    s_rowid = np.where(s_idx >= 0, ch_s.plus_rowid[np.maximum(s_idx, 0)],
+                       0).astype(np.uint64)
+    both = (t_idx >= 0) & (s_idx >= 0)
+    ti, si = np.maximum(t_idx, 0), np.maximum(s_idx, 0)
+    same = both & (
+        ((ch_t.op[ti] == OP_DEL) & (ch_s.op[si] == OP_DEL))
+        | ((ch_t.op[ti] != OP_DEL) & (ch_s.op[si] != OP_DEL)
+           & (ch_t.plus_row_lo[ti] == ch_s.plus_row_lo[si])
+           & (ch_t.plus_row_hi[ti] == ch_s.plus_row_hi[si])))
+    status = np.full((k,), TW_TARGET_ONLY, np.int8)
+    status[(t_idx < 0)] = TW_SOURCE_ONLY
+    status[same] = TW_BOTH_SAME
+    status[both & ~same] = TW_BOTH_DIFFER
+    return ThreeWayDiff(key_lo, key_hi, status.astype(np.int8),
+                        t_op.astype(np.int8), s_op.astype(np.int8),
+                        t_rowid, s_rowid)

@@ -1,0 +1,136 @@
+"""Immutable storage objects (paper §4).
+
+Data of a table lives in immutable columnar *objects* (row groups). Deletes
+are *tombstone* objects holding (key signature, target physical rowid).
+Objects form an LSM tree ordered by key signature; each object's rows are
+sorted at seal time and carry a zone map for probe pruning.
+
+Physical rowid = (oid << 32) | row_offset, packed in uint64 — mirroring the
+paper's (object name, position) rowids.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .schema import Schema, batch_nbytes, take_batch
+
+OBJECT_CAPACITY = 1 << 18  # max rows per sealed object (256Ki)
+
+_OFF_MASK = np.uint64(0xFFFFFFFF)
+
+
+def pack_rowid(oid: int, offsets: np.ndarray) -> np.ndarray:
+    return (np.uint64(oid) << np.uint64(32)) | offsets.astype(np.uint64)
+
+
+def rowid_oid(rowids: np.ndarray) -> np.ndarray:
+    return (rowids >> np.uint64(32)).astype(np.int64)
+
+
+def rowid_off(rowids: np.ndarray) -> np.ndarray:
+    return (rowids & _OFF_MASK).astype(np.int64)
+
+
+@dataclass
+class DataObject:
+    """A sealed, immutable row group. Rows sorted by (key_lo, key_hi)."""
+    oid: int
+    nrows: int
+    cols: Dict[str, np.ndarray]          # column data (LOB: object array)
+    commit_ts: np.ndarray                # (n,) uint64
+    row_lo: np.ndarray                   # (n,) uint64 full-row signature
+    row_hi: np.ndarray
+    key_lo: np.ndarray                   # (n,) uint64 key signature (sorted)
+    key_hi: np.ndarray
+    lob_sigs: Dict[str, np.ndarray] = field(default_factory=dict)
+    nbytes: int = 0                      # logical payload bytes
+
+    @property
+    def zone(self) -> Tuple[np.uint64, np.uint64]:
+        """(min, max) of key_lo — zone map for probe pruning."""
+        if self.nrows == 0:
+            return np.uint64(0), np.uint64(0)
+        return self.key_lo[0], self.key_lo[-1]
+
+    def rowids(self) -> np.ndarray:
+        return pack_rowid(self.oid, np.arange(self.nrows, dtype=np.uint64))
+
+
+@dataclass
+class TombstoneObject:
+    """Sealed batch of deletions: each row kills one physical row."""
+    oid: int
+    nrows: int
+    target: np.ndarray                   # (n,) uint64 rowid being deleted
+    key_lo: np.ndarray                   # key signature of the deleted row
+    key_hi: np.ndarray
+    commit_ts: np.ndarray                # (n,) uint64
+    # oids of the data objects this tombstone batch targets (for the
+    # compaction invariant: tombstones die with their target objects)
+    target_oids: Tuple[int, ...] = ()
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.target.nbytes + self.key_lo.nbytes
+                   + self.key_hi.nbytes + self.commit_ts.nbytes)
+
+
+def seal_data_object(oid: int, schema: Schema, batch: Dict[str, np.ndarray],
+                     commit_ts: np.ndarray, row_lo, row_hi, key_lo, key_hi,
+                     lob_sigs: Dict[str, np.ndarray]) -> DataObject:
+    """Sort rows by key signature and freeze them as an immutable object."""
+    order = np.lexsort((key_hi, key_lo))
+    batch = take_batch(batch, order)
+    return DataObject(
+        oid=oid,
+        nrows=int(order.shape[0]),
+        cols=batch,
+        commit_ts=commit_ts[order],
+        row_lo=row_lo[order], row_hi=row_hi[order],
+        key_lo=key_lo[order], key_hi=key_hi[order],
+        lob_sigs={k: v[order] for k, v in lob_sigs.items()},
+        nbytes=batch_nbytes(schema, batch),
+    )
+
+
+class ObjectStore:
+    """The immutable object store (stand-in for S3 in the paper).
+
+    Objects are write-once; GC (mark-sweep from directories + named
+    snapshots) is the only deletion path. Immutability makes client caching
+    trivial (paper §4) — here the "cache" is the process heap itself.
+    """
+
+    def __init__(self):
+        self._objects: Dict[int, object] = {}
+        self._next_oid = 1
+        self.bytes_written = 0  # cumulative physical write volume
+
+    def new_oid(self) -> int:
+        oid = self._next_oid
+        self._next_oid += 1
+        return oid
+
+    def put(self, obj) -> int:
+        assert obj.oid not in self._objects, "objects are immutable/write-once"
+        self._objects[obj.oid] = obj
+        self.bytes_written += int(obj.nbytes)
+        return obj.oid
+
+    def get(self, oid: int):
+        return self._objects[oid]
+
+    def has(self, oid: int) -> bool:
+        return oid in self._objects
+
+    def delete(self, oid: int) -> None:
+        del self._objects[oid]
+
+    def oids(self):
+        return self._objects.keys()
+
+    def live_bytes(self) -> int:
+        return sum(int(o.nbytes) for o in self._objects.values())

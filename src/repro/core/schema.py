@@ -1,0 +1,143 @@
+"""Table schemas and row batches.
+
+A row batch is a ``dict[str, np.ndarray]`` keyed by column name. Numeric
+columns are numpy arrays of the column dtype; LOB columns (TEXT/JSON/BLOB of
+the paper §5.5.5) are object arrays of ``bytes``.
+
+Diff/merge require *schema compatibility* (paper §3): same column names,
+types and order, and the same primary-key definition.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class CType(enum.Enum):
+    I64 = "i64"
+    I32 = "i32"
+    F64 = "f64"
+    F32 = "f32"
+    BOOL = "bool"
+    LOB = "lob"  # TEXT / JSON / BLOB — stored in-table, diffed by signature
+
+
+_NP_DTYPES = {
+    CType.I64: np.int64,
+    CType.I32: np.int32,
+    CType.F64: np.float64,
+    CType.F32: np.float32,
+    CType.BOOL: np.bool_,
+}
+
+_PK_TYPES = (CType.I64, CType.I32)
+
+
+@dataclass(frozen=True)
+class Column:
+    name: str
+    ctype: CType
+
+
+@dataclass(frozen=True)
+class Schema:
+    columns: Tuple[Column, ...]
+    primary_key: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        names = [c.name for c in self.columns]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate column names: {names}")
+        if self.primary_key:
+            by_name = {c.name: c for c in self.columns}
+            for k in self.primary_key:
+                if k not in by_name:
+                    raise ValueError(f"primary key column {k!r} not in schema")
+                if by_name[k].ctype not in _PK_TYPES:
+                    raise ValueError(
+                        f"primary key column {k!r} must be integer-typed")
+
+    # -- helpers ---------------------------------------------------------
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+    @property
+    def has_pk(self) -> bool:
+        return bool(self.primary_key)
+
+    def column(self, name: str) -> Column:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    def np_dtype(self, name: str):
+        ct = self.column(name).ctype
+        return np.object_ if ct is CType.LOB else _NP_DTYPES[ct]
+
+    def compatible_with(self, other: "Schema") -> bool:
+        """Diff/merge compatibility (paper §3)."""
+        return (self.names == other.names
+                and tuple(c.ctype for c in self.columns)
+                == tuple(c.ctype for c in other.columns)
+                and self.primary_key == other.primary_key)
+
+    # -- batch utilities --------------------------------------------------
+    def validate_batch(self, batch: Dict[str, np.ndarray]) -> int:
+        if set(batch.keys()) != set(self.names):
+            raise ValueError(
+                f"batch columns {sorted(batch)} != schema {sorted(self.names)}")
+        n = -1
+        for c in self.columns:
+            arr = np.asarray(batch[c.name])
+            if n < 0:
+                n = arr.shape[0]
+            elif arr.shape[0] != n:
+                raise ValueError("ragged batch")
+        return n
+
+    def normalize_batch(self, batch: Dict[str, Sequence]) -> Dict[str, np.ndarray]:
+        out = {}
+        for c in self.columns:
+            if c.ctype is CType.LOB:
+                vals = batch[c.name]
+                arr = np.empty((len(vals),), dtype=object)
+                for i, v in enumerate(vals):
+                    if isinstance(v, str):
+                        v = v.encode()
+                    if not isinstance(v, (bytes, bytearray)):
+                        raise TypeError(f"LOB column {c.name}: want bytes/str")
+                    arr[i] = bytes(v)
+                out[c.name] = arr
+            else:
+                out[c.name] = np.asarray(batch[c.name], dtype=_NP_DTYPES[c.ctype])
+        self.validate_batch(out)
+        return out
+
+
+def batch_nbytes(schema: Schema, batch: Dict[str, np.ndarray]) -> int:
+    """Logical payload bytes of a batch (for the paper's Table-1 space cost)."""
+    total = 0
+    for c in schema.columns:
+        arr = batch[c.name]
+        if c.ctype is CType.LOB:
+            total += int(sum(len(v) for v in arr))
+        else:
+            total += int(arr.nbytes)
+    return total
+
+
+def concat_batches(schema: Schema, batches: Sequence[Dict[str, np.ndarray]]):
+    if not batches:
+        return {c.name: np.zeros((0,), dtype=schema.np_dtype(c.name))
+                for c in schema.columns}
+    return {c.name: np.concatenate([b[c.name] for b in batches])
+            for c in schema.columns}
+
+
+def take_batch(batch: Dict[str, np.ndarray], idx: np.ndarray):
+    return {k: v[idx] for k, v in batch.items()}

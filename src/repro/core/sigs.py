@@ -1,0 +1,106 @@
+"""Canonical row/key signatures (the paper's §5.5.5 idea, universalized).
+
+Every row gets two 128-bit signatures computed by the ``rowhash`` kernel:
+
+  * ``row signature``  — over ALL columns: the row's value identity. Two rows
+    are "the same data" iff their row signatures match (multiset semantics of
+    SNAPSHOT DIFF, Listing 2).
+  * ``key signature``  — over the PRIMARY KEY columns: the row's logical
+    identity for the paper's §3 conflict scenarios. For NoPK tables the key
+    signature IS the row signature (identity = full value, §3).
+
+Each column contributes two uint32 lanes, the canonical 64-bit encoding of
+its value. LOB columns contribute a blake2b-derived 64-bit content signature
+computed once at ingest (host side — this is I/O-time work in the real
+system), so diff/merge never hold LOB payloads in the aggregation working
+set: exactly the paper's memory-saving trick.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from ..kernels import ops
+from .schema import CType, Schema
+
+_F64_NAN = np.uint64(0x7FF8000000000000)
+_F32_NAN = np.uint32(0x7FC00000)
+
+
+def lob_sig64(arr: np.ndarray) -> np.ndarray:
+    """Content signature (uint64) per LOB value. Ingest-time, host-side."""
+    out = np.empty((arr.shape[0],), np.uint64)
+    for i, v in enumerate(arr):
+        d = hashlib.blake2b(v, digest_size=8).digest()
+        out[i] = np.uint64(int.from_bytes(d, "little"))
+    return out
+
+
+def _canon64(col: np.ndarray, ctype: CType,
+             lob_sig: np.ndarray | None = None) -> np.ndarray:
+    """Canonical uint64 encoding of a column's values."""
+    if ctype is CType.LOB:
+        assert lob_sig is not None
+        return lob_sig.astype(np.uint64)
+    if ctype is CType.I64:
+        return col.view(np.uint64) if col.dtype == np.int64 else col.astype(np.int64).view(np.uint64)
+    if ctype is CType.I32:
+        return col.astype(np.int64).view(np.uint64)
+    if ctype is CType.BOOL:
+        return col.astype(np.uint64)
+    if ctype is CType.F64:
+        w = np.ascontiguousarray(col, np.float64).view(np.uint64).copy()
+        w[np.isnan(col)] = _F64_NAN          # canonical NaN
+        w[col == 0.0] = np.uint64(0)         # -0.0 -> +0.0
+        return w
+    if ctype is CType.F32:
+        w32 = np.ascontiguousarray(col, np.float32).view(np.uint32).copy()
+        w32[np.isnan(col)] = _F32_NAN
+        w32[col == 0.0] = np.uint32(0)
+        return w32.astype(np.uint64)
+    raise TypeError(ctype)
+
+
+def column_lanes(schema: Schema, batch: Dict[str, np.ndarray],
+                 names: Sequence[str],
+                 lob_sigs: Dict[str, np.ndarray] | None = None) -> np.ndarray:
+    """(R, 2*len(names)) uint32 lane matrix for the given columns, in order."""
+    n = batch[names[0]].shape[0] if names else 0
+    lanes = np.empty((n, 2 * len(names)), np.uint32)
+    for j, name in enumerate(names):
+        ct = schema.column(name).ctype
+        sig = (lob_sigs or {}).get(name)
+        w = _canon64(batch[name], ct, sig)
+        lanes[:, 2 * j] = (w & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        lanes[:, 2 * j + 1] = (w >> np.uint64(32)).astype(np.uint32)
+    return lanes
+
+
+def compute_sigs(schema: Schema, batch: Dict[str, np.ndarray]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+                            Dict[str, np.ndarray]]:
+    """Return (row_lo, row_hi, key_lo, key_hi, lob_sigs) for a batch.
+
+    row/key signatures are uint64 arrays; computed via the rowhash kernel.
+    """
+    lob_sigs = {c.name: lob_sig64(batch[c.name])
+                for c in schema.columns if c.ctype is CType.LOB}
+    row_lanes = column_lanes(schema, batch, schema.names, lob_sigs)
+    row_lo, row_hi = ops.signatures_from_lanes(row_lanes)
+    if schema.has_pk:
+        key_lanes = column_lanes(schema, batch, schema.primary_key, lob_sigs)
+        key_lo, key_hi = ops.signatures_from_lanes(key_lanes)
+    else:
+        # NoPK: identity is the full value (paper §3)
+        key_lo, key_hi = row_lo, row_hi
+    return row_lo, row_hi, key_lo, key_hi, lob_sigs
+
+
+def key_sigs_for_lookup(schema: Schema, key_batch: Dict[str, np.ndarray]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Signatures for probe keys given just the PK columns."""
+    assert schema.has_pk
+    lanes = column_lanes(schema, key_batch, schema.primary_key, {})
+    return ops.signatures_from_lanes(lanes)

@@ -1,0 +1,154 @@
+"""Table: schema + current directory + PITR history + key probes."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..kernels import ops
+from .directory import Directory
+from .objects import DataObject, pack_rowid
+from .schema import Schema, concat_batches, take_batch
+from .visibility import VisibilityIndex
+
+
+class Table:
+    def __init__(self, name: str, schema: Schema, store, ts: int):
+        self.name = name
+        self.schema = schema
+        self._store = store
+        self.directory = Directory.empty(ts)
+        # PITR history: every directory version, trimmed by Engine GC.
+        self.history: List[Tuple[int, Directory]] = [(ts, self.directory)]
+
+    # ------------------------------------------------------------- state
+    def set_directory(self, d: Directory) -> None:
+        self.directory = d
+        self.history.append((d.ts, d))
+
+    def directory_at(self, ts: int) -> Directory:
+        """PITR: latest directory version with apply-ts <= ts, horizon ts."""
+        best = None
+        for t, d in self.history:
+            if t <= ts:
+                best = d
+        if best is None:
+            raise KeyError(f"no PITR history for {self.name} at ts={ts}")
+        return Directory(best.data_oids, best.tomb_oids, ts)
+
+    # -------------------------------------------------------------- scan
+    def scan(self, directory: Optional[Directory] = None,
+             with_sigs: bool = False):
+        """Materialize all visible rows: (batch, rowids[, row_lo, row_hi])."""
+        d = directory or self.directory
+        vi = VisibilityIndex(self._store, d)
+        batches, rowids, rlo, rhi = [], [], [], []
+        for oid in d.data_oids:
+            obj: DataObject = self._store.get(oid)
+            m = vi.visible_mask(obj)
+            if not m.any():
+                continue
+            idx = np.flatnonzero(m)
+            batches.append(take_batch(obj.cols, idx))
+            rowids.append(pack_rowid(oid, idx.astype(np.uint64)))
+            if with_sigs:
+                rlo.append(obj.row_lo[idx])
+                rhi.append(obj.row_hi[idx])
+        batch = concat_batches(self.schema, batches)
+        rid = (np.concatenate(rowids) if rowids else np.zeros((0,), np.uint64))
+        if with_sigs:
+            lo = np.concatenate(rlo) if rlo else np.zeros((0,), np.uint64)
+            hi = np.concatenate(rhi) if rhi else np.zeros((0,), np.uint64)
+            return batch, rid, lo, hi
+        return batch, rid
+
+    def count(self, directory: Optional[Directory] = None) -> int:
+        d = directory or self.directory
+        vi = VisibilityIndex(self._store, d)
+        return int(sum(int(vi.visible_mask(self._store.get(o)).sum())
+                       for o in d.data_oids))
+
+    # ------------------------------------------------------------ probes
+    def locate_keys(self, key_lo: np.ndarray, key_hi: np.ndarray,
+                    directory: Optional[Directory] = None) -> np.ndarray:
+        """PK probe: rowid of the visible row per key signature, 0 if absent.
+
+        LSM probe with zone-map pruning; per-object lower_bound via the
+        searchsorted kernel. PK uniqueness -> at most one visible match.
+        """
+        d = directory or self.directory
+        vi = VisibilityIndex(self._store, d)
+        q = key_lo.shape[0]
+        out = np.zeros((q,), np.uint64)
+        pending = np.arange(q)
+        for oid in reversed(d.data_oids):  # newest objects first
+            if pending.shape[0] == 0:
+                break
+            obj: DataObject = self._store.get(oid)
+            if obj.nrows == 0:
+                continue
+            zmin, zmax = obj.zone
+            sel = (key_lo[pending] >= zmin) & (key_lo[pending] <= zmax)
+            cand = pending[sel]
+            if cand.shape[0] == 0:
+                continue
+            found = self._probe_object(obj, vi, key_lo[cand], key_hi[cand])
+            hit = found != 0
+            out[cand[hit]] = found[hit]
+            pending = np.concatenate([pending[~sel], cand[~hit]])
+        return out
+
+    def _probe_object(self, obj: DataObject, vi: VisibilityIndex,
+                      q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
+        """rowids of visible matches of (q_lo, q_hi) in obj (0 = miss)."""
+        n = obj.nrows
+        vis = vi.visible_mask(obj)
+        lb = ops.lower_bound(obj.key_lo, q_lo)
+        out = np.zeros(q_lo.shape, np.uint64)
+        # fast path: exact hit at the lower bound
+        idx = np.minimum(lb, n - 1)
+        exact = ((lb < n) & (obj.key_lo[idx] == q_lo)
+                 & (obj.key_hi[idx] == q_hi) & vis[idx])
+        out[exact] = pack_rowid(obj.oid, idx[exact].astype(np.uint64))
+        # slow path: lo64-collision runs or invisible first row — walk the run
+        maybe = np.flatnonzero((lb < n) & ~exact & (obj.key_lo[idx] == q_lo))
+        for qi in maybe:
+            i = int(lb[qi])
+            while i < n and obj.key_lo[i] == q_lo[qi]:
+                if obj.key_hi[i] == q_hi[qi] and vis[i]:
+                    out[qi] = pack_rowid(obj.oid, np.asarray([i], np.uint64))[0]
+                    break
+                i += 1
+        return out
+
+    def locate_rowsig_multi(self, sig_lo: np.ndarray, sig_hi: np.ndarray,
+                            need: np.ndarray,
+                            directory: Optional[Directory] = None
+                            ) -> List[np.ndarray]:
+        """NoPK probe: up to ``need[i]`` visible rowids per row-signature.
+
+        Used by merge to delete k rows among duplicates (paper §3 NoPK
+        cardinality resolution).
+        """
+        d = directory or self.directory
+        vi = VisibilityIndex(self._store, d)
+        found: List[List[int]] = [[] for _ in range(sig_lo.shape[0])]
+        remaining = need.astype(np.int64).copy()
+        for oid in reversed(d.data_oids):
+            if not (remaining > 0).any():
+                break
+            obj: DataObject = self._store.get(oid)
+            if obj.nrows == 0:
+                continue
+            vis = vi.visible_mask(obj)
+            lb = ops.lower_bound(obj.key_lo, sig_lo)
+            for qi in np.flatnonzero(remaining > 0):
+                i = int(lb[qi])
+                while (i < obj.nrows and obj.key_lo[i] == sig_lo[qi]
+                       and remaining[qi] > 0):
+                    if obj.key_hi[i] == sig_hi[qi] and vis[i]:
+                        found[qi].append(int(pack_rowid(
+                            obj.oid, np.asarray([i], np.uint64))[0]))
+                        remaining[qi] -= 1
+                    i += 1
+        return [np.asarray(f, np.uint64) for f in found]

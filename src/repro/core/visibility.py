@@ -1,0 +1,67 @@
+"""MVCC visibility: which rows of which objects a directory can see.
+
+A row r of data object o is visible in directory d iff
+
+    commit_ts[r] <= d.ts   AND   no tombstone t in d with
+                                 t.target == rowid(r) and t.commit_ts <= d.ts
+
+Tombstone membership tests are range queries on the per-directory sorted
+target array (objects own contiguous rowid ranges), served by the
+``searchsorted`` kernel via ``ops.lower_bound``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from ..kernels import ops
+from .directory import Directory
+from .objects import DataObject, ObjectStore, pack_rowid
+
+
+class VisibilityIndex:
+    """Sorted tombstone-target index for one directory (built once per op)."""
+
+    def __init__(self, store: ObjectStore, d: Directory):
+        self.store = store
+        self.d = d
+        targets = []
+        for oid in d.tomb_oids:
+            t = store.get(oid)
+            m = t.commit_ts <= np.uint64(d.ts)
+            targets.append(t.target[m])
+        self.targets = (np.sort(np.concatenate(targets))
+                        if targets else np.zeros((0,), np.uint64))
+
+    def killed_mask(self, obj: DataObject) -> np.ndarray:
+        """(nrows,) bool — True where a tombstone kills the row."""
+        n = obj.nrows
+        if self.targets.shape[0] == 0 or n == 0:
+            return np.zeros((n,), bool)
+        base = pack_rowid(obj.oid, np.zeros((1,), np.uint64))[0]
+        lo = int(ops.lower_bound(self.targets, np.asarray([base]))[0])
+        hi = int(ops.lower_bound(self.targets,
+                                 np.asarray([base + np.uint64(n)]))[0])
+        mask = np.zeros((n,), bool)
+        if hi > lo:
+            offs = (self.targets[lo:hi] - base).astype(np.int64)
+            mask[offs] = True
+        return mask
+
+    def killed_rowids(self, rowids: np.ndarray) -> np.ndarray:
+        """(k,) bool for arbitrary rowids."""
+        if self.targets.shape[0] == 0 or rowids.shape[0] == 0:
+            return np.zeros(rowids.shape, bool)
+        idx = ops.lower_bound(self.targets, rowids)
+        idx_c = np.minimum(idx, self.targets.shape[0] - 1)
+        return (self.targets[idx_c] == rowids) & (idx < self.targets.shape[0])
+
+    def visible_mask(self, obj: DataObject) -> np.ndarray:
+        return (obj.commit_ts <= np.uint64(self.d.ts)) & ~self.killed_mask(obj)
+
+
+def visible_rowcount(store: ObjectStore, d: Directory) -> int:
+    vi = VisibilityIndex(store, d)
+    return int(sum(int(vi.visible_mask(store.get(oid)).sum())
+                   for oid in d.data_oids))

@@ -1,0 +1,44 @@
+"""Write-ahead log (the LogService/TN roles of paper §4, single-node form).
+
+Every logical state change appends a record; ``Engine.replay`` re-executes
+the log against a fresh engine and must reproduce identical logical table
+contents (tests assert this). Object ids are allocated deterministically, so
+replay also reproduces physical layout.
+"""
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class WalRecord:
+    kind: str                 # create_table | commit | snapshot | drop_snapshot
+    #                         | clone | restore | compact | set_base | drop_table
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+
+class WAL:
+    def __init__(self):
+        self.records: List[WalRecord] = []
+
+    def append(self, kind: str, **payload) -> None:
+        self.records.append(WalRecord(kind, payload))
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def __len__(self):
+        return len(self.records)
+
+    # Durability stand-in: the paper's Raft LogService persists records; we
+    # support byte-serialization round-trips for crash-recovery tests.
+    def serialize(self) -> bytes:
+        return pickle.dumps(self.records, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def deserialize(blob: bytes) -> "WAL":
+        w = WAL()
+        w.records = pickle.loads(blob)
+        return w

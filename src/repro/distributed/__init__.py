@@ -1,0 +1,3 @@
+"""Distribution: sharding rules, collectives/compression, elastic scaling."""
+from . import collectives, elastic, sharding  # noqa: F401
+from .sharding import ShardCfg, batch_spec, tree_cache_specs, tree_param_specs  # noqa

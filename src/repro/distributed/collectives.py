@@ -1,0 +1,83 @@
+"""Distributed-optimization helpers: gradient compression with error
+feedback, and microbatch gradient accumulation.
+
+With pjit/GSPMD the data-parallel gradient reduction is implicit (XLA emits
+reduce-scatter/all-reduce from the sharding specs). Compression therefore
+happens *around* the reduction: grads are cast to bf16 (or int8 with
+per-tensor scale) before the psum-inducing consumer, and the quantization
+residual is carried in the training state and re-added next step (error
+feedback keeps convergence unbiased in expectation).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def compress_bf16(grads):
+    """Cast grads to bf16 — halves all-reduce/reduce-scatter bytes."""
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def compress_int8(grads):
+    """Per-tensor symmetric int8 quantization. Returns (q, scales)."""
+    def q(g):
+        s = jnp.maximum(jnp.max(jnp.abs(g.astype(F32))), 1e-12) / 127.0
+        return (g.astype(F32) / s).round().astype(jnp.int8), s
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    qs = [q(g) for g in flat]
+    return (jax.tree_util.tree_unflatten(treedef, [x[0] for x in qs]),
+            jax.tree_util.tree_unflatten(treedef, [x[1] for x in qs]))
+
+
+def decompress_int8(q, scales):
+    return jax.tree.map(lambda g, s: g.astype(F32) * s, q, scales)
+
+
+def error_feedback_apply(grads, residual):
+    """g' = g + residual; new_residual = g' − compress(g')."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, F32), grads)
+    corrected = jax.tree.map(lambda g, r: g.astype(F32) + r, grads, residual)
+    compressed = compress_bf16(corrected)
+    new_residual = jax.tree.map(
+        lambda c, comp: c - comp.astype(F32), corrected, compressed)
+    return compressed, new_residual
+
+
+def accumulate_microbatches(loss_fn, params, batches, *, unroll: int = 1,
+                            grad_specs=None):
+    """Gradient accumulation over a leading microbatch dim via lax.scan.
+
+    batches: pytree with leading dim n_micro. Returns (mean_loss, grads).
+
+    ``grad_specs`` (a PartitionSpec pytree matching params) constrains the
+    accumulated-gradient carry to the parameters' FSDP sharding: each
+    microbatch's contribution is then reduce-scattered into the sharded
+    carry instead of all-reduced and re-sliced (≈2x collective bytes on the
+    grad path; see EXPERIMENTS §Perf cell A).
+    """
+    n_micro = jax.tree.leaves(batches)[0].shape[0]
+
+    def constrain(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_specs)
+
+    def one(carry, mb):
+        loss_sum, gsum = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        gsum = constrain(jax.tree.map(
+            lambda a, b: a + b.astype(F32), gsum, g))
+        return (loss_sum + loss, gsum), None
+
+    g0 = constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params))
+    (loss_sum, gsum), _ = jax.lax.scan(
+        one, (jnp.zeros((), F32), g0), batches, unroll=unroll)
+    inv = 1.0 / n_micro
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)

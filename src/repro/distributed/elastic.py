@@ -1,0 +1,87 @@
+"""Elastic scaling + failure handling.
+
+On a real cluster the control plane (launcher) watches host heartbeats;
+when the healthy-device set changes it (1) picks the largest valid mesh,
+(2) re-lowers the step function for that mesh, (3) restores the last
+versioned checkpoint (instant — metadata restore) and resumes from the
+owed step. All state transfer goes through the host: checkpoints are
+device-layout-agnostic numpy shards, so any old→new mesh pair works.
+
+This module provides the mesh-selection and state-remap logic; the CPU
+container exercises it in tests by resharding between 1-, 2- and 4-way
+device counts (and abstractly between the 256/512-chip production meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def best_mesh_shape(n_devices: int, *, model_cap: int = 16,
+                    want_pods: int = 1) -> Tuple[Tuple[int, ...],
+                                                 Tuple[str, ...]]:
+    """Largest (pod, data, model) layout for a (possibly degraded) device
+    count: keep 'model' as large as divisible (TP efficiency), put the rest
+    in 'data'. Drops stragglers to the largest power-of-two fleet."""
+    usable = 1 << (int(n_devices).bit_length() - 1)
+    model = 1
+    for m in (model_cap, 8, 4, 2, 1):
+        if usable % m == 0 and usable >= m:
+            model = m
+            break
+    rest = usable // model
+    if want_pods > 1 and rest % want_pods == 0 and rest > want_pods:
+        return (want_pods, rest // want_pods, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_mesh_for(n_devices: int, **kw) -> Mesh:
+    shape, axes = best_mesh_shape(n_devices, **kw)
+    devs = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def remap_state(state, specs, new_mesh: Mesh):
+    """Re-shard a pytree onto a new mesh (host-mediated: fully general
+    old-layout → new-layout transfer; on a fleet this is the
+    restore-from-checkpoint path)."""
+    def put(x, spec):
+        arr = np.asarray(x)  # gather to host
+        # drop axes the new mesh doesn't have
+        clean = []
+        for ax in (spec if spec is not None else ()):
+            if ax is None:
+                clean.append(None)
+            elif isinstance(ax, (tuple, list)):
+                keep = tuple(a for a in ax if a in new_mesh.axis_names)
+                clean.append(keep if keep else None)
+            else:
+                clean.append(ax if ax in new_mesh.axis_names else None)
+        # drop shardings that no longer divide
+        final = []
+        for dim, ax in zip(arr.shape, clean):
+            n = 1
+            for a in ((ax,) if isinstance(ax, str) else (ax or ())):
+                if a:
+                    n *= new_mesh.shape[a]
+            final.append(ax if n > 1 and dim % n == 0 else None)
+        return jax.device_put(arr, NamedSharding(new_mesh, P(*final)))
+    return jax.tree.map(put, state, specs)
+
+
+@dataclasses.dataclass
+class FleetState:
+    """Launcher-side view of the fleet (heartbeat bookkeeping)."""
+    n_devices: int
+    healthy: Optional[Sequence[int]] = None
+    generation: int = 0
+
+    def fail(self, k: int = 1) -> "FleetState":
+        return FleetState(self.n_devices - k, generation=self.generation + 1)
+
+    def join(self, k: int = 1) -> "FleetState":
+        return FleetState(self.n_devices + k, generation=self.generation + 1)

@@ -1,0 +1,245 @@
+"""Sharding rules: map every parameter / activation / cache tensor to a
+PartitionSpec on the production mesh (DESIGN.md §4).
+
+Axes: ``pod`` (inter-pod DP), ``data`` (DP + FSDP/ZeRO-3 + SP), ``model``
+(TP + EP). Rules are name-pattern based — the same style MaxText/Megatron
+use — so configs can override per architecture/shape.
+
+FSDP: stacked layer weights get their largest non-TP dim sharded over
+``data``; XLA all-gathers at use inside the layer scan (gather-at-use) and
+reduce-scatters the gradients — ZeRO-3 semantics from pjit alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCfg:
+    """Knobs for the sharding strategy (the §Perf hillclimb surface)."""
+    fsdp: bool = True            # shard params/opt-state over 'data'
+    tp: bool = True              # shard heads/ffn/experts/vocab over 'model'
+    seq_shard_cache: bool = False  # SP: shard decode KV cache seq over 'data'
+    cache_seq_model: bool = False  # shard cache seq over 'model' when the
+    #                                kv-head count doesn't divide the TP axis
+    #                                (GQA decode: distributed flash-decoding)
+    seq_parallel: bool = False   # Megatron-SP: residual activations seq-
+    #                              sharded over 'model' between TP blocks
+    #                              (norms run sharded; AR -> RS+AG pairs)
+    grad_compress_bf16: bool = False
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(_dp_axes(mesh))
+
+
+def _maybe(axis: Optional[str], on: bool):
+    return axis if on else None
+
+
+def param_spec(cfg: ArchConfig, sc: ShardCfg, path: str,
+               shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter, identified by its pytree path."""
+    model = "model" if sc.tp else None
+    fsdp = "data" if (sc.fsdp and "data" in mesh.axis_names) else None
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+
+    def div(dim, ax):
+        """axis name if the dim divides evenly, else None."""
+        if ax is None:
+            return None
+        n = mesh.shape.get(ax, 1)
+        return ax if dim % n == 0 and dim >= n else None
+
+    name = path.split("/")[-1]
+    # ---- embeddings / head
+    if name == "embed":
+        return P(div(shape[0], model), div(shape[1], fsdp))
+    if name == "lm_head":
+        return P(div(shape[0], fsdp), div(shape[1], model))
+    if name in ("pos", "enc_pos"):
+        return P(None, div(shape[1], fsdp))
+    # ---- stacked per-period weights: leading dim = n_periods (never shard)
+    if name in ("wq", "xq"):            # (P, d, H*hd)
+        return P(None, div(shape[1], fsdp), div(shape[2], model))
+    if name in ("wk", "wv", "xk", "xv"):  # (P, d, KV*hd) — KV may be tiny
+        kvdim = shape[2]
+        return P(None, div(shape[1], fsdp), div(kvdim, model))
+    if name in ("wo", "xo"):            # (P, H*hd, d)
+        return P(None, div(shape[1], model), div(shape[2], fsdp))
+    if name in ("w1", "w3"):            # (P, d, ff) or encoder (L, d, ff)
+        return P(None, div(shape[1], fsdp), div(shape[2], model))
+    if name == "w2":                    # (P, ff, d)
+        return P(None, div(shape[1], model), div(shape[2], fsdp))
+    if name in ("moe_w1", "moe_w3"):    # (P, E, d, ff)
+        if div(shape[1], model):        # EP: experts across the model axis
+            return P(None, model, div(shape[2], fsdp), None)
+        # expert count not divisible (mixtral 8e on 16-way TP): fall back to
+        # Megatron-style TP over the ffn dim, experts replicated
+        return P(None, None, div(shape[2], fsdp), div(shape[3], model))
+    if name == "moe_w2":                # (P, E, ff, d)
+        if div(shape[1], model):
+            return P(None, model, None, div(shape[3], fsdp))
+        return P(None, None, div(shape[2], model), div(shape[3], fsdp))
+    if name == "router":                # (P, d, E)
+        return P(None, div(shape[1], fsdp), None)
+    # ---- ssm / rwkv
+    if name in ("w_in", "w_bcdt"):      # (P, d, ...)
+        return P(None, div(shape[1], fsdp), div(shape[2], model))
+    if name == "w_out":                 # (P, di, d)
+        return P(None, div(shape[1], model), div(shape[2], fsdp))
+    if name in ("w_r", "w_k", "w_v", "w_g", "w_dec", "w_o"):  # (P, d, d)
+        return P(None, div(shape[1], fsdp), div(shape[2], model))
+    if name == "conv":                  # (P, d_conv, di)
+        return P(None, None, div(shape[2], model))
+    # small vectors: replicate
+    return P(*([None] * len(shape)))
+
+
+def tree_param_specs(cfg: ArchConfig, sc: ShardCfg, params_shape,
+                     mesh: Mesh):
+    """Pytree of PartitionSpecs matching a params(-shaped) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        specs.append(param_spec(cfg, sc, pstr, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_spec(cfg: ArchConfig, sc: ShardCfg, path: str,
+               shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Sharding for decode-cache tensors.
+
+    Default: batch over (pod, data), kv-heads over model (when divisible).
+    With ``seq_shard_cache`` (long-context SP): the cache *sequence* dim is
+    sharded over 'data' — decode attention becomes distributed
+    flash-decoding (partial softmax per shard + psum, generated by SPMD).
+    """
+    name = path.split("/")[-1]
+    dp = _dp_axes(mesh)
+    msize = mesh.shape.get("model", 1)
+    if name == "len":
+        return P()
+    if len(shape) == 5:  # (Pd, B, S, KV, hd) attention / cross caches
+        b, s, kv = shape[1], shape[2], shape[3]
+        bspec = dp if b % int(np.prod([mesh.shape[a] for a in dp])) == 0 \
+            else (dp[0] if b % mesh.shape[dp[0]] == 0 else None)
+        if sc.seq_shard_cache:
+            sspec = "data" if s % mesh.shape.get("data", 1) == 0 else None
+            bspec = "pod" if ("pod" in mesh.axis_names
+                              and b % mesh.shape["pod"] == 0) else None
+            return P(None, bspec, sspec,
+                     "model" if kv % msize == 0 else None, None)
+        if kv % msize == 0:
+            return P(None, bspec, None, "model", None)
+        if sc.cache_seq_model and s % msize == 0:
+            # GQA kv-heads don't divide TP: shard the SEQ dim over 'model'
+            # instead of replicating the cache (decode attention becomes a
+            # partial-softmax + psum over model — flash-decoding by SPMD)
+            return P(None, bspec, "model", None, None)
+        return P(None, bspec, None, None, None)
+    if len(shape) >= 3:  # ssm/rwkv states: (Pd, B, ...)
+        b = shape[1]
+        bspec = dp if b % int(np.prod([mesh.shape[a] for a in dp])) == 0 \
+            else (dp[0] if b % mesh.shape[dp[0]] == 0 else None)
+        rest = [None] * (len(shape) - 2)
+        # shard the widest state dim over model when possible
+        widest = int(np.argmax(shape[2:]))
+        if shape[2 + widest] % msize == 0:
+            rest[widest] = "model"
+        return P(None, bspec, *rest)
+    return P(*([None] * len(shape)))
+
+
+def tree_cache_specs(cfg: ArchConfig, sc: ShardCfg, cache_shape, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        specs.append(cache_spec(cfg, sc, pstr, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# -------------------------------------------------------- at-use constraints
+
+def at_use_spec(spec: P, drop_leading: bool = True) -> P:
+    """Compute-time spec of an FSDP-stored weight: the 'data' (FSDP) axis is
+    gathered at use (ZeRO-3 gather-at-use), TP axes stay; the leading stacked
+    period dim is stripped inside the layer scan."""
+    parts = list(spec) if spec is not None else []
+    if drop_leading and parts:
+        parts = parts[1:]
+    parts = [None if a == "data" else a for a in parts]
+    return P(*parts)
+
+
+class ModelSharding:
+    """Sharding constraints applied INSIDE the model (activations +
+    gather-at-use weights). Without these, XLA's SPMD partitioner may choose
+    partial-sum all-reduces of activation-sized tensors instead of weight
+    all-gathers (observed: 5 GB logits all-reduce). Constructed by
+    launch.steps; ``None`` disables all constraints (CPU tests)."""
+
+    def __init__(self, cfg, sc: ShardCfg, mesh: Mesh, params_shape):
+        self.mesh = mesh
+        self.dp = _dp_axes(mesh)
+        self.sc = sc
+        specs = tree_param_specs(cfg, sc, params_shape, mesh)
+        self.block_use = {}
+        for slot, tree in specs["blocks"].items():
+            self.block_use[slot] = {
+                name: at_use_spec(sp, drop_leading=True)
+                for name, sp in tree.items()}
+        self.embed_use = at_use_spec(specs["embed"], drop_leading=False)
+        self.head_use = at_use_spec(specs["lm_head"], drop_leading=False)
+        self.enc_use = None
+        if "encoder" in specs:
+            self.enc_use = {name: at_use_spec(sp, drop_leading=True)
+                            for name, sp in specs["encoder"].items()}
+
+    def _wsc(self, x, spec):
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def act(self, x):
+        """(B, S, d) activations: batch over DP axes; with seq_parallel the
+        sequence dim additionally shards over 'model' (Megatron-SP)."""
+        if x.shape[0] % int(np.prod([self.mesh.shape[a] for a in self.dp])):
+            return x
+        sp = None
+        if (self.sc.seq_parallel and x.ndim == 3
+                and x.shape[1] % self.mesh.shape.get("model", 1) == 0):
+            sp = "model"
+        return self._wsc(x, P(self.dp, sp, *([None] * (x.ndim - 2))))
+
+    def pslice(self, slot: str, tree):
+        use = self.block_use.get(slot)
+        if use is None:
+            return tree
+        return {k: (self._wsc(v, use[k]) if k in use else v)
+                for k, v in tree.items()}
+
+    def encslice(self, tree):
+        if self.enc_use is None:
+            return tree
+        return {k: (self._wsc(v, self.enc_use[k]) if k in self.enc_use
+                    else v) for k, v in tree.items()}
+
+    def embed(self, w):
+        return self._wsc(w, self.embed_use)
+
+    def head(self, w):
+        return self._wsc(w, self.head_use)

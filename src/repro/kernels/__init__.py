@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the version-control hot paths + jit'd wrappers.
+
+Kernels (each <name>.py has the pl.pallas_call + BlockSpec tiling, ref.py has
+the pure-jnp oracle, ops.py the dispatching wrappers):
+
+  * rowhash         — 128-bit row/key signatures from uint32 column lanes.
+  * searchsorted    — branchless vectorized lower-bound probes.
+  * segsum_diff     — the diff-aggregation operator (boundary + signed scan).
+  * flash_attention — online-softmax attention with VMEM-resident tiles
+                      (the model-side hot spot; ops.attention dispatches).
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: flash attention (forward).
+
+This is the §Perf "next lever" for the memory-bound prefill/train cells:
+the XLA block-causal attention (models/layers.py) materializes every
+(bq, bk) score tile in HBM-visible buffers, which dominates the dot-stream
+bytes of the 32k-prefill cells. The Pallas kernel keeps q/k/v tiles and the
+online-softmax state in VMEM across the innermost (sequential) grid
+dimension, so per-tile scores never leave the core.
+
+Grid: (B*H, n_q_blocks, n_k_blocks) — the last dim is sequential on TPU, so
+VMEM scratch (m, l, acc) carries across k-blocks of one q-block. Causal
+pairs with ki > qi are masked (pl.when skips their compute).
+
+Used on real TPU via ``ops.attention(..., impl="pallas")``; the CPU dry-run
+keeps the XLA path so the HLO cost model stays meaningful (a custom call
+reports no FLOPs). Validated against ``ref.attention_ref`` in interpret
+mode (tests/test_kernels.py) over shape/dtype/causality sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k_blocks: int, seq_k_valid: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0]                     # (bq, hd)
+        k = k_ref[0]                     # (bk, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=F32) * scale          # (bq, bk)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k_valid
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            mask &= qpos >= kpos
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    if causal:
+        # blocks strictly above the diagonal contribute nothing
+        pl.when(ki <= qi)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = False):
+    """q: (BH, Sq, hd); k/v: (BH, Sk, hd) — heads pre-flattened (GQA handled
+    by the ops.py wrapper). Sq % block_q == 0; Sk padded here if needed."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0, (sq, block_q)
+    seq_k_valid = sk
+    pad = (-sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        sk += pad
+    n_q, n_k = sq // block_q, sk // block_k
+    scale = 1.0 / np.sqrt(hd)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_k_blocks=n_k, seq_k_valid=seq_k_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), F32),    # m: running max
+            pltpu.VMEM((block_q, 1), F32),    # l: running denominator
+            pltpu.VMEM((block_q, hd), F32),   # acc: running numerator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,235 @@
+"""Jit'd wrappers + backend dispatch for the VCS kernels.
+
+The version-control engine (``repro.core``) calls these three ops on its hot
+paths. On a TPU backend they run the Pallas kernels (``rowhash.py``,
+``searchsorted.py``, ``segsum_diff.py``); on CPU they run semantically
+identical vectorized fast paths (numpy / the pure-jnp oracle in ``ref.py``)
+so that benchmarks on this container measure algorithmic behaviour, not
+Pallas interpret-mode overhead. Setting ``FORCE_PALLAS_INTERPRET = True``
+routes everything through the Pallas kernels in interpret mode (used by
+tests to exercise the real kernels end-to-end).
+
+Signature convention: a 64-bit word is carried host-side as numpy uint64;
+kernels see it as (hi32, lo32) uint32 lanes. A row signature is 128 bits =
+two uint64 words (lo64, hi64); sorting is lexicographic by (hi64, lo64) --
+but since the words are uniformly mixed, we sort by the single packed lo64
+word and resolve the rare lo64 collisions with the hi64 word at run level.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .rowhash import rowhash_pallas, DEFAULT_BLOCK_ROWS
+from .searchsorted import searchsorted_pallas, DEFAULT_BLOCK_Q
+from .segsum_diff import segsum_pallas, DEFAULT_BLOCK
+
+# Toggled by tests; on a real TPU backend the pallas path is the default.
+FORCE_PALLAS_INTERPRET = False
+
+
+def backend_uses_pallas() -> bool:
+    return FORCE_PALLAS_INTERPRET or jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------- packing
+
+def pack64(hi32: np.ndarray, lo32: np.ndarray) -> np.ndarray:
+    return (hi32.astype(np.uint64) << np.uint64(32)) | lo32.astype(np.uint64)
+
+
+def unpack64(w: np.ndarray):
+    w = w.astype(np.uint64)
+    return (w >> np.uint64(32)).astype(np.uint32), (w & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def _pad_rows(a: np.ndarray, mult: int, fill=0) -> np.ndarray:
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    padding = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, padding, constant_values=fill)
+
+
+# ---------------------------------------------------------------- rowhash
+
+def rowhash(lanes_u32: np.ndarray) -> np.ndarray:
+    """(R, C) uint32 lanes -> (R, 4) uint32 signature words."""
+    r = lanes_u32.shape[0]
+    if r == 0:
+        return np.zeros((0, 4), np.uint32)
+    if backend_uses_pallas():
+        padded = _pad_rows(np.asarray(lanes_u32, np.uint32), DEFAULT_BLOCK_ROWS)
+        out = rowhash_pallas(jnp.asarray(padded), interpret=_interp())
+        return np.asarray(out)[:r]
+    # CPU fast path: identical math in numpy (wrapping uint32).
+    return _rowhash_np(np.asarray(lanes_u32, np.uint32))
+
+
+def _fmix32_np(h: np.ndarray) -> np.ndarray:
+    h = h.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        h ^= h >> np.uint32(16)
+        h = (h * np.uint32(0x85EBCA6B)).astype(np.uint32)
+        h ^= h >> np.uint32(13)
+        h = (h * np.uint32(0xC2B2AE35)).astype(np.uint32)
+        h ^= h >> np.uint32(16)
+    return h
+
+
+def _rowhash_np(lanes: np.ndarray) -> np.ndarray:
+    r, c = lanes.shape
+    seeds = [np.uint32(int(s)) for s in ref._SEEDS]
+    out = np.empty((r, 4), np.uint32)
+    with np.errstate(over="ignore"):
+        for s, seed in enumerate(seeds):
+            h = np.full((r,), seed, np.uint32)
+            for j in range(c):
+                x = lanes[:, j]
+                salt = np.uint32(((j * 2 + 1) * 0x9E3779B1 + s * 0x7F4A7C15) & 0xFFFFFFFF)
+                h = _fmix32_np(h ^ (x * np.uint32(0x9E3779B1) + salt).astype(np.uint32))
+                h = (h * np.uint32(0x95D0BE4F) + np.uint32(1)).astype(np.uint32)
+            out[:, s] = _fmix32_np(h ^ np.uint32(c))
+    return out
+
+
+def signatures_from_lanes(lanes_u32: np.ndarray):
+    """(R, C) uint32 -> (sig_lo (R,) uint64, sig_hi (R,) uint64)."""
+    w = rowhash(lanes_u32)
+    lo = pack64(w[:, 1], w[:, 0])
+    hi = pack64(w[:, 3], w[:, 2])
+    return lo, hi
+
+
+# ------------------------------------------------------------ lower bound
+
+def lower_bound(sorted_u64: np.ndarray, queries_u64: np.ndarray) -> np.ndarray:
+    """First index i with sorted[i] >= q, per query. Returns int64 indices."""
+    if queries_u64.shape[0] == 0 or sorted_u64.shape[0] == 0:
+        return np.zeros(queries_u64.shape, np.int64)
+    if backend_uses_pallas():
+        t_hi, t_lo = unpack64(np.asarray(sorted_u64))
+        q_hi, q_lo = unpack64(_pad_rows(np.asarray(queries_u64), DEFAULT_BLOCK_Q,
+                                        fill=np.uint64(0)))
+        idx = searchsorted_pallas(jnp.asarray(t_hi), jnp.asarray(t_lo),
+                                  jnp.asarray(q_hi), jnp.asarray(q_lo),
+                                  interpret=_interp())
+        return np.asarray(idx[: queries_u64.shape[0]], np.int64)
+    return np.searchsorted(sorted_u64, queries_u64, side="left").astype(np.int64)
+
+
+# --------------------------------------------------------- diff aggregate
+
+class DiffAgg:
+    """Result of diff aggregation over a sorted signed stream.
+
+    Attributes:
+      boundary:   (N,) bool  — new-run start flags.
+      run_starts: (K,) int64 — index of each run's first element.
+      run_lens:   (K,) int64
+      run_sums:   (K,) int32 — net sign per run (0 == fully cancelled).
+      run_ids:    (N,) int64 — run index per element.
+    """
+
+    __slots__ = ("boundary", "run_starts", "run_lens", "run_sums", "run_ids")
+
+    def __init__(self, boundary, signs):
+        boundary = np.asarray(boundary, bool)
+        signs = np.asarray(signs, np.int32)
+        self.boundary = boundary
+        self.run_starts = np.flatnonzero(boundary).astype(np.int64)
+        n = boundary.shape[0]
+        ends = np.append(self.run_starts[1:], n)
+        self.run_lens = ends - self.run_starts
+        self.run_sums = (np.add.reduceat(signs, self.run_starts)
+                         if n else np.zeros((0,), np.int32)).astype(np.int32)
+        self.run_ids = np.cumsum(boundary).astype(np.int64) - 1
+
+
+def diff_aggregate(sig_lo: np.ndarray, sig_hi: np.ndarray,
+                   signs: np.ndarray, *, presorted: bool = False):
+    """Sort a signed stream by 128-bit signature and aggregate runs.
+
+    Returns (order, DiffAgg): ``order`` is the permutation applied (identity
+    if presorted). Runs are maximal groups of equal (sig_lo, sig_hi).
+    """
+    n = sig_lo.shape[0]
+    if n == 0:
+        return np.zeros((0,), np.int64), DiffAgg(np.zeros((0,), bool), np.zeros((0,), np.int32))
+    if presorted:
+        order = np.arange(n, dtype=np.int64)
+        s_lo, s_hi, s_sg = sig_lo, sig_hi, np.asarray(signs, np.int32)
+    else:
+        order = np.lexsort((sig_hi, sig_lo)).astype(np.int64)
+        s_lo, s_hi = sig_lo[order], sig_hi[order]
+        s_sg = np.asarray(signs, np.int32)[order]
+
+    if backend_uses_pallas():
+        lo_hi32, lo_lo32 = unpack64(s_lo)
+        hi_hi32, hi_lo32 = unpack64(s_hi)
+        keys = np.stack([lo_lo32, lo_hi32, hi_lo32, hi_hi32], axis=1)
+        keys_p = _pad_rows(keys, DEFAULT_BLOCK, fill=np.uint32(0xFFFFFFFF))
+        sg_p = _pad_rows(s_sg, DEFAULT_BLOCK)
+        nblocks = keys_p.shape[0] // DEFAULT_BLOCK
+        prev_last = np.empty((nblocks, 4), np.uint32)
+        prev_last[0] = np.uint32(0xFFFFFFFF)  # forces boundary at row 0 unless
+        # keys[0] == all-ones sentinel; patched below.
+        if nblocks > 1:
+            prev_last[1:] = keys_p[np.arange(1, nblocks) * DEFAULT_BLOCK - 1]
+        bnd, _csum, _tot = segsum_pallas(jnp.asarray(keys_p),
+                                         jnp.asarray(prev_last),
+                                         jnp.asarray(sg_p), interpret=_interp())
+        bnd = np.array(bnd[:n])  # copy: jax buffers are read-only
+        bnd[0] = True
+        return order, DiffAgg(bnd, s_sg)
+
+    # CPU fast path
+    neq = np.empty((n,), bool)
+    neq[0] = True
+    neq[1:] = (s_lo[1:] != s_lo[:-1]) | (s_hi[1:] != s_hi[:-1])
+    return order, DiffAgg(neq, s_sg)
+
+
+# --------------------------------------------------------- attention entry
+
+def attention(q, k, v, *, causal: bool = True, impl: str = "auto",
+              block_q: int = 256, block_k: int = 256,
+              interpret: bool = False):
+    """Attention dispatcher for the model stack.
+
+    q: (B,S,H,hd); k/v: (B,Sk,KV,hd) (GQA: H % KV == 0). impl:
+      * "pallas" — the flash kernel (TPU target; the §Perf lever that keeps
+        score tiles in VMEM). GQA handled by repeating kv heads.
+      * "xla"    — models.layers.block_causal_attention (the measured
+        dry-run path; HLO cost model sees its dots).
+      * "auto"   — pallas on TPU backends, xla elsewhere.
+    """
+    from ..models.layers import block_causal_attention
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return block_causal_attention(q, k, v, causal=causal, block=block_q)
+    from .flash_attention import flash_attention_pallas
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, v.shape[1], hd)
+    bq = min(block_q, S)
+    while S % bq:
+        bq -= 1
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, block_q=bq,
+                                 block_k=min(block_k, kf.shape[1]),
+                                 interpret=interpret or _interp())
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

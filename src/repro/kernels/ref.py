@@ -1,0 +1,131 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the semantic ground truth. The Pallas kernels in this package must
+produce bit-identical results (integer ops only) and are validated against
+these in ``tests/test_kernels.py`` with ``interpret=True`` sweeps.
+
+All arithmetic is 32-bit (TPU VPU native width). 64-bit signatures are
+represented as pairs of uint32 lanes ``(hi, lo)``; a 128-bit row signature is
+two such pairs. Packing into uint64 for host-side sorting happens in
+``ops.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+import numpy as np
+
+# murmur3 32-bit finalizer constants (np scalars: safe to use inside Pallas
+# kernel bodies — they become inline literals, not captured jax constants)
+_FMIX_C1 = np.uint32(0x85EBCA6B)
+_FMIX_C2 = np.uint32(0xC2B2AE35)
+# per-lane mixing constants (odd, from splitmix/murmur families)
+_LANE_C1 = np.uint32(0x9E3779B1)  # golden ratio
+_LANE_C2 = np.uint32(0x95D0BE4F)
+_SEEDS = (
+    0x2545F491,  # sig lane 0 (lo.lo)
+    0x8C2E1B6D,  # sig lane 1 (lo.hi)
+    0x64E6D3A5,  # sig lane 2 (hi.lo)
+    0x5851F42D,  # sig lane 3 (hi.hi)
+)
+
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit avalanche finalizer (uint32 -> uint32)."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * _FMIX_C1
+    h = h ^ (h >> 13)
+    h = h * _FMIX_C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def rowhash(lanes: jnp.ndarray) -> jnp.ndarray:
+    """Mix per-row uint32 lanes into a 128-bit signature.
+
+    Args:
+      lanes: (R, C) uint32. Each logical table column contributes two lanes
+        (hi32, lo32) of its canonical 64-bit encoding; C = 2 * n_columns.
+
+    Returns:
+      (R, 4) uint32 — signature words [lo.lo, lo.hi, hi.lo, hi.hi].
+
+    The mix must be order-sensitive in C (columns are positional per the
+    paper's schema-equality requirement) and avalanche in every lane.
+    """
+    lanes = lanes.astype(jnp.uint32)
+    r, c = lanes.shape
+    out = []
+    for s, seed in enumerate(_SEEDS):
+        h = jnp.full((r,), np.uint32(seed), dtype=jnp.uint32)
+        for j in range(c):
+            x = lanes[:, j]
+            # lane-position salt keeps permuted columns distinct
+            salt = np.uint32(((j * 2 + 1) * 0x9E3779B1 + s * 0x7F4A7C15) & 0xFFFFFFFF)
+            h = fmix32(h ^ (x * _LANE_C1 + salt))
+            h = h * _LANE_C2 + np.uint32(1)
+        out.append(fmix32(h ^ np.uint32(c)))
+    return jnp.stack(out, axis=1)
+
+
+def _cmp_lt(a_hi, a_lo, b_hi, b_lo):
+    """64-bit '<' on (hi, lo) uint32 pairs."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def lower_bound(sorted_hi: jnp.ndarray, sorted_lo: jnp.ndarray,
+                q_hi: jnp.ndarray, q_lo: jnp.ndarray) -> jnp.ndarray:
+    """Branchless binary search: first index where sorted[i] >= q.
+
+    Args:
+      sorted_hi/lo: (N,) uint32 — table sorted ascending by (hi, lo).
+      q_hi/lo: (Q,) uint32 — query keys.
+
+    Returns:
+      (Q,) int32 lower-bound indices in [0, N].
+    """
+    n = sorted_hi.shape[0]
+    q = q_hi.shape[0]
+    lo_idx = jnp.zeros((q,), dtype=jnp.int32)
+    # number of iterations: ceil(log2(n+1)), static
+    span = jnp.int32(n)
+    it = max(1, int(n).bit_length())
+    half = jnp.int32(n)
+    for _ in range(it):
+        half = (half + 1) // 2
+        mid = jnp.minimum(lo_idx + half, jnp.int32(n)) - 1
+        mid_c = jnp.clip(mid, 0, max(n - 1, 0))
+        m_hi = sorted_hi[mid_c]
+        m_lo = sorted_lo[mid_c]
+        go_right = _cmp_lt(m_hi, m_lo, q_hi, q_lo) & (mid < n)
+        lo_idx = jnp.where(go_right, mid + 1, lo_idx)
+    return lo_idx
+
+
+def diff_aggregate(key_w: jnp.ndarray, signs: jnp.ndarray,
+                   prev_last: jnp.ndarray | None = None):
+    """Diff aggregation over a sorted signed stream (the paper §5.1 operator).
+
+    Args:
+      key_w: (N, 4) uint32 — 128-bit keys, rows sorted ascending
+        lexicographically by words [3],[2],[1],[0] (i.e. (hi,lo)).
+      signs: (N,) int32 — +1 for rows of the right snapshot, -1 for left.
+      prev_last: optional (4,) uint32 — key preceding row 0 (for block
+        composition); None means row 0 always starts a run.
+
+    Returns:
+      boundary: (N,) bool — True where a new key-run starts.
+      csum: (N,) int32 — inclusive cumulative sum of signs (global).
+    """
+    k = key_w.astype(jnp.uint32)
+    if prev_last is None:
+        prev = jnp.concatenate([jnp.zeros((1, 4), jnp.uint32), k[:-1]], axis=0)
+        first = jnp.zeros((k.shape[0],), dtype=bool).at[0].set(True)
+    else:
+        prev = jnp.concatenate([prev_last.reshape(1, 4), k[:-1]], axis=0)
+        first = jnp.zeros((k.shape[0],), dtype=bool)
+    neq = jnp.any(k != prev, axis=1)
+    boundary = first | neq
+    csum = jnp.cumsum(signs.astype(jnp.int32), axis=0, dtype=jnp.int32)
+    return boundary, csum

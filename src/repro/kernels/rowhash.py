@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: 128-bit row signatures from uint32 column lanes.
+
+This is the paper's §5.5.5 signature idea promoted to the universal row
+identity (DESIGN.md §2): every diff/merge inner loop operates on signatures,
+so signature computation is on the critical path of every version-control
+operation and is the most bandwidth-hungry elementwise op in the system.
+
+TPU adaptation: all arithmetic is uint32 (VPU native); rows are tiled into
+VMEM blocks of ``block_rows`` and the C lane columns are unrolled inside the
+kernel (C is a compile-time constant, = 2 * n_table_columns).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_ROWS = 1024  # 1024 rows x C lanes x 4B; C<=32 -> <=128KiB in VMEM
+
+
+def _rowhash_kernel(lanes_ref, out_ref, *, n_lanes: int):
+    """One VMEM tile: (BR, C) uint32 lanes -> (BR, 4) uint32 signature words."""
+    import numpy as np
+    lanes = lanes_ref[...]
+    br = lanes.shape[0]
+    outs = []
+    for s, seed in enumerate(ref._SEEDS):
+        h = jnp.full((br,), np.uint32(seed), dtype=jnp.uint32)
+        for j in range(n_lanes):  # unrolled: n_lanes is static
+            x = lanes[:, j]
+            salt = np.uint32(((j * 2 + 1) * 0x9E3779B1 + s * 0x7F4A7C15) & 0xFFFFFFFF)
+            h = ref.fmix32(h ^ (x * ref._LANE_C1 + salt))
+            h = h * ref._LANE_C2 + np.uint32(1)
+        outs.append(ref.fmix32(h ^ np.uint32(n_lanes)))
+    out_ref[...] = jnp.stack(outs, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def rowhash_pallas(lanes: jnp.ndarray, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = False) -> jnp.ndarray:
+    """(R, C) uint32 -> (R, 4) uint32 signatures. R must be a multiple of
+    ``block_rows`` (ops.py pads with sentinel rows)."""
+    r, c = lanes.shape
+    assert r % block_rows == 0, (r, block_rows)
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rowhash_kernel, n_lanes=c),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 4), jnp.uint32),
+        interpret=interpret,
+    )(lanes)

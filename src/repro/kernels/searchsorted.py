@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: vectorized branchless lower-bound over sorted 64-bit keys.
+
+Used for base-revision lookup and current-position probes during merge
+(DESIGN.md §2): given an object's key-signature array (sorted at seal time),
+find for each probe key the first index with table[i] >= key.
+
+TPU adaptation of a pointer-chasing binary search: the whole sorted table
+block lives in VMEM (objects are sealed at <= 256Ki rows -> 2 MiB of key
+pairs), probes are tiled over the grid, and the search is a fixed-depth
+(log2 N, static) sequence of masked gathers — no data-dependent control flow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 1024
+
+
+def _cmp_lt(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def _searchsorted_kernel(tab_hi_ref, tab_lo_ref, q_hi_ref, q_lo_ref, out_ref,
+                         *, n_table: int):
+    tab_hi = tab_hi_ref[...]
+    tab_lo = tab_lo_ref[...]
+    q_hi = q_hi_ref[...]
+    q_lo = q_lo_ref[...]
+    bq = q_hi.shape[0]
+    lo_idx = jnp.zeros((bq,), dtype=jnp.int32)
+    half = jnp.int32(n_table)
+    for _ in range(max(1, int(n_table).bit_length())):  # static depth
+        half = (half + 1) // 2
+        mid = jnp.minimum(lo_idx + half, jnp.int32(n_table)) - 1
+        mid_c = jnp.clip(mid, 0, max(n_table - 1, 0))
+        m_hi = tab_hi[mid_c]
+        m_lo = tab_lo[mid_c]
+        go_right = _cmp_lt(m_hi, m_lo, q_hi, q_lo) & (mid < n_table)
+        lo_idx = jnp.where(go_right, mid + 1, lo_idx)
+    out_ref[...] = lo_idx
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def searchsorted_pallas(tab_hi: jnp.ndarray, tab_lo: jnp.ndarray,
+                        q_hi: jnp.ndarray, q_lo: jnp.ndarray, *,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Lower-bound of each query in the sorted (hi, lo) table.
+
+    tab_hi/tab_lo: (N,) uint32; q_hi/q_lo: (Q,) uint32, Q % block_q == 0.
+    Returns (Q,) int32 indices in [0, N].
+    """
+    n = tab_hi.shape[0]
+    q = q_hi.shape[0]
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    full_tab = pl.BlockSpec((n,), lambda i: (0,))
+    per_q = pl.BlockSpec((block_q,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_searchsorted_kernel, n_table=n),
+        grid=grid,
+        in_specs=[full_tab, full_tab, per_q, per_q],
+        out_specs=per_q,
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        interpret=interpret,
+    )(tab_hi, tab_lo, q_hi, q_lo)

@@ -1,0 +1,6 @@
+"""Launchers: production mesh, dry-run, trainer, server.
+
+NOTE: import ``repro.launch.dryrun`` FIRST (before any jax use) when you
+need the 512-device host platform — it sets XLA_FLAGS at import time.
+"""
+from .mesh import make_production_mesh  # noqa: F401

@@ -1,0 +1,4 @@
+"""Model stack: layers, SSM mixers, and the unified LM assembly."""
+from . import layers, ssm, lm  # noqa: F401
+from .lm import (init_params, forward, loss_fn, prefill, decode_step,  # noqa
+                 init_cache)

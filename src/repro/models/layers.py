@@ -1,0 +1,252 @@
+"""Transformer building blocks, pure JAX (no flax/optax).
+
+Attention is implemented as *block-causal online-softmax* attention: the
+lower-triangular block pairs are enumerated statically and processed by a
+``lax.scan``, so compiled FLOPs ≈ the causal-useful S²/2 instead of the
+masked-full S² (this is the XLA-native equivalent of a flash kernel; see
+EXPERIMENTS.md §Perf for the before/after). Sliding windows restrict the
+pair list further (Mixtral SWA ⇒ O(S·W)).
+
+All matmuls run in bf16 with f32 softmax/normalization accumulators.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def rms_norm(x, scale, eps=1e-5):
+    # f32 only inside the variance reduction; the bf16 datapath stays bf16
+    # so TP partial-sum all-reduces are not upcast to f32 (2x bytes).
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps).astype(x.dtype) * scale
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+    ang = positions[..., :, None, None].astype(F32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_qk(q, k):
+    """(B,bq,H,hd) x (B,bk,KV,hd) -> (B,H,bq,bk) with GQA head grouping."""
+    B, bq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, bq, KV, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=F32)
+    return s.reshape(B, KV * g, bq, k.shape[1])
+
+
+def _attn_sv(p, v):
+    """(B,H,bq,bk) x (B,bk,KV,hd) -> (B,bq,H,hd)."""
+    B, H, bq, bk = p.shape
+    KV = v.shape[2]
+    g = H // KV
+    pg = p.reshape(B, KV, g, bq, bk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pg.astype(v.dtype), v)
+    return o.reshape(B, bq, H, v.shape[3])
+
+
+def block_causal_attention(q, k, v, *, window: Optional[int] = None,
+                           block: int = 1024, causal: bool = True):
+    """Online-softmax attention over statically-enumerated block pairs.
+
+    q: (B,S,H,hd), k/v: (B,Sk,KV,hd) — self (S==Sk, causal) or cross
+    (causal=False, all pairs). Returns (B,S,H,hd).
+    """
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    block = min(block, S, Sk)
+    while S % block:        # largest q-block size that tiles the sequence
+        block -= 1
+    sk_valid = Sk
+    pad_k = (-Sk) % block
+    if pad_k:  # non-divisible context (e.g. 6404 vlm patches): pad + mask
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        Sk = Sk + pad_k
+    Tq, Tk = S // block, Sk // block
+    scale = 1.0 / np.sqrt(hd)
+
+    pairs = []
+    for qi in range(Tq):
+        for ki in range(Tk):
+            if causal and ki > qi:
+                continue
+            if causal and window is not None:
+                # block pair fully outside the window?
+                if qi * block - (ki * block + block - 1) >= window:
+                    continue
+            pairs.append((qi, ki))
+    # order: qi-major so a single (m, l, acc) state serves the current row
+    pairs.sort()
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    flush = np.zeros((len(pairs),), bool)
+    for i, (qi, ki) in enumerate(pairs):
+        if i + 1 == len(pairs) or pairs[i + 1][0] != qi:
+            flush[i] = True
+    flush_arr = jnp.asarray(flush)
+
+    neg = jnp.asarray(-1e30, F32)
+    row = jnp.arange(block)
+
+    def body(carry, xs):
+        out, m, l, acc = carry
+        qi, ki, fl = xs
+        qs = jax.lax.dynamic_slice_in_dim(q, qi * block, block, axis=1)
+        ks = jax.lax.dynamic_slice_in_dim(k, ki * block, block, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ki * block, block, axis=1)
+        s = _attn_qk(qs, ks) * scale                    # (B,H,bq,bk) f32
+        kpos = ki * block + row[None, :]
+        if causal:
+            qpos = qi * block + row[:, None]
+            mask = qpos >= kpos
+            if window is not None:
+                mask &= (qpos - kpos) < window
+            if pad_k:
+                mask &= kpos < sk_valid
+            s = jnp.where(mask[None, None], s, neg)
+        elif pad_k:
+            s = jnp.where((kpos < sk_valid)[None, None], s, neg)
+        m_new = jnp.maximum(m, s.max(-1))               # (B,H,bq)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + \
+            _attn_sv(p, vs).astype(F32).transpose(0, 2, 1, 3)
+        # flush completed q-row into the output buffer
+        o = (acc_new / jnp.maximum(l_new, 1e-30)[..., None]) \
+            .transpose(0, 2, 1, 3).astype(q.dtype)       # (B,bq,H,hd)
+        out = jax.lax.cond(
+            fl, lambda o_buf: jax.lax.dynamic_update_slice_in_dim(
+                o_buf, o, qi * block, axis=1),
+            lambda o_buf: o_buf, out)
+        reset = fl
+        m_next = jnp.where(reset, jnp.full_like(m, -jnp.inf), m_new)
+        l_next = jnp.where(reset, jnp.zeros_like(l), l_new)
+        acc_next = jnp.where(reset, jnp.zeros_like(acc), acc_new)
+        return (out, m_next, l_next, acc_next), None
+
+    out0 = jnp.zeros_like(q)
+    m0 = jnp.full((B, H, block), -jnp.inf, F32)
+    l0 = jnp.zeros((B, H, block), F32)
+    acc0 = jnp.zeros((B, H, block, hd), F32)
+    (out, _, _, _), _ = jax.lax.scan(
+        body, (out0, m0, l0, acc0), (qi_arr, ki_arr, flush_arr))
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None):
+    """Single-position attention against a (possibly ring-buffered) cache.
+
+    q: (B,1,H,hd); k/v_cache: (B,Sc,KV,hd); cache_len: () int32 — number of
+    valid positions. With ``window`` the cache is a ring buffer of size Sc
+    == window and all slots < min(cache_len, window) are valid.
+    """
+    B, _, H, hd = q.shape
+    Sc = k_cache.shape[1]
+    s = _attn_qk(q, k_cache) / np.sqrt(hd)               # (B,H,1,Sc)
+    idx = jnp.arange(Sc)
+    valid = idx < jnp.minimum(cache_len, Sc) if window is not None \
+        else idx < cache_len
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s.astype(F32), axis=-1)
+    return _attn_sv(p, v_cache)
+
+
+# ------------------------------------------------------------------- MLP
+
+def gated_mlp(params, x):
+    h = jnp.einsum("bsd,df->bsf", x, params["w1"])
+    g = jnp.einsum("bsd,df->bsf", x, params["w3"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * h, params["w2"])
+
+
+# ------------------------------------------------------------------- MoE
+
+def moe_ffn(params, x, *, n_experts: int, top_k: int,
+            capacity_factor: float, seq_chunk: int = 4096):
+    """Top-k MoE with per-batch-row capacity (GShard/MaxText-style dispatch
+    einsums that KEEP the batch dim).
+
+    x: (B,S,d). Routing state (one-hot, position-in-expert cumsum, dispatch
+    and combine tensors) all carry the leading batch dim, so the whole MoE
+    block shards over DP without cross-device cumsums; experts shard over
+    the model axis (EP). The sequence is chunked to bound the
+    (B, sc, E, C) dispatch tensor (C grows with sc).
+
+    History (EXPERIMENTS §Perf): routing over the flattened global token dim
+    made every DP shard recompute every expert chunk — 16x replicated
+    expert FLOPs on the production mesh.
+    Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    sc = min(S, seq_chunk)
+    while S % sc:
+        sc -= 1
+    nchunks = S // sc
+    C = int(np.ceil(capacity_factor * sc * top_k / n_experts / 4) * 4)
+
+    def route(xc):
+        """xc: (B, sc, d) -> dispatch (B,sc,E,C) bool, combine, aux."""
+        logits = jnp.einsum("bsd,de->bse", xc,
+                            params["router"]).astype(F32)
+        probs = jax.nn.softmax(logits, axis=-1)            # (B,sc,E)
+        gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (B,sc,k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+        me = probs.mean(axis=(0, 1))
+        top1 = jax.nn.one_hot(gate_idx[..., 0], n_experts, dtype=F32)
+        ce = top1.mean(axis=(0, 1))
+        aux = n_experts * jnp.sum(me * ce)
+        disp = jnp.zeros((B, sc, n_experts, C), jnp.bool_)
+        comb = jnp.zeros((B, sc, n_experts, C), xc.dtype)
+        offset = jnp.zeros((B, n_experts), jnp.int32)
+        for j in range(top_k):
+            oh = jax.nn.one_hot(gate_idx[..., j], n_experts,
+                                dtype=jnp.int32)           # (B,sc,E)
+            pos = jnp.cumsum(oh, axis=1) - 1 + offset[:, None, :]
+            pos_tok = (pos * oh).sum(-1)                   # (B,sc)
+            fits = pos_tok < C
+            slot = jax.nn.one_hot(pos_tok, C, dtype=jnp.bool_)  # (B,sc,C)
+            d_j = (oh > 0)[..., None] & slot[:, :, None, :] \
+                & fits[..., None, None]
+            disp = disp | d_j
+            comb = comb + d_j.astype(xc.dtype) \
+                * gate_vals[..., j][..., None, None].astype(xc.dtype)
+            offset = offset + oh.sum(axis=1)
+        return disp, comb, aux
+
+    def one_chunk(xc):
+        disp, comb, aux = route(xc)
+        xe = jnp.einsum("bsec,bsd->becd", disp.astype(xc.dtype), xc)
+        h = jnp.einsum("becd,edf->becf", xe, params["w1"])
+        g = jnp.einsum("becd,edf->becf", xe, params["w3"])
+        ye = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * h, params["w2"])
+        out = jnp.einsum("bsec,becd->bsd", comb, ye)
+        return out, aux
+
+    if nchunks == 1:
+        out, aux = one_chunk(x)
+    else:
+        xs = x.reshape(B, nchunks, sc, d).transpose(1, 0, 2, 3)
+        outs, auxs = jax.lax.scan(
+            lambda _, xc: (None, one_chunk(xc)), None, xs)[1]
+        out = outs.transpose(1, 0, 2, 3).reshape(B, S, d)
+        aux = auxs.mean()
+    return out, aux

@@ -1,0 +1,494 @@
+"""Model assembly: decoder LMs, enc-dec (whisper), VLM cross-attn, hybrid
+and SSM block patterns — one code path driven by ``ArchConfig``.
+
+Layers are stacked per period-slot and iterated with ``lax.scan`` over
+periods, so trace/compile time is O(period), not O(n_layers) — essential for
+the 100-layer dry-runs.
+
+Entry points:
+  init_params(cfg, key)                       -> params pytree (bf16)
+  forward(cfg, params, tokens, ctx)           -> logits (train/eval)
+  loss_fn(cfg, params, batch)                 -> scalar loss (+ MoE aux)
+  init_cache(cfg, batch, seq_cap)             -> decode cache pytree
+  prefill(cfg, params, tokens, ctx, seq_cap)  -> (last_logits, cache)
+  decode_step(cfg, params, token, cache, ctx) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from .layers import (block_causal_attention, decode_attention, gated_mlp,
+                     moe_ffn, rms_norm, rope)
+from . import ssm
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# ============================================================ init
+
+def _dense(key, shape, scale=None, dtype=BF16):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def _slot_params(cfg: ArchConfig, kind: str, ffn_kind: str, key) -> Dict:
+    P = cfg.n_periods
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 24)
+    p: Dict = {"ln1": jnp.ones((P, d), BF16), "ln2": jnp.ones((P, d), BF16)}
+    if kind in ("attn", "cross"):
+        p["wq"] = _dense(ks[0], (P, d, H * hd))
+        p["wk"] = _dense(ks[1], (P, d, KV * hd))
+        p["wv"] = _dense(ks[2], (P, d, KV * hd))
+        p["wo"] = _dense(ks[3], (P, H * hd, d))
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((P, H * hd), BF16)
+            p["bk"] = jnp.zeros((P, KV * hd), BF16)
+            p["bv"] = jnp.zeros((P, KV * hd), BF16)
+        if kind == "attn" and cfg.is_encdec:  # whisper: cross sublayer
+            p["ln_x"] = jnp.ones((P, d), BF16)
+            p["xq"] = _dense(ks[4], (P, d, H * hd))
+            p["xk"] = _dense(ks[5], (P, d, KV * hd))
+            p["xv"] = _dense(ks[6], (P, d, KV * hd))
+            p["xo"] = _dense(ks[7], (P, H * hd, d))
+    elif kind == "mamba":
+        di = cfg.ssm.expand * d
+        nh = di // cfg.ssm.head_dim
+        ds = cfg.ssm.d_state
+        p["w_in"] = _dense(ks[0], (P, d, 2 * di))
+        p["w_bcdt"] = _dense(ks[1], (P, d, 2 * ds + nh))
+        p["w_out"] = _dense(ks[2], (P, di, d))
+        p["conv"] = _dense(ks[3], (P, cfg.ssm.d_conv, di), scale=0.5)
+        p["a_log"] = jnp.zeros((P, nh), F32)
+        p["dt_bias"] = jnp.full((P, nh), -1.0, F32)
+        p["d_skip"] = jnp.ones((P, nh), F32)
+    elif kind == "rwkv":
+        hdim = cfg.ssm.head_dim
+        H6 = d // hdim
+        for n in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+            p[n] = jnp.full((P, d), 0.5, BF16)
+        for n in ("w_r", "w_k", "w_v", "w_g"):
+            p[n] = _dense(ks[hash(n) % 20], (P, d, d))
+        p["w_dec"] = _dense(ks[20], (P, d, d), scale=0.01)
+        p["dec_bias"] = jnp.full((P, d), 0.5, F32)
+        p["u"] = jnp.zeros((P, H6, hdim), F32)
+        p["ln_x"] = jnp.ones((P, d), BF16)
+        p["w_o"] = _dense(ks[21], (P, d, d))
+    else:
+        raise ValueError(kind)
+    # FFN
+    if ffn_kind == "moe":
+        E = cfg.moe.n_experts
+        p["router"] = _dense(ks[8], (P, d, E), scale=0.02)
+        p["moe_w1"] = _dense(ks[9], (P, E, d, cfg.d_ff))
+        p["moe_w3"] = _dense(ks[10], (P, E, d, cfg.d_ff))
+        p["moe_w2"] = _dense(ks[11], (P, E, cfg.d_ff, d))
+    else:
+        p["w1"] = _dense(ks[12], (P, d, cfg.d_ff))
+        p["w3"] = _dense(ks[13], (P, d, cfg.d_ff))
+        p["w2"] = _dense(ks[14], (P, cfg.d_ff, d))
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Dict:
+    adt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.period + 4)
+    params: Dict = {
+        "embed": _dense(keys[0], (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), BF16),
+        "lm_head": _dense(keys[1], (cfg.d_model, cfg.vocab), scale=0.02),
+        "blocks": {},
+    }
+    kinds, ffns = cfg.slot_kinds(), cfg.ffn_kinds()
+    for i, (kind, fk) in enumerate(zip(kinds, ffns)):
+        params["blocks"][f"slot{i}"] = _slot_params(cfg, kind, fk, keys[2 + i])
+    if cfg.learned_pos:
+        params["pos"] = _dense(keys[-1], (cfg.max_seq, cfg.d_model),
+                               scale=0.02)
+    if cfg.is_encdec:
+        ek = jax.random.split(keys[-2], 3)
+        enc: Dict = {"ln1": jnp.ones((cfg.encoder_layers, cfg.d_model), BF16),
+                     "ln2": jnp.ones((cfg.encoder_layers, cfg.d_model), BF16)}
+        d, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        enc["wq"] = _dense(ek[0], (cfg.encoder_layers, d, H * hd))
+        enc["wk"] = _dense(ek[0], (cfg.encoder_layers, d, KV * hd))
+        enc["wv"] = _dense(ek[1], (cfg.encoder_layers, d, KV * hd))
+        enc["wo"] = _dense(ek[1], (cfg.encoder_layers, H * hd, d))
+        enc["w1"] = _dense(ek[2], (cfg.encoder_layers, d, cfg.d_ff))
+        enc["w3"] = _dense(ek[2], (cfg.encoder_layers, d, cfg.d_ff))
+        enc["w2"] = _dense(ek[2], (cfg.encoder_layers, cfg.d_ff, d))
+        params["encoder"] = enc
+        params["enc_norm"] = jnp.ones((cfg.d_model,), BF16)
+        params["enc_pos"] = _dense(keys[-1], (cfg.max_seq, cfg.d_model),
+                                   scale=0.02)
+    if adt != BF16:  # honor cfg.dtype (f32 used by consistency tests)
+        params = jax.tree.map(
+            lambda a: a.astype(adt) if a.dtype == BF16 else a, params)
+    return params
+
+
+# ============================================================ helpers
+
+def _proj_qkv(cfg, sp, x, prefix=""):
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    B, S, _ = x.shape
+    wq = sp["xq"] if prefix else sp["wq"]
+    q = jnp.einsum("bsd,de->bse", x, wq)
+    if not prefix and "bq" in sp:
+        q = q + sp["bq"]
+    return q.reshape(B, S, H, hd)
+
+
+def _kv(cfg, sp, x, prefix=""):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    B, S, _ = x.shape
+    wk = sp["xk"] if prefix else sp["wk"]
+    wv = sp["xv"] if prefix else sp["wv"]
+    k = jnp.einsum("bsd,de->bse", x, wk)
+    v = jnp.einsum("bsd,de->bse", x, wv)
+    if not prefix and "bk" in sp:
+        k, v = k + sp["bk"], v + sp["bv"]
+    return k.reshape(B, S, KV, hd), v.reshape(B, S, KV, hd)
+
+
+def _encoder(cfg: ArchConfig, params, frames, shd=None):
+    """Whisper encoder: non-causal attention stack over frame embeddings."""
+    B, S, d = frames.shape
+    x = frames + params["enc_pos"][:S][None]
+
+    def layer(x, lp):
+        if shd is not None:
+            lp = shd.encslice(lp)
+            x = shd.act(x)
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = _proj_qkv(cfg, lp, h)
+        k, v = _kv(cfg, lp, h)
+        a = block_causal_attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bse,ed->bsd", a.reshape(B, S, -1), lp["wo"])
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + gated_mlp({"w1": lp["w1"], "w3": lp["w3"], "w2": lp["w2"]}, h)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ============================================================ forward
+
+def _run_slot_full(cfg: ArchConfig, kind: str, ffn_kind: str, sp, x,
+                   positions, ctx, sstate, attn_block: int):
+    """One slot over a full sequence (train / prefill).
+
+    Returns (x, aux_loss, cache_kv dict|None, new_sstate)."""
+    B, S, d = x.shape
+    aux = jnp.zeros((), F32)
+    kv_out = None
+    new_sstate = sstate
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        q = _proj_qkv(cfg, sp, h)
+        k, v = _kv(cfg, sp, h)
+        if cfg.rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        a = block_causal_attention(q, k, v, window=cfg.sliding_window,
+                                   block=attn_block)
+        x = x + jnp.einsum("bse,ed->bsd", a.reshape(B, S, -1), sp["wo"])
+        kv_out = {"k": k, "v": v}
+        if cfg.is_encdec:  # whisper decoder cross sublayer
+            hx = rms_norm(x, sp["ln_x"], cfg.norm_eps)
+            qx = _proj_qkv(cfg, sp, hx, prefix="x")
+            kx, vx = _kv(cfg, sp, ctx, prefix="x")
+            ax = block_causal_attention(qx, kx, vx, causal=False,
+                                        block=attn_block)
+            x = x + jnp.einsum("bse,ed->bsd", ax.reshape(B, S, -1), sp["xo"])
+            kv_out["xk"], kv_out["xv"] = kx, vx  # cross-KV cached at prefill
+    elif kind == "cross":
+        q = _proj_qkv(cfg, sp, h)
+        k, v = _kv(cfg, sp, ctx)
+        a = block_causal_attention(q, k, v, causal=False, block=attn_block)
+        x = x + jnp.einsum("bse,ed->bsd", a.reshape(B, S, -1), sp["wo"])
+        kv_out = {"ck": k, "cv": v}
+    elif kind == "mamba":
+        y, new_sstate = ssm.mamba_mix(
+            sp, h, sstate, d_state=cfg.ssm.d_state,
+            head_dim=cfg.ssm.head_dim, d_conv=cfg.ssm.d_conv)
+        x = x + y
+    elif kind == "rwkv":
+        y, new_sstate = ssm.rwkv6_mix(sp, h, sstate,
+                                      head_dim=cfg.ssm.head_dim)
+        x = x + y
+    # FFN
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    if ffn_kind == "moe":
+        y, aux = moe_ffn({"router": sp["router"], "w1": sp["moe_w1"],
+                          "w3": sp["moe_w3"], "w2": sp["moe_w2"]}, h,
+                         n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+                         capacity_factor=cfg.moe.capacity_factor)
+    else:
+        y = gated_mlp({"w1": sp["w1"], "w3": sp["w3"], "w2": sp["w2"]}, h)
+    return x + y, aux, kv_out, new_sstate
+
+
+def _zero_sstate(cfg: ArchConfig, kind: str, B: int):
+    adt = jnp.dtype(cfg.dtype)
+    if kind == "mamba":
+        di = cfg.ssm.expand * cfg.d_model
+        nh = di // cfg.ssm.head_dim
+        return (jnp.zeros((B, cfg.ssm.d_conv - 1, di), adt),
+                jnp.zeros((B, nh, cfg.ssm.d_state, cfg.ssm.head_dim), F32))
+    if kind == "rwkv":
+        H = cfg.d_model // cfg.ssm.head_dim
+        return (jnp.zeros((B, 1, cfg.d_model), adt),
+                jnp.zeros((B, H, cfg.ssm.head_dim, cfg.ssm.head_dim), F32))
+    return None
+
+
+def forward(cfg: ArchConfig, params, tokens, ctx=None, *,
+            collect_cache: bool = False, seq_cap: Optional[int] = None,
+            attn_block: int = 1024, remat: bool = False, shd=None):
+    """Full-sequence forward. tokens: (B,S) int32. ctx: (B,Lc,d) stub
+    embeddings (frames/patches) for enc-dec / vlm archs.
+
+    Returns (logits or last-position hidden, aux, cache|None)."""
+    B, S = tokens.shape
+    kinds, ffns = cfg.slot_kinds(), cfg.ffn_kinds()
+    adt = jnp.dtype(cfg.dtype)
+    embed_w = params["embed"] if shd is None else shd.embed(params["embed"])
+    x = embed_w[tokens].astype(adt)
+    if shd is not None:
+        x = shd.act(x)
+    if cfg.learned_pos:
+        x = x + params["pos"][:S][None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.is_encdec:
+        ctx = _encoder(cfg, params, ctx, shd)
+
+    def period(carry, pslice):
+        # NOTE: recurrent (mamba/rwkv) state is per-LAYER: every period slot
+        # starts its own zero state over the full sequence; final states are
+        # emitted per period (ys) so the decode cache gets a (P, ...) stack.
+        x, aux = carry
+        kv_caches = {}
+        for i, (kind, fk) in enumerate(zip(kinds, ffns)):
+            sp = pslice[f"slot{i}"]
+            if shd is not None:
+                sp = shd.pslice(f"slot{i}", sp)
+                x = shd.act(x)
+            x, a, kv, st2 = _run_slot_full(cfg, kind, fk, sp, x, positions,
+                                           ctx, None, attn_block)
+            aux = aux + a
+            if collect_cache and kind in ("mamba", "rwkv"):
+                kv_caches[f"slot{i}"] = st2
+            elif collect_cache and kv is not None:
+                kv_caches[f"slot{i}"] = kv
+        return (x, aux), (kv_caches if collect_cache else None)
+
+    period_fn = jax.checkpoint(period) if remat else period
+    (x, aux), kv_stacked = jax.lax.scan(
+        period_fn, (x, jnp.zeros((), F32)), params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head_w = params["lm_head"] if shd is None else shd.head(params["lm_head"])
+
+    if not collect_cache:
+        logits = jnp.einsum("bsd,dv->bsv", x, head_w)
+        return logits, aux, None
+
+    # prefill: build the decode cache
+    assert seq_cap is not None and seq_cap >= S
+    cache: Dict = {"len": jnp.full((), S, jnp.int32)}
+    for i, kind in enumerate(kinds):
+        name = f"slot{i}"
+        if kind == "attn":
+            kv = kv_stacked[name]
+            k, v = kv["k"], kv["v"]  # (P,B,S,KV,hd)
+            W = cfg.sliding_window
+            cap = min(seq_cap, W) if W else seq_cap
+            kc = jnp.zeros((cfg.n_periods, B, cap, cfg.n_kv_heads, cfg.hd),
+                           adt)
+            vc = jnp.zeros_like(kc)
+            if W and S > W:
+                k, v = k[:, :, -W:], v[:, :, -W:]
+            s_eff = min(S, cap)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k[:, :, :s_eff].astype(adt), 0, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v[:, :, :s_eff].astype(adt), 0, axis=2)
+            cache[name] = {"k": kc, "v": vc}
+            if "xk" in kv:  # whisper cross-KV, fixed at prefill
+                cache[name]["xk"] = kv["xk"].astype(adt)
+                cache[name]["xv"] = kv["xv"].astype(adt)
+        elif kind in ("mamba", "rwkv"):
+            cache[name] = kv_stacked[name]  # (P, ...) final layer states
+        elif kind == "cross":
+            kv = kv_stacked[name]
+            cache[name] = {"ck": kv["ck"].astype(adt),
+                           "cv": kv["cv"].astype(adt)}
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head_w)
+    return logits, aux, cache
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, attn_block: int = 1024,
+            aux_coef: float = 0.01, remat: bool = False, shd=None):
+    """Causal LM loss (next-token xent, f32) + MoE load-balance aux."""
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    ctx = batch.get("ctx")
+    logits, aux, _ = forward(cfg, params, tokens, ctx,
+                             attn_block=attn_block, remat=remat, shd=shd)
+    logits = logits.astype(F32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1).squeeze(-1)
+    mask = (targets >= 0).astype(F32)
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + aux_coef * aux
+
+
+# ============================================================ decode
+
+def init_cache(cfg: ArchConfig, B: int, seq_cap: int,
+               ctx_len: int = 0) -> Dict:
+    """Zero decode cache for a given batch and context capacity (also used
+    abstractly via eval_shape for the dry-run input specs)."""
+    kinds = cfg.slot_kinds()
+    P = cfg.n_periods
+    adt = jnp.dtype(cfg.dtype)
+    cache: Dict = {"len": jnp.zeros((), jnp.int32)}
+    for i, kind in enumerate(kinds):
+        name = f"slot{i}"
+        if kind == "attn":
+            W = cfg.sliding_window
+            cap = min(seq_cap, W) if W else seq_cap
+            cache[name] = {
+                "k": jnp.zeros((P, B, cap, cfg.n_kv_heads, cfg.hd), adt),
+                "v": jnp.zeros((P, B, cap, cfg.n_kv_heads, cfg.hd), adt)}
+            if cfg.is_encdec:
+                cache[name]["xk"] = jnp.zeros(
+                    (P, B, ctx_len, cfg.n_kv_heads, cfg.hd), adt)
+                cache[name]["xv"] = jnp.zeros_like(cache[name]["xk"])
+        elif kind == "cross":
+            cache[name] = {
+                "ck": jnp.zeros((P, B, ctx_len, cfg.n_kv_heads, cfg.hd),
+                                adt),
+                "cv": jnp.zeros((P, B, ctx_len, cfg.n_kv_heads, cfg.hd),
+                                adt)}
+        elif kind in ("mamba", "rwkv"):
+            z = _zero_sstate(cfg, kind, B)
+            cache[name] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (P,) + a.shape).copy(), z)
+    return cache
+
+
+def _run_slot_decode(cfg: ArchConfig, kind: str, ffn_kind: str, sp, x,
+                     pos, cslice):
+    """One slot for a single new token. x: (B,1,d)."""
+    B = x.shape[0]
+    aux = jnp.zeros((), F32)
+    new_c = cslice
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        q = _proj_qkv(cfg, sp, h)
+        k, v = _kv(cfg, sp, h)
+        if cfg.rope:
+            pvec = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+            q = rope(q, pvec, cfg.rope_theta)
+            k = rope(k, pvec, cfg.rope_theta)
+        W = cfg.sliding_window
+        cap = cslice["k"].shape[1]  # (B, cap, KV, hd): period dim stripped
+        widx = pos % cap if W else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cslice["k"], k.astype(cslice["k"].dtype), widx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cslice["v"], v.astype(cslice["v"].dtype), widx, axis=1)
+        a = decode_attention(q, kc, vc, pos + 1, window=W)
+        x = x + jnp.einsum("bse,ed->bsd",
+                           a.reshape(B, 1, -1).astype(x.dtype), sp["wo"])
+        new_c = dict(cslice)
+        new_c.update({"k": kc, "v": vc})
+        if cfg.is_encdec:  # cross-KV was cached at prefill
+            hx = rms_norm(x, sp["ln_x"], cfg.norm_eps)
+            qx = _proj_qkv(cfg, sp, hx, prefix="x")
+            kx, vx = cslice["xk"], cslice["xv"]
+            ax = decode_attention(qx, kx, vx, jnp.full((), kx.shape[1]))
+            x = x + jnp.einsum("bse,ed->bsd",
+                               ax.reshape(B, 1, -1).astype(x.dtype), sp["xo"])
+    elif kind == "cross":
+        q = _proj_qkv(cfg, sp, h)
+        k, v = cslice["ck"], cslice["cv"]  # cached at prefill
+        a = decode_attention(q, k, v, jnp.full((), k.shape[1]))
+        x = x + jnp.einsum("bse,ed->bsd",
+                           a.reshape(B, 1, -1).astype(x.dtype), sp["wo"])
+        new_c = cslice
+    elif kind == "mamba":
+        y, new_c = ssm.mamba_decode(sp, h, cslice, d_state=cfg.ssm.d_state,
+                                    head_dim=cfg.ssm.head_dim,
+                                    d_conv=cfg.ssm.d_conv)
+        x = x + y
+    elif kind == "rwkv":
+        y, new_c = ssm.rwkv6_decode(sp, h, cslice,
+                                    head_dim=cfg.ssm.head_dim)
+        x = x + y
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    if ffn_kind == "moe":
+        y, aux = moe_ffn({"router": sp["router"], "w1": sp["moe_w1"],
+                          "w3": sp["moe_w3"], "w2": sp["moe_w2"]}, h,
+                         n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+                         capacity_factor=cfg.moe.capacity_factor)
+    else:
+        y = gated_mlp({"w1": sp["w1"], "w3": sp["w3"], "w2": sp["w2"]}, h)
+    return x + y, new_c
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, shd=None):
+    """One serving step: token (B,1) int32 + cache -> (logits (B,V), cache)."""
+    B = token.shape[0]
+    kinds, ffns = cfg.slot_kinds(), cfg.ffn_kinds()
+    pos = cache["len"]
+    adt = jnp.dtype(cfg.dtype)
+    embed_w = params["embed"] if shd is None else shd.embed(params["embed"])
+    x = embed_w[token[:, 0]][:, None].astype(adt)
+    if cfg.learned_pos:
+        x = x + params["pos"][pos % params["pos"].shape[0]][None, None]
+
+    def period(carry, xs):
+        x = carry
+        pslice, cslice = xs
+        new_cslice = {}
+        for i, (kind, fk) in enumerate(zip(kinds, ffns)):
+            name = f"slot{i}"
+            sp = pslice[name]
+            if shd is not None:
+                sp = shd.pslice(name, sp)
+            x, nc = _run_slot_decode(cfg, kind, fk, sp, x, pos,
+                                     cslice.get(name))
+            if name in cslice:
+                new_cslice[name] = nc
+        return x, new_cslice
+
+    scan_cache = {k: v for k, v in cache.items() if k != "len"}
+    x, new_scan_cache = jax.lax.scan(
+        period, x, (params["blocks"], scan_cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head_w = params["lm_head"] if shd is None else shd.head(params["lm_head"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], head_w)
+    new_cache = dict(cache)
+    new_cache.update(new_scan_cache)
+    new_cache["len"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params, tokens, ctx=None, *,
+            seq_cap: int, attn_block: int = 1024, shd=None):
+    """Prefill: full forward + cache build. Returns (last_logits, cache)."""
+    return_vals = forward(cfg, params, tokens, ctx, collect_cache=True,
+                          seq_cap=seq_cap, attn_block=attn_block, shd=shd)
+    logits, aux, cache = return_vals
+    return logits, cache

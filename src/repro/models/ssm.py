@@ -1,0 +1,265 @@
+"""State-space mixers: Mamba (SSD/chunked form) and RWKV6 (Finch), pure JAX.
+
+Hardware adaptation (DESIGN.md §2): the reference CUDA implementations are
+sequential selective scans (one fused kernel over time). On TPU we use the
+chunked/matmul formulation — intra-chunk terms become batched matmuls on the
+MXU, inter-chunk state is carried by a short ``lax.scan`` over S/chunk steps
+— mathematically equivalent (Mamba-2's SSD identity; fla's chunked wkv6),
+MXU-friendly, and with O(1) decode state.
+
+Shapes: x (B,S,d). Both mixers expose train/prefill form (full sequence +
+final state) and a single-step decode form.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+CHUNK = 64
+_LOGW_MIN = -0.5   # mamba per-token log-decay clamp
+_LOGW_MIN_RWKV = -0.25  # rwkv: exp(-cumsum) appears; tighter bound for f32
+
+
+# =========================================================== Mamba (SSD)
+
+def mamba_mix(params, x, state: Optional[Tuple] = None, *,
+              d_state: int, head_dim: int, d_conv: int, chunk: int = CHUNK):
+    """Chunked SSD mixer. x: (B,S,d). state: (conv_state, ssm_state) or None.
+
+    Returns (y (B,S,d), new_state). ssm_state: (B,nh,ds,hp); conv_state:
+    (B, d_conv-1, di)."""
+    B, S, d = x.shape
+    di = params["w_in"].shape[1] // 2
+    nh = di // head_dim
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di)
+    bcdt = jnp.einsum("bsd,de->bse", x, params["w_bcdt"])
+    B_, C_, dt = (bcdt[..., :d_state], bcdt[..., d_state:2 * d_state],
+                  bcdt[..., 2 * d_state:])
+    # causal conv over xi
+    conv_w = params["conv"]                                # (d_conv, di)
+    if state is None:
+        pad = jnp.zeros((B, d_conv - 1, di), xi.dtype)
+    else:
+        pad = state[0]
+    xi_p = jnp.concatenate([pad, xi], axis=1)
+    new_conv = xi_p[:, -(d_conv - 1):, :] if d_conv > 1 else pad
+    xi = sum(xi_p[:, k:k + S, :] * conv_w[k][None, None]
+             for k in range(d_conv))
+    xi = jax.nn.silu(xi)
+
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])   # (B,S,nh)
+    a_log = -jnp.exp(params["a_log"].astype(F32))              # (nh,) < 0
+    logw = jnp.maximum(dt * a_log[None, None], _LOGW_MIN)      # (B,S,nh)
+    # matmul stream stays bf16 (f32 full-width tensors double the live
+    # activation set — §Perf cell C); decay/state math stays f32
+    v = (xi.reshape(B, S, nh, head_dim)
+         * dt[..., None].astype(xi.dtype))                     # (B,S,nh,hp)
+    k = B_                                                     # (B,S,ds)
+    q = C_
+
+    y, new_ssm = _chunked_decay_attn(
+        q, k, v, logw, chunk=chunk,
+        state=None if state is None else state[1])
+    y = y + xi.reshape(B, S, nh, head_dim) \
+        * params["d_skip"].astype(xi.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, (new_conv, new_ssm)
+
+
+def _chunked_decay_attn(q, k, v, logw, *, chunk, state=None):
+    """Linear attention with scalar-per-head decay (SSD identity).
+
+    q,k: (B,S,ds); v: (B,S,nh,hp); logw: (B,S,nh) — per-head log decay.
+    h_t = exp(logw_t) h_{t-1} + k_t ⊗ v_t;  y_t = q_t · h_t.
+    Returns (y (B,S,nh,hp), final state (B,nh,ds,hp))."""
+    B, S, ds = q.shape
+    nh, hp = v.shape[2], v.shape[3]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    T = S // chunk
+    # leading-T layout for the chunk scan
+    qc = q.reshape(B, T, chunk, ds).transpose(1, 0, 2, 3)
+    kc = k.reshape(B, T, chunk, ds).transpose(1, 0, 2, 3)
+    vc = v.reshape(B, T, chunk, nh, hp).transpose(1, 0, 2, 3, 4)
+    lw = jnp.cumsum(logw.reshape(B, T, chunk, nh), axis=2) \
+        .transpose(1, 0, 2, 3)
+    if state is None:
+        state = jnp.zeros((B, nh, ds, hp), F32)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+
+    def step(h, xs):
+        """ONE chunk: intra (i,j) term + inter (state) term + state update.
+        The (B, c, c, nh) decay tensor lives only inside the step —
+        materializing it for all T chunks at once costs T x the live memory
+        (34 GB per jamba layer; see EXPERIMENTS §Perf cell C)."""
+        qt, kt, vt, lwt = xs              # (B,c,ds),(B,c,ds),(B,c,nh,hp)
+        att = jnp.einsum("bis,bjs->bij", qt, kt,
+                         preferred_element_type=F32)
+        ddec = lwt[:, :, None, :] - lwt[:, None, :, :]    # (B,i,j,nh)
+        w_ij = jnp.where(mask[None, :, :, None], jnp.exp(ddec), 0.0)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", att, w_ij,
+                       vt.astype(F32))
+        y = y + jnp.einsum("bis,bih,bhsp->bihp", qt.astype(F32),
+                           jnp.exp(lwt), h)
+        kdec = jnp.exp(lwt[:, -1:, :] - lwt)              # (B,c,nh)
+        h = h * jnp.exp(lwt[:, -1, :])[:, :, None, None] \
+            + jnp.einsum("bjs,bjh,bjhp->bhsp", kt.astype(F32), kdec,
+                         vt.astype(F32))
+        return h, jnp.asarray(y, vt.dtype)
+
+    state_f, ys = jax.lax.scan(step, state, (qc, kc, vc, lw))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hp)
+    return y, state_f
+
+
+def mamba_decode(params, x, state, *, d_state: int, head_dim: int,
+                 d_conv: int):
+    """Single-token step. x: (B,1,d)."""
+    B, _, d = x.shape
+    di = params["w_in"].shape[1] // 2
+    nh = di // head_dim
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    bcdt = jnp.einsum("bsd,de->bse", x, params["w_bcdt"])
+    B_, C_, dt = (bcdt[..., :d_state], bcdt[..., d_state:2 * d_state],
+                  bcdt[..., 2 * d_state:])
+    conv_state, h = state
+    xi_p = jnp.concatenate([conv_state, xi], axis=1)        # (B,d_conv,di)
+    new_conv = xi_p[:, 1:, :]
+    conv_w = params["conv"]
+    xi = sum(xi_p[:, k:k + 1, :] * conv_w[k][None, None]
+             for k in range(conv_w.shape[0]))
+    xi = jax.nn.silu(xi)
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])
+    a_log = -jnp.exp(params["a_log"].astype(F32))
+    w = jnp.exp(jnp.maximum(dt * a_log[None, None], _LOGW_MIN))  # (B,1,nh)
+    v = xi.reshape(B, 1, nh, head_dim).astype(F32) * dt[..., None]
+    h = h * w[:, 0, :, None, None] \
+        + jnp.einsum("bs,bhp->bhsp", B_[:, 0].astype(F32), v[:, 0])
+    y = jnp.einsum("bs,bhsp->bhp", C_[:, 0].astype(F32), h)[:, None]
+    y = y + xi.reshape(B, 1, nh, head_dim).astype(F32) \
+        * params["d_skip"].astype(F32)[None, None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"]), (new_conv, h)
+
+
+# ================================================================ RWKV6
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,1,d) last token of the previous segment."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_mix(params, x, state: Optional[Tuple] = None, *,
+              head_dim: int, chunk: int = CHUNK):
+    """Chunked WKV6: data-dependent per-channel decay linear attention.
+
+    x: (B,S,d); state = (shift (B,1,d), wkv (B,H,dk,dv)).
+    Returns (y, new_state)."""
+    B, S, d = x.shape
+    H = d // head_dim
+    dk = dv = head_dim
+    prev = (jnp.zeros((B, 1, d), x.dtype) if state is None else state[0])
+    wkv0 = (jnp.zeros((B, H, dk, dv), F32) if state is None else state[1])
+    xs = _token_shift(x, prev)
+
+    def mix(mu):
+        return x + (xs - x) * mu[None, None]
+
+    r = jnp.einsum("bsd,de->bse", mix(params["mu_r"]), params["w_r"])
+    k = jnp.einsum("bsd,de->bse", mix(params["mu_k"]), params["w_k"])
+    v = jnp.einsum("bsd,de->bse", mix(params["mu_v"]), params["w_v"])
+    g = jnp.einsum("bsd,de->bse", mix(params["mu_g"]), params["w_g"])
+    wr = jnp.einsum("bsd,de->bse", mix(params["mu_w"]), params["w_dec"]) \
+        + params["dec_bias"]
+    # data-dependent decay w ∈ (0,1): log w = −exp(wr), clamped for chunk math
+    logw = jnp.maximum(-jnp.exp(wr.astype(F32)), _LOGW_MIN_RWKV)  # (B,S,H*dk)
+
+    rh = r.reshape(B, S, H, dk).astype(F32)
+    kh = k.reshape(B, S, H, dk).astype(F32)
+    vh = v.reshape(B, S, H, dv).astype(F32)
+    lwh = logw.reshape(B, S, H, dk)
+    u = params["u"].astype(F32)                               # (H,dk)
+
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    T = S // chunk
+    # leading-T layout for the chunk scan
+    rc = rh.reshape(B, T, chunk, H, dk).transpose(1, 0, 2, 3, 4)
+    kc = kh.reshape(B, T, chunk, H, dk).transpose(1, 0, 2, 3, 4)
+    vc = vh.reshape(B, T, chunk, H, dv).transpose(1, 0, 2, 3, 4)
+    lwc = lwh.reshape(B, T, chunk, H, dk).transpose(1, 0, 2, 3, 4)
+    mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+
+    def step(h, xs_):
+        """ONE chunk (intra + inter + state) — the (B,c,c,H) attention
+        tensor lives only inside the step (see §Perf cell C)."""
+        rt, kt, vt, lwt_tok = xs_
+        lw = jnp.cumsum(lwt_tok, axis=1)                 # (B,c,H,dk)
+        # decay applies strictly between j and i (exclusive of both):
+        # for j<i: w(j,i) = exp(lw_{i-1} - lw_j) = exp((lw_i - logw_i) - lw_j)
+        r_dec = rt * jnp.exp(lw - lwt_tok)               # bounded ≤ r
+        k_dec = kt * jnp.exp(-lw)                        # bounded ≤ e^{16}
+        att = jnp.einsum("bihk,bjhk->bijh", r_dec, k_dec)
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        diag = jnp.einsum("bihk,hk,bihk->bih", rt, u, kt)
+        y = jnp.einsum("bijh,bjhv->bihv", att, vt) + diag[..., None] * vt
+        y = y + jnp.einsum("bihk,bhkv->bihv", r_dec, h)
+        kdec = kt * jnp.exp(lw[:, -1:, :, :] - lw)
+        h = h * jnp.exp(lw[:, -1])[:, :, :, None] \
+            + jnp.einsum("bjhk,bjhv->bhkv", kdec, vt)
+        return h, y
+
+    state_f, ys = jax.lax.scan(step, wkv0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dv)
+    # per-head group norm, then output gating
+    mu2 = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(mu2 + 1e-5)
+         * params["ln_x"].reshape(H, dv)[None, None]).reshape(B, S, d)
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_o"])
+    new_shift = x[:, -1:, :]
+    return out, (new_shift, state_f)
+
+
+def rwkv6_decode(params, x, state, *, head_dim: int):
+    """Single-token WKV6 step. x: (B,1,d)."""
+    B, _, d = x.shape
+    H = d // head_dim
+    dk = dv = head_dim
+    prev, h = state
+    xs = prev
+
+    def mix(mu):
+        return x + (xs - x) * mu[None, None]
+
+    r = jnp.einsum("bsd,de->bse", mix(params["mu_r"]), params["w_r"])
+    k = jnp.einsum("bsd,de->bse", mix(params["mu_k"]), params["w_k"])
+    v = jnp.einsum("bsd,de->bse", mix(params["mu_v"]), params["w_v"])
+    g = jnp.einsum("bsd,de->bse", mix(params["mu_g"]), params["w_g"])
+    wr = jnp.einsum("bsd,de->bse", mix(params["mu_w"]), params["w_dec"]) \
+        + params["dec_bias"]
+    w = jnp.exp(jnp.maximum(-jnp.exp(wr.astype(F32)), _LOGW_MIN_RWKV))
+    rh = r.reshape(B, H, dk).astype(F32)
+    kh = k.reshape(B, H, dk).astype(F32)
+    vh = v.reshape(B, H, dv).astype(F32)
+    wh = w.reshape(B, H, dk)
+    u = params["u"].astype(F32)
+    kv = kh[..., :, None] * vh[..., None, :]                  # (B,H,dk,dv)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, h + u[None, :, :, None] * kv)
+    h = h * wh[..., None] + kv
+    y = y.reshape(B, 1, H, dv)
+    mu2 = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(mu2 + 1e-5)
+         * params["ln_x"].reshape(H, dv)[None, None]).reshape(B, 1, d)
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_o"])
+    return out, (x, h)

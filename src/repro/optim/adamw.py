@@ -1,0 +1,90 @@
+"""AdamW with cosine schedule, global-norm clipping and configurable state
+dtype — pure JAX (no optax). Optimizer states inherit the parameters'
+sharding (FSDP ⇒ ZeRO: states live sharded over 'data').
+
+``state_dtype='bfloat16'`` halves m/v memory — the knob big-arch configs use
+(jamba-398B on one pod; see EXPERIMENTS.md §Dry-run notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWCfg:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"   # "bfloat16" halves optimizer memory
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    mu: Any               # pytree like params
+    nu: Any
+
+
+def init_opt_state(params, cfg: AdamWCfg) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def lr_at(cfg: AdamWCfg, step):
+    step = step.astype(F32)
+    warm = cfg.lr_peak * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) \
+        * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWCfg):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m32 = b1 * m.astype(F32) + (1 - b1) * g
+        v32 = b2 * v.astype(F32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        newp = p.astype(F32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    newm = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    newv = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm, "clip_scale": scale}
+    return newp, OptState(step, newm, newv), metrics

@@ -1,0 +1,79 @@
+"""Beyond-paper extensions: three-way diff (paper §5.5.1, not exposed by
+MatrixOne) and CELL-level conflict resolution (paper §5.5.3, future work)."""
+import numpy as np
+import pytest
+
+from repro.core import (Column, CType, ConflictMode, Engine,
+                        MergeConflictError, Schema, three_way_merge)
+from repro.core.merge import (TW_BOTH_DIFFER, TW_BOTH_SAME, TW_SOURCE_ONLY,
+                              TW_TARGET_ONLY, three_way_diff)
+
+SCH = Schema((Column("k", CType.I64), Column("a", CType.F64),
+              Column("b", CType.LOB)), primary_key=("k",))
+
+
+def _setup():
+    e = Engine()
+    e.create_table("T", SCH)
+    e.insert("T", {"k": np.arange(10), "a": np.ones(10),
+                   "b": [b"x%d" % i for i in range(10)]})
+    sn1 = e.create_snapshot("sn1", "T")
+    e.clone_table("C", "sn1")
+    return e, sn1
+
+
+def test_three_way_diff_classification():
+    e, sn1 = _setup()
+    e.update_by_keys("T", {"k": [1], "a": [5.0], "b": [b"x1"]})  # target only
+    e.update_by_keys("C", {"k": [2], "a": [6.0], "b": [b"x2"]})  # source only
+    e.update_by_keys("T", {"k": [3], "a": [7.0], "b": [b"x3"]})  # both same
+    e.update_by_keys("C", {"k": [3], "a": [7.0], "b": [b"x3"]})
+    e.update_by_keys("T", {"k": [4], "a": [8.0], "b": [b"x4"]})  # both differ
+    e.update_by_keys("C", {"k": [4], "a": [9.0], "b": [b"x4"]})
+    twd = three_way_diff(e, sn1, e.current_snapshot("T"),
+                         e.current_snapshot("C"))
+    assert twd.k == 4
+    assert sorted(twd.status.tolist()) == [TW_TARGET_ONLY, TW_SOURCE_ONLY,
+                                           TW_BOTH_SAME, TW_BOTH_DIFFER]
+
+
+def test_cell_merge_combines_disjoint_column_edits():
+    e, sn1 = _setup()
+    e.update_by_keys("T", {"k": [3], "a": [9.0], "b": [b"x3"]})   # col a
+    e.update_by_keys("C", {"k": [3], "a": [1.0], "b": [b"NEW"]})  # col b
+    rep = three_way_merge(e, "T", e.current_snapshot("C"), base=sn1,
+                          mode=ConflictMode.CELL)
+    assert rep.cell_merged == 1
+    batch, _ = e.table("T").scan()
+    i = int(np.flatnonzero(batch["k"] == 3)[0])
+    assert batch["a"][i] == 9.0 and batch["b"][i] == b"NEW"
+    assert e.table("T").count() == 10
+
+
+def test_cell_merge_fails_on_same_cell_divergence():
+    e, sn1 = _setup()
+    e.update_by_keys("T", {"k": [4], "a": [100.0], "b": [b"x4"]})
+    e.update_by_keys("C", {"k": [4], "a": [200.0], "b": [b"x4"]})
+    with pytest.raises(MergeConflictError):
+        three_way_merge(e, "T", e.current_snapshot("C"), base=sn1,
+                        mode=ConflictMode.CELL)
+
+
+def test_cell_merge_fails_on_del_vs_upd():
+    e, sn1 = _setup()
+    e.delete_by_keys("T", {"k": np.asarray([5])})
+    e.update_by_keys("C", {"k": [5], "a": [3.0], "b": [b"z"]})
+    with pytest.raises(MergeConflictError):
+        three_way_merge(e, "T", e.current_snapshot("C"), base=sn1,
+                        mode=ConflictMode.CELL)
+
+
+def test_cell_merge_requires_pk_and_base():
+    e = Engine()
+    e.create_table("N", Schema(SCH.columns, primary_key=None))
+    e.insert("N", {"k": [1], "a": [1.0], "b": [b"q"]})
+    s = e.create_snapshot("s", "N")
+    e.clone_table("M", "s")
+    with pytest.raises(ValueError):
+        three_way_merge(e, "N", e.current_snapshot("M"),
+                        mode=ConflictMode.CELL)

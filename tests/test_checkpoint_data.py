@@ -1,0 +1,130 @@
+"""Versioned checkpointing, fault tolerance, and the data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, VcsCheckpointer
+from repro.core import Engine, snapshot_diff
+from repro.data import (BatchPipeline, PinnedDataset, PipelineCfg,
+                        add_samples, create_token_table, synth_corpus)
+
+
+def _state(seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": (jax.random.normal(k, (64, 64)) * scale),
+            "b": jnp.arange(8, dtype=jnp.float32),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _eq(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_ckpt_save_restore_roundtrip():
+    e = Engine()
+    ck = VcsCheckpointer(e)
+    s0 = _state()
+    ck.save(s0, 0)
+    s1 = _state(seed=1)
+    ck.save(s1, 1)
+    got0 = ck.restore("step-0", jax.tree.map(jnp.zeros_like, s0))
+    got1 = ck.restore("step-1", jax.tree.map(jnp.zeros_like, s1))
+    assert _eq(got0, s0) and _eq(got1, s1)
+
+
+def test_ckpt_rollback_and_fork():
+    e = Engine()
+    ck = VcsCheckpointer(e)
+    s0, s1 = _state(0), _state(1)
+    ck.save(s0, 0)
+    ck.save(s1, 1)
+    ck.rollback("step-0")                       # instant revert
+    cur = ck.restore(e.current_snapshot("ckpt"), jax.tree.map(
+        jnp.zeros_like, s0))
+    assert _eq(cur, s0)
+    fork = ck.fork("ckpt_ft", "step-1")         # instant fine-tune fork
+    got = fork.restore(e.current_snapshot("ckpt_ft"),
+                       jax.tree.map(jnp.zeros_like, s1))
+    assert _eq(got, s1)
+
+
+def test_ckpt_incremental_diff_counts_changed_shards():
+    e = Engine()
+    ck = VcsCheckpointer(e)
+    s0 = _state()
+    ck.save(s0, 0)
+    s1 = dict(s0)
+    s1["b"] = s0["b"] + 1                       # change ONE tensor
+    ck.save(s1, 1)
+    changed = ck.changed_shards("step-0", "step-1")
+    total = len(e.table("ckpt").scan()[0]["shard_id"])
+    assert 0 < changed <= 2 * 2                 # tiny tensor: few shards
+    assert changed < total                      # unchanged shards cancel
+
+
+def test_manager_nan_rollback():
+    e = Engine()
+    cm = CheckpointManager(e, every=1, keep=2)
+    s = _state()
+    cm.maybe_save(s, 0)
+    assert not cm.healthy(float("nan"))
+    bad = jax.tree.map(lambda a: a * jnp.nan, s)
+    recovered = cm.recover(bad)
+    assert _eq(recovered, s)
+
+
+def test_trainer_end_to_end_with_fault():
+    from repro.launch.train import train_loop
+    state, losses, engine = train_loop(
+        "qwen1.5-0.5b", steps=30, seq_len=32, global_batch=4,
+        ckpt_every=5, inject_fault_at=12, log_every=100)
+    assert len(losses) >= 30              # all owed steps eventually done
+    assert all(np.isfinite(l) for l in losses)
+    # actually learns (synthetic corpus has repeating structure)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+# ------------------------------------------------------------- pipeline
+
+def test_pipeline_deterministic_and_resumable():
+    e = Engine()
+    create_token_table(e, "c")
+    synth_corpus(e, "c", n_samples=32, sample_len=33, vocab=100)
+    snap = e.create_snapshot("pin", "c")
+    ds = PinnedDataset(e, snap)
+    p1 = BatchPipeline(ds, PipelineCfg(seq_len=32, global_batch=4, seed=7))
+    p2 = BatchPipeline(ds, PipelineCfg(seq_len=32, global_batch=4, seed=7))
+    b_a = p1.batch_at(5)
+    b_b = p2.batch_at(5)                  # fresh pipeline, same step
+    assert np.array_equal(b_a["tokens"], b_b["tokens"])
+    assert np.array_equal(b_a["targets"], b_b["targets"])
+
+
+def test_pipeline_host_sharding_partitions_global_batch():
+    e = Engine()
+    create_token_table(e, "c")
+    synth_corpus(e, "c", n_samples=32, sample_len=33, vocab=100)
+    snap = e.create_snapshot("pin", "c")
+    ds = PinnedDataset(e, snap)
+    full = BatchPipeline(ds, PipelineCfg(seq_len=32, global_batch=8)).batch_at(3)
+    parts = [BatchPipeline(ds, PipelineCfg(seq_len=32, global_batch=8,
+                                           host_index=i, host_count=4)
+                           ).batch_at(3) for i in range(4)]
+    stacked = np.concatenate([p["tokens"] for p in parts])
+    assert np.array_equal(stacked, full["tokens"])
+
+
+def test_pinned_snapshot_isolates_training_from_edits():
+    e = Engine()
+    create_token_table(e, "c")
+    synth_corpus(e, "c", n_samples=16, sample_len=33, vocab=100)
+    snap = e.create_snapshot("pin", "c")
+    ds = PinnedDataset(e, snap)
+    before = ds.n
+    add_samples(e, "c", np.arange(1000, 1010),
+                [np.arange(33, dtype=np.uint32)] * 10)
+    ds2 = PinnedDataset(e, snap)          # re-read the SAME pin
+    assert ds2.n == before                # edits invisible to the pin
+    assert PinnedDataset(e, e.current_snapshot("c")).n == before + 10

@@ -1,0 +1,314 @@
+"""SNAPSHOT DIFF / MERGE semantics: the paper's §3 scenarios, explicitly."""
+import numpy as np
+import pytest
+
+from repro.core import (Column, CType, ConflictMode, Engine,
+                        MergeConflictError, Schema, snapshot_diff, sql_diff,
+                        three_way_merge, two_way_merge)
+from repro.core.compaction import compact_objects
+
+SCH = Schema((Column("a", CType.I64), Column("b", CType.F64),
+              Column("c", CType.LOB)), primary_key=("a",))
+SCH_NOPK = Schema(SCH.columns, primary_key=None)
+
+
+def _b(keys, vals=None, docs=None):
+    keys = np.asarray(keys, np.int64)
+    return {"a": keys,
+            "b": np.asarray(vals if vals is not None else keys * 1.0),
+            "c": docs if docs is not None else [b"c%d" % k for k in keys]}
+
+
+def _table_rows(e, name):
+    batch, _ = e.table(name).scan()
+    order = np.argsort(batch["a"], kind="stable")
+    return (batch["a"][order].tolist(), batch["b"][order].tolist(),
+            [batch["c"][i] for i in order])
+
+
+def _setup(pk=True, n=20):
+    e = Engine()
+    e.create_table("T", SCH if pk else SCH_NOPK)
+    e.insert("T", _b(np.arange(n)))
+    sn1 = e.create_snapshot("sn1", "T")
+    e.clone_table("TClone", "sn1")
+    return e, sn1
+
+
+# ----------------------------------------------------------------- diff
+
+def test_diff_empty_between_identical():
+    e, sn1 = _setup()
+    d = snapshot_diff(e.store, sn1, e.current_snapshot("TClone"))
+    assert d.is_empty()
+
+
+def test_diff_matches_sql_baseline_and_scans_less():
+    e, sn1 = _setup(n=1000)
+    e.update_by_keys("T", _b([5, 6], vals=[50.0, 60.0]))
+    e.insert("TClone", _b([2000]))
+    e.delete_by_keys("TClone", {"a": np.asarray([10])})
+    a = e.current_snapshot("T")
+    b = e.current_snapshot("TClone")
+    d1 = snapshot_diff(e.store, a, b)
+    d2 = sql_diff(e.store, a, b)
+    def norm(d):
+        o = np.lexsort((d.row_hi, d.row_lo))
+        return d.row_lo[o].tolist(), d.diff_cnt[o].tolist()
+    assert norm(d1) == norm(d2)
+    assert d1.stats.rows_scanned < d2.stats.rows_scanned / 10
+    # 6 groups: per updated key (5,6) one −1 (T's new value) and one +1
+    # (old value still in TClone); +1 for the clone insert; −1 for the
+    # clone-deleted row still visible in T
+    assert sorted(d1.diff_cnt.tolist()) == [-1, -1, -1, 1, 1, 1]
+
+
+def test_diff_payload_gather():
+    e, sn1 = _setup()
+    e.update_by_keys("TClone", _b([3], vals=[99.0], docs=[b"new"]))
+    d = snapshot_diff(e.store, e.current_snapshot("T"),
+                      e.current_snapshot("TClone"))
+    assert d.n_groups == 2
+    payload = d.payload(e.store)
+    got = sorted(zip(payload["a"].tolist(), payload["b"].tolist()))
+    assert got == [(3, 3.0), (3, 99.0)]
+
+
+def test_diff_requires_compatible_schema():
+    e = Engine()
+    e.create_table("A", SCH)
+    e.create_table("B", SCH_NOPK)
+    with pytest.raises(ValueError):
+        snapshot_diff(e.store, e.current_snapshot("A"),
+                      e.current_snapshot("B"))
+
+
+# ------------------------------------------- the six PK scenarios (§3)
+
+def test_scenario_1_insert_only_in_target():
+    e, sn1 = _setup()
+    e.insert("T", _b([100]))                      # only T inserted
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    assert 100 in _table_rows(e, "T")[0]          # kept
+
+
+def test_scenario_2_insert_only_in_source():
+    e, sn1 = _setup()
+    e.insert("TClone", _b([100]))
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0 and rep.inserted == 1
+    assert 100 in _table_rows(e, "T")[0]
+
+
+def test_scenario_3_both_insert_same_key():
+    e, sn1 = _setup()
+    e.insert("T", _b([100], vals=[1.0]))
+    e.insert("TClone", _b([100], vals=[2.0]))
+    with pytest.raises(MergeConflictError):
+        three_way_merge(e, "T", e.current_snapshot("TClone"),
+                        base=sn1, mode=ConflictMode.FAIL)
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.SKIP)
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(100)] == 1.0           # SKIP keeps target
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.ACCEPT)
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(100)] == 2.0           # ACCEPT takes source
+    # both insert IDENTICAL values -> cancels, no conflict
+    e2, s1 = _setup()
+    e2.insert("T", _b([100], vals=[5.0], docs=[b"x"]))
+    e2.insert("TClone", _b([100], vals=[5.0], docs=[b"x"]))
+    rep = three_way_merge(e2, "T", e2.current_snapshot("TClone"),
+                          base=s1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+
+
+def test_scenario_4_source_modified_unchanged_target_row():
+    e, sn1 = _setup()
+    e.update_by_keys("TClone", _b([3], vals=[33.0]))   # update
+    e.delete_by_keys("TClone", {"a": np.asarray([4])})  # delete
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(3)] == 33.0            # source's update applied
+    assert 4 not in keys                          # source's delete applied
+
+
+def test_scenario_5_target_modified_source_untouched():
+    e, sn1 = _setup()
+    e.update_by_keys("T", _b([3], vals=[33.0]))
+    e.delete_by_keys("T", {"a": np.asarray([4])})
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(3)] == 33.0            # target's change stands
+    assert 4 not in keys
+
+
+def test_scenario_6_both_modified_same_row():
+    e, sn1 = _setup()
+    e.update_by_keys("T", _b([3], vals=[30.0]))
+    e.update_by_keys("TClone", _b([3], vals=[300.0]))
+    e.update_by_keys("T", _b([5], vals=[50.0]))
+    e.delete_by_keys("TClone", {"a": np.asarray([5])})  # update vs delete
+    with pytest.raises(MergeConflictError) as ei:
+        three_way_merge(e, "T", e.current_snapshot("TClone"),
+                        base=sn1, mode=ConflictMode.FAIL)
+    assert ei.value.report.true_conflicts == 2
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.ACCEPT)
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(3)] == 300.0           # source version
+    assert 5 not in keys                          # source's delete wins
+    # identical updates on both sides cancel (no conflict)
+    e2, s1 = _setup()
+    e2.update_by_keys("T", _b([3], vals=[42.0]))
+    e2.update_by_keys("TClone", _b([3], vals=[42.0]))
+    rep = three_way_merge(e2, "T", e2.current_snapshot("TClone"),
+                          base=s1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    # both delete same row: same change, cancels
+    e3, s1 = _setup()
+    e3.delete_by_keys("T", {"a": np.asarray([7])})
+    e3.delete_by_keys("TClone", {"a": np.asarray([7])})
+    rep = three_way_merge(e3, "T", e3.current_snapshot("TClone"),
+                          base=s1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    assert 7 not in _table_rows(e3, "T")[0]
+
+
+# ------------------------------------------------- move handling (§5.2)
+
+def test_compaction_move_is_false_conflict():
+    e, sn1 = _setup(n=50)
+    # target: compaction moves rows (values unchanged, new positions)
+    e.delete_by_keys("T", {"a": np.asarray([49])})  # make a dead row
+    compact_objects(e, "T", list(e.table("T").directory.data_oids))
+    # source: real update of a moved row
+    e.update_by_keys("TClone", _b([10], vals=[1000.0]))
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    assert rep.moves_ignored > 0
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(10)] == 1000.0          # update NOT lost (paper)
+
+
+# ------------------------------------------------------ NoPK cardinality
+
+def test_nopk_rules():
+    # rule 1: δT=0, δS≠0 -> apply source count
+    e = Engine()
+    e.create_table("T", SCH_NOPK)
+    e.insert("T", _b([1, 1, 2], vals=[9.0, 9.0, 2.0],
+                     docs=[b"x", b"x", b"y"]))
+    sn1 = e.create_snapshot("sn1", "T")
+    e.clone_table("TClone", "sn1")
+    e.insert("TClone", _b([1], vals=[9.0], docs=[b"x"]))   # now 3 copies
+    rep = three_way_merge(e, "T", e.current_snapshot("TClone"),
+                          base=sn1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    keys = _table_rows(e, "T")[0]
+    assert keys.count(1) == 3
+
+    # rule 3: both changed the count -> true conflict; ACCEPT forces N3
+    e2 = Engine()
+    e2.create_table("T", SCH_NOPK)
+    e2.insert("T", _b([1, 1], vals=[9.0, 9.0], docs=[b"x", b"x"]))
+    s1 = e2.create_snapshot("s1", "T")
+    e2.clone_table("C", "s1")
+    e2.insert("T", _b([1], vals=[9.0], docs=[b"x"]))       # N2 = 3
+    t = e2.table("C")
+    _, rowids = t.scan()
+    tx = e2.begin()
+    tx.delete_rowids("C", rowids[:1])                      # N3 = 1
+    tx.commit()
+    with pytest.raises(MergeConflictError):
+        three_way_merge(e2, "T", e2.current_snapshot("C"),
+                        base=s1, mode=ConflictMode.FAIL)
+    rep = three_way_merge(e2, "T", e2.current_snapshot("C"),
+                          base=s1, mode=ConflictMode.ACCEPT)
+    assert _table_rows(e2, "T")[0].count(1) == 1           # forced to N3
+    # SKIP keeps N2
+    rep = three_way_merge(e2, "T", e2.current_snapshot("C"),
+                          base=s1, mode=ConflictMode.SKIP)
+    assert _table_rows(e2, "T")[0].count(1) == 1  # already merged; no-op
+
+    # same-row deletions on both branches cancel (§5.1)
+    e3 = Engine()
+    e3.create_table("T", SCH_NOPK)
+    e3.insert("T", _b([5, 5], vals=[1.0, 1.0], docs=[b"z", b"z"]))
+    s1 = e3.create_snapshot("s1", "T")
+    e3.clone_table("C", "s1")
+    _, r_t = e3.table("T").scan()
+    tx = e3.begin(); tx.delete_rowids("T", r_t[:1]); tx.commit()
+    _, r_c = e3.table("C").scan()
+    # delete the SAME physical base row in the clone
+    tx = e3.begin(); tx.delete_rowids("C", r_t[:1]); tx.commit()
+    rep = three_way_merge(e3, "T", e3.current_snapshot("C"),
+                          base=s1, mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    assert _table_rows(e3, "T")[0].count(5) == 1
+
+
+# -------------------------------------------------------- two-way merge
+
+def test_two_way_merge_uses_clone_lineage():
+    e, sn1 = _setup()
+    e.update_by_keys("TClone", _b([3], vals=[33.0]))
+    e.update_by_keys("T", _b([4], vals=[44.0]))
+    rep = two_way_merge(e, "T", e.current_snapshot("TClone"),
+                        mode=ConflictMode.FAIL)
+    assert rep.used_base          # implicit base found via lineage
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(3)] == 33.0 and vals[keys.index(4)] == 44.0
+
+
+def test_two_way_merge_empty_base_skips_shared_objects():
+    """§5.3: no lineage -> empty base; shared objects never scanned."""
+    e = Engine()
+    e.create_table("T", SCH)
+    e.insert("T", _b(np.arange(1000)))
+    s = e.create_snapshot("s", "T")
+    e.clone_table("C", "s")
+    e._base.clear()                     # simulate lost lineage
+    e.update_by_keys("C", _b([5], vals=[55.0]))
+    e.insert("C", _b([5000]))
+    rep = two_way_merge(e, "T", e.current_snapshot("C"),
+                        mode=ConflictMode.ACCEPT)
+    assert not rep.used_base
+    assert rep.stats.rows_scanned < 100   # shared 1000-row object skipped
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(5)] == 55.0 and 5000 in keys
+
+
+def test_merge_after_merge_lineage_advances():
+    e, sn1 = _setup()
+    e.update_by_keys("TClone", _b([1], vals=[11.0]))
+    s3 = e.create_snapshot("s3", "TClone")
+    three_way_merge(e, "T", s3, mode=ConflictMode.FAIL)
+    # second round: both sides advance from the NEW base (s3)
+    e.update_by_keys("TClone", _b([2], vals=[22.0]))
+    rep = two_way_merge(e, "T", e.current_snapshot("TClone"),
+                        mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    keys, vals, _ = _table_rows(e, "T")
+    assert vals[keys.index(2)] == 22.0
+
+
+def test_merge_atomicity_on_fail():
+    e, sn1 = _setup()
+    e.update_by_keys("T", _b([3], vals=[30.0]))
+    e.update_by_keys("TClone", _b([3], vals=[300.0]))
+    e.insert("TClone", _b([100]))
+    before = _table_rows(e, "T")
+    with pytest.raises(MergeConflictError):
+        three_way_merge(e, "T", e.current_snapshot("TClone"),
+                        base=sn1, mode=ConflictMode.FAIL)
+    assert _table_rows(e, "T") == before   # nothing applied (atomic)

@@ -1,0 +1,115 @@
+"""Secondary indices (paper §5.5.4) and schema change (§5.5.6)."""
+import numpy as np
+import pytest
+
+from repro.core import (Column, CType, Engine, Schema, snapshot_diff)
+from repro.core.indices import create_index, drop_index, lookup_eq
+
+SCH = Schema((Column("id", CType.I64), Column("cat", CType.I32),
+              Column("val", CType.F64)), primary_key=("id",))
+
+
+def _setup(n=100):
+    e = Engine()
+    e.create_table("T", SCH)
+    e.insert("T", {"id": np.arange(n), "cat": np.arange(n) % 5,
+                   "val": np.arange(n) * 1.0})
+    return e
+
+
+def test_index_backfill_and_lookup():
+    e = _setup()
+    create_index(e, "T", "by_cat", ["cat"])
+    hits = lookup_eq(e, "T", "by_cat", {"cat": np.int32(3)})
+    assert sorted(hits["id"].tolist()) == [i for i in range(100) if i % 5 == 3]
+
+
+def test_index_maintained_on_insert_update_delete():
+    e = _setup()
+    create_index(e, "T", "by_cat", ["cat"])
+    e.insert("T", {"id": [1000], "cat": [3], "val": [1.0]})
+    e.update_by_keys("T", {"id": [3], "cat": [4], "val": [3.0]})  # 3: cat 3->4
+    e.delete_by_keys("T", {"id": np.asarray([8])})                # 8: cat 3
+    hits = sorted(lookup_eq(e, "T", "by_cat", {"cat": np.int32(3)})["id"]
+                  .tolist())
+    want = sorted([i for i in range(100) if i % 5 == 3
+                   and i not in (3, 8)] + [1000])
+    assert hits == want
+    hits4 = lookup_eq(e, "T", "by_cat", {"cat": np.int32(4)})["id"].tolist()
+    assert 3 in hits4
+
+
+def test_index_maintenance_is_atomic_with_base_commit():
+    e = _setup()
+    create_index(e, "T", "by_cat", ["cat"])
+    tx = e.begin()
+    tx.update_by_keys("T", {"id": [0], "cat": [9], "val": [0.0]})
+    tx.insert("T", {"id": [2000], "cat": [9], "val": [2.0]})
+    tx.commit()   # ONE commit covers base + aux
+    hits = sorted(lookup_eq(e, "T", "by_cat", {"cat": np.int32(9)})["id"]
+                  .tolist())
+    assert hits == [0, 2000]
+
+
+def test_clone_with_indices_is_independent():
+    e = _setup()
+    create_index(e, "T", "by_cat", ["cat"])
+    snap = e.create_snapshot("s", "T")
+    e.clone_table("C", "s", with_indices=True)
+    e.update_by_keys("C", {"id": [0], "cat": [7], "val": [0.0]})
+    assert lookup_eq(e, "C", "by_cat", {"cat": np.int32(7)})["id"].tolist() \
+        == [0]
+    assert lookup_eq(e, "T", "by_cat",
+                     {"cat": np.int32(7)})["id"].shape[0] == 0
+
+
+def test_index_survives_wal_replay():
+    e = _setup(20)
+    create_index(e, "T", "by_cat", ["cat"])
+    e.insert("T", {"id": [500], "cat": [2], "val": [5.0]})
+    e2 = Engine.replay(e.wal)
+    hits = sorted(lookup_eq(e2, "T", "by_cat", {"cat": np.int32(2)})["id"]
+                  .tolist())
+    assert hits == sorted(lookup_eq(e, "T", "by_cat",
+                                    {"cat": np.int32(2)})["id"].tolist())
+    assert 500 in hits
+
+
+def test_drop_index():
+    e = _setup(10)
+    spec = create_index(e, "T", "by_cat", ["cat"])
+    assert spec.aux_table in e.tables
+    drop_index(e, "T", "by_cat")
+    assert spec.aux_table not in e.tables
+
+
+# ------------------------------------------------------------ ALTER TABLE
+
+def test_alter_add_column_and_pitr_restore():
+    e = _setup(10)
+    pre = e.create_snapshot("pre-alter", "T")
+    e.alter_table_add_column("T", Column("note", CType.LOB), b"-")
+    batch, _ = e.table("T").scan()
+    assert "note" in batch and all(v == b"-" for v in batch["note"])
+    # new writes carry the column
+    e.insert("T", {"id": [99], "cat": [1], "val": [9.0], "note": [b"hi"]})
+    assert e.table("T").count() == 11
+    # diff across schema versions refused (paper §5.5.6)
+    with pytest.raises(ValueError):
+        snapshot_diff(e.store, pre, e.current_snapshot("T"))
+    # RESTORE to the pre-alter snapshot works and restores the old schema
+    e.restore_table("T", "pre-alter")
+    batch, _ = e.table("T").scan()
+    assert "note" not in batch
+    assert e.table("T").count() == 10
+
+
+def test_alter_preserves_row_identity_within_new_schema():
+    e = _setup(10)
+    e.alter_table_add_column("T", Column("flag", CType.BOOL), False)
+    s1 = e.create_snapshot("s1", "T")
+    e.clone_table("C", "s1")
+    e.update_by_keys("C", {"id": [2], "cat": [2], "val": [22.0],
+                           "flag": [True]})
+    d = snapshot_diff(e.store, s1, e.current_snapshot("C"))
+    assert d.n_groups == 2   # old row + new row only

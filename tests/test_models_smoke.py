@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and finiteness; decode/prefill consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_names, get_config
+from repro.models import lm
+
+ARCHS = all_arch_names()
+
+
+def _inputs(cfg, B=2, S=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    ctx = None
+    if cfg.is_encdec or cfg.cross_len:
+        L = cfg.cross_len or 8
+        ctx = jax.random.normal(jax.random.PRNGKey(9), (B, L, cfg.d_model),
+                                jnp.float32).astype(jnp.dtype(cfg.dtype))
+    return tokens, ctx
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, ctx = _inputs(cfg)
+    batch = {"tokens": tokens, "targets": tokens}
+    if ctx is not None:
+        batch["ctx"] = ctx
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(cfg, p, batch, attn_block=16))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(float(gn))
+    logits, aux, _ = lm.forward(cfg, params, tokens, ctx, attn_block=16)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_shapes(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, ctx = _inputs(cfg)
+    lg, cache = lm.prefill(cfg, params, tokens, ctx, seq_cap=40,
+                           attn_block=16)
+    assert lg.shape == (2, cfg.vocab)
+    nxt = jnp.asarray([[3], [5]], jnp.int32)
+    dl, cache2 = lm.decode_step(cfg, params, nxt, cache)
+    assert dl.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(dl.astype(jnp.float32)).all())
+    assert int(cache2["len"]) == int(cache["len"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "mixtral-8x7b",
+                                  "rwkv6-7b", "whisper-medium"])
+def test_decode_matches_forward_f32(arch):
+    """decode(prefill(x)) logits == full forward logits (f32 exact-ish)."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 16
+    tokens, ctx = _inputs(cfg, B=B, S=S)
+    lg, cache = lm.prefill(cfg, params, tokens, ctx, seq_cap=24,
+                           attn_block=8)
+    full, _, _ = lm.forward(cfg, params, tokens, ctx, attn_block=8)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    nxt = jnp.asarray([[7]], jnp.int32)
+    dl, _ = lm.decode_step(cfg, params, nxt, cache)
+    toks2 = jnp.concatenate([tokens, nxt], axis=1)
+    full2, _, _ = lm.forward(cfg, params, toks2, ctx, attn_block=17)
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(full2[:, -1]),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_swa_restricts_attention():
+    """Mixtral SWA: tokens outside the window cannot influence logits.
+
+    Capacity factor is raised so no token is ever dropped: with drops, an
+    early token can legitimately influence later ones through routing
+    contention (causal, but it would break this check)."""
+    from repro.configs.base import MoECfg
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                              dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=MoECfg(n_experts=cfg.moe.n_experts, top_k=2,
+                        capacity_factor=4.0))
+    assert cfg.sliding_window == 16
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 64
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (B, S), 2, cfg.vocab)
+    t2 = t1.at[:, :8].set(1)   # mutate tokens far outside the window
+    l1, _, _ = lm.forward(cfg, params, t1, attn_block=16)
+    l2, _, _ = lm.forward(cfg, params, t2, attn_block=16)
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_causality():
+    """Future tokens must not influence past logits (all attention paths)."""
+    for arch in ("internlm2-1.8b", "rwkv6-7b", "jamba-1.5-large-398b"):
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  dtype="float32")
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 1, 16
+        t1 = jax.random.randint(jax.random.PRNGKey(1), (B, S), 2, cfg.vocab)
+        t2 = t1.at[:, -1].set(1)
+        ctx = None
+        l1, _, _ = lm.forward(cfg, params, t1, ctx, attn_block=8)
+        l2, _, _ = lm.forward(cfg, params, t2, ctx, attn_block=8)
+        np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                                   np.asarray(l2[:, :-1]),
+                                   rtol=1e-5, atol=1e-5, err_msg=arch)
+
+
+def test_exact_configs_match_assignment():
+    """The full (non-reduced) configs carry the assigned hyperparameters."""
+    spec = {
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    }
+    for name, (L, d, H, KV, ff, V) in spec.items():
+        cfg = get_config(name)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, H, KV, ff, V), name
+    assert get_config("mixtral-8x7b").sliding_window == 4096
+    assert get_config("mixtral-8x7b").moe.n_experts == 8
+    assert get_config("phi3.5-moe-42b-a6.6b").moe.n_experts == 16
+    assert get_config("jamba-1.5-large-398b").moe.n_experts == 16
+    assert get_config("qwen1.5-0.5b").qkv_bias
+    assert get_config("whisper-medium").encoder_layers == 24

@@ -1,0 +1,175 @@
+"""Property-based tests (hypothesis): random edit scripts on random tables
+must satisfy the system's invariants.
+
+Oracle: a plain Python multiset model of the table contents.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Column, CType, ConflictMode, Engine,
+                        MergeConflictError, Schema, snapshot_diff, sql_diff,
+                        three_way_merge)
+from repro.core.compaction import compact_objects
+
+SCH = Schema((Column("k", CType.I64), Column("v", CType.I64)),
+             primary_key=("k",))
+SCH_NOPK = Schema(SCH.columns, primary_key=None)
+
+
+def rows_multiset(e, table, directory=None) -> Counter:
+    batch, _ = e.table(table).scan(directory)
+    return Counter(zip(batch["k"].tolist(), batch["v"].tolist()))
+
+
+# edit script: list of (op, key, val)
+edit = st.tuples(st.sampled_from(["ins", "del", "upd"]),
+                 st.integers(0, 39), st.integers(0, 5))
+scripts = st.lists(edit, max_size=12)
+
+
+def apply_script(e: Engine, table: str, script, model: Counter, pk=True):
+    """Apply an edit script to both the engine and the python model."""
+    for op, key, val in script:
+        present = [kv for kv in model if kv[0] == key]
+        if op == "ins" and not present:
+            e.insert(table, {"k": [key], "v": [val]})
+            model[(key, val)] += 1
+        elif op == "del" and present:
+            e.delete_by_keys(table, {"k": np.asarray([key])})
+            model[present[0]] -= 1
+            model += Counter()
+        elif op == "upd" and present:
+            e.update_by_keys(table, {"k": [key], "v": [val]})
+            model[present[0]] -= 1
+            model[(key, val)] += 1
+            model += Counter()
+
+
+def fresh_engine(n0: int = 10):
+    e = Engine()
+    e.create_table("T", SCH)
+    e.insert("T", {"k": np.arange(n0), "v": np.full(n0, 100)})
+    model = Counter({(int(k), 100): 1 for k in range(n0)})
+    return e, model
+
+
+@settings(max_examples=40, deadline=None)
+@given(scripts)
+def test_engine_matches_multiset_model(script):
+    e, model = fresh_engine()
+    apply_script(e, "T", script, model)
+    assert rows_multiset(e, "T") == +model
+
+
+@settings(max_examples=40, deadline=None)
+@given(scripts, scripts)
+def test_diff_equals_sql_and_multiset_difference(s_a, s_b):
+    e, model_a = fresh_engine()
+    sn = e.create_snapshot("base", "T")
+    e.clone_table("U", "base")
+    model_b = model_a.copy()
+    apply_script(e, "T", s_a, model_a)
+    apply_script(e, "U", s_b, model_b)
+    a = e.current_snapshot("T")
+    b = e.current_snapshot("U")
+    d = snapshot_diff(e.store, a, b)
+    ds = sql_diff(e.store, a, b)
+    # diff == multiset(b) − multiset(a)
+    want = +Counter({kv: model_b[kv] - model_a[kv]
+                     for kv in set(model_a) | set(model_b)
+                     if model_b[kv] != model_a[kv]})
+    neg = Counter({kv: model_a[kv] - model_b[kv]
+                   for kv in set(model_a) | set(model_b)
+                   if model_a[kv] > model_b[kv]})
+    assert int(d.diff_cnt[d.diff_cnt > 0].sum()) == sum(want.values())
+    assert int(-d.diff_cnt[d.diff_cnt < 0].sum()) == sum(neg.values())
+    # Δ-path equals the full-scan baseline
+    assert sorted(d.diff_cnt.tolist()) == sorted(ds.diff_cnt.tolist())
+    assert sorted(zip(d.row_lo.tolist(), d.diff_cnt.tolist())) == \
+        sorted(zip(ds.row_lo.tolist(), ds.diff_cnt.tolist()))
+
+
+@settings(max_examples=40, deadline=None)
+@given(scripts, scripts)
+def test_merge_disjoint_edits_is_union(s_t, s_s):
+    """If the two branches touch DISJOINT keys, merge == both edit sets."""
+    s_t = [(op, k * 2, v) for op, k, v in s_t]        # evens
+    s_s = [(op, k * 2 + 1, v) for op, k, v in s_s]    # odds
+    e, model = fresh_engine(20)
+    sn = e.create_snapshot("base", "T")
+    e.clone_table("U", "base")
+    model_t, model_s = model.copy(), model.copy()
+    apply_script(e, "T", s_t, model_t)
+    apply_script(e, "U", s_s, model_s)
+    rep = three_way_merge(e, "T", e.current_snapshot("U"), base=sn,
+                          mode=ConflictMode.FAIL)
+    assert rep.true_conflicts == 0
+    # expected: start + t-changes + s-changes
+    want = +Counter({kv: model_t[kv] + model_s[kv] - model[kv]
+                     for kv in set(model) | set(model_t) | set(model_s)})
+    assert rows_multiset(e, "T") == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(scripts, scripts)
+def test_merge_accept_respects_source_on_conflicts(s_t, s_s):
+    """ACCEPT: every key the source changed ends at the source's version."""
+    e, model = fresh_engine()
+    sn = e.create_snapshot("base", "T")
+    e.clone_table("U", "base")
+    model_t, model_s = model.copy(), model.copy()
+    apply_script(e, "T", s_t, model_t)
+    apply_script(e, "U", s_s, model_s)
+    three_way_merge(e, "T", e.current_snapshot("U"), base=sn,
+                    mode=ConflictMode.ACCEPT)
+    merged = rows_multiset(e, "T")
+    src_changed = {k for k in range(40)
+                   if {kv for kv in model if kv[0] == k}
+                   != {kv for kv in model_s if kv[0] == k}}
+    for k in src_changed:
+        assert {kv for kv in merged if kv[0] == k} == \
+            {kv for kv in model_s if kv[0] == k}, k
+
+
+@settings(max_examples=25, deadline=None)
+@given(scripts)
+def test_restore_round_trip(script):
+    e, model = fresh_engine()
+    before = rows_multiset(e, "T")
+    sn = e.create_snapshot("s", "T")
+    apply_script(e, "T", script, model.copy())
+    e.restore_table("T", "s")
+    assert rows_multiset(e, "T") == before
+
+
+@settings(max_examples=25, deadline=None)
+@given(scripts)
+def test_compaction_preserves_content_and_diffs(script):
+    e, model = fresh_engine()
+    sn = e.create_snapshot("s", "T")
+    e.clone_table("U", "s")
+    apply_script(e, "T", script, model)
+    before = rows_multiset(e, "T")
+    d_before = snapshot_diff(e.store, e.snapshots["s"],
+                             e.current_snapshot("T"))
+    compact_objects(e, "T", list(e.table("T").directory.data_oids))
+    assert rows_multiset(e, "T") == before
+    d_after = snapshot_diff(e.store, e.snapshots["s"],
+                            e.current_snapshot("T"))
+    assert sorted(d_before.diff_cnt.tolist()) == \
+        sorted(d_after.diff_cnt.tolist())
+    # snapshot still readable (pinned objects)
+    assert rows_multiset(e, "T", e.snapshots["s"].directory) == \
+        Counter({(k, 100): 1 for k in range(10)})
+
+
+@settings(max_examples=25, deadline=None)
+@given(scripts)
+def test_wal_replay_property(script):
+    e, model = fresh_engine()
+    apply_script(e, "T", script, model)
+    e2 = Engine.replay(e.wal)
+    assert rows_multiset(e2, "T") == rows_multiset(e, "T")
