@@ -16,21 +16,46 @@ def main() -> None:
                     help="base table rows (default 2M; --quick = 200k)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-collab", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (e.g. BENCH_vcs.json)")
+    ap.add_argument("--hotpath-only", action="store_true",
+                    help="run only the visibility hot-path benchmark")
     args = ap.parse_args()
     n_rows = args.rows or (200_000 if args.quick else 2_000_000)
 
     from . import vcs_tables as V
 
+    if args.hotpath_only:
+        rows = V.diff_merge_hotpath(n_rows)
+        for r in rows:
+            print(f"hotpath/{r['op']}/{r['change']}: "
+                  f"diff cold {r['diff_cold_s']*1e3:.1f}ms "
+                  f"warm {r['diff_warm_s']*1e3:.1f}ms "
+                  f"merge {r['merge_s']*1e3:.1f}ms "
+                  f"builds c/w/m={r['visibility_builds_cold']}"
+                  f"/{r['visibility_builds_warm']}"
+                  f"/{r['visibility_builds_merge']}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"bench": "diff_merge_hotpath", "rows": n_rows,
+                           "results": rows}, f, indent=1)
+        return
+
+    json_out = {"rows": n_rows, "sections": {}}
     print("name,us_per_call,derived")
 
     # ---- Table 1: clone vs insert
-    for r in V.table1_clone(n_rows):
+    t1 = V.table1_clone(n_rows)
+    json_out["sections"]["table1"] = t1
+    for r in t1:
         print(f"table1/{r['op']},{r['time_s']*1e6:.0f},"
               f"space_bytes={r['space_bytes']}")
     sys.stdout.flush()
 
     # ---- Tables 2/3: diff + merge, builtin vs SQL
-    for r in V.table23_diff_merge(n_rows):
+    t23 = V.table23_diff_merge(n_rows)
+    json_out["sections"]["table23"] = t23
+    for r in t23:
         kind = "table2" if r["op"].startswith("Diff") else "table3"
         print(f"{kind}/{r['op']}/{r['change']}/builtin,"
               f"{r['builtin_s']*1e6:.0f},speedup="
@@ -38,9 +63,21 @@ def main() -> None:
         print(f"{kind}/{r['op']}/{r['change']}/sql,{r['sql_s']*1e6:.0f},")
     sys.stdout.flush()
 
+    # ---- visibility hot path (ISSUE 1): cold vs warm diffs + counters
+    hp = V.diff_merge_hotpath(n_rows)
+    json_out["sections"]["hotpath"] = hp
+    for r in hp:
+        print(f"hotpath/{r['op']}/{r['change']}/diff_warm,"
+              f"{r['diff_warm_s']*1e6:.0f},"
+              f"cold_us={r['diff_cold_s']*1e6:.0f};"
+              f"builds_warm={r['visibility_builds_warm']}")
+    sys.stdout.flush()
+
     if not args.skip_collab:
         # ---- Tables 4/5: collaborative, no conflicts
-        for r in V.collaborative(n_rows, overlap=0.0):
+        t45 = V.collaborative(n_rows, overlap=0.0)
+        json_out["sections"]["table45"] = t45
+        for r in t45:
             print(f"table45/{r['op']}/{r['change']}/diff,"
                   f"{r['diff_avg_s']*1e6:.0f},")
             print(f"table45/{r['op']}/{r['change']}/merge,"
@@ -48,13 +85,19 @@ def main() -> None:
                   f"timeline={'|'.join(str(t) for t in r['merge_times'])}")
         sys.stdout.flush()
         # ---- Tables 6/7: collaborative, 10% overlap conflicts
-        for r in V.collaborative(n_rows, overlap=0.10):
+        t67 = V.collaborative(n_rows, overlap=0.10)
+        json_out["sections"]["table67"] = t67
+        for r in t67:
             print(f"table67/{r['op']}/{r['change']}/diff,"
                   f"{r['diff_avg_s']*1e6:.0f},conflicts={r['true_conflicts']}")
             print(f"table67/{r['op']}/{r['change']}/merge,"
                   f"{r['merge_avg_s']*1e6:.0f},"
                   f"timeline={'|'.join(str(t) for t in r['merge_times'])}")
         sys.stdout.flush()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(json_out, f, indent=1)
 
     # ---- Roofline table (from dry-run artifacts, if present)
     from . import roofline

@@ -24,6 +24,80 @@ from repro.core.diff import gather_payload
 CHANGE_SETS = {"C1": 100, "C2": 1_000, "C3": 10_000, "C4": 100_000}
 
 
+def _visibility_builds(engine: Engine) -> int:
+    """Tombstone-target-array builds so far (0 on engines without the
+    visibility cache — i.e. the pre-cache seed code)."""
+    cache = getattr(engine.store, "vis_cache", None)
+    if cache is not None:
+        return int(cache.builds)
+    return 0
+
+
+# ------------------------------------------------- visibility hot path
+
+def diff_merge_hotpath(n_rows: int = 2_000_000, csizes=None,
+                       warm_repeats: int = 3) -> List[Dict]:
+    """Cold vs warm repeated diff + merge per change set (ISSUE 1).
+
+    The warm timings measure exactly what the visibility cache buys:
+    repeated SNAPSHOT DIFF between the *same* two directory versions must
+    not rebuild the sorted tombstone-target arrays. ``visibility_builds``
+    counts fresh target-array constructions engine-wide.
+    """
+    out = []
+    for pk in (True, False):
+        for cname, csize in (csizes or CHANGE_SETS).items():
+            csize = min(csize, n_rows // 5)
+            rng = np.random.default_rng([csize] + list(cname.encode()))
+            engine, base = _mk_engine(n_rows, pk)
+            sn1 = engine.create_snapshot("sn1", "lineitem")
+            engine.clone_table("t", sn1)
+            _random_update(engine, "t", base, csize, rng, pk)
+            sn3 = engine.create_snapshot("sn3", "t")
+            cur = engine.current_snapshot("lineitem")
+
+            b0 = _visibility_builds(engine)
+            t0 = time.perf_counter()
+            d_cold = snapshot_diff(engine.store, cur, sn3)
+            t_cold = time.perf_counter() - t0
+            builds_cold = _visibility_builds(engine) - b0
+
+            warm_times = []
+            b1 = _visibility_builds(engine)
+            for _ in range(warm_repeats):
+                t0 = time.perf_counter()
+                d_warm = snapshot_diff(engine.store, cur, sn3)
+                warm_times.append(time.perf_counter() - t0)
+            builds_warm = _visibility_builds(engine) - b1
+            assert d_warm.n_groups == d_cold.n_groups == 2 * csize
+
+            b2 = _visibility_builds(engine)
+            t0 = time.perf_counter()
+            rep = three_way_merge(engine, "lineitem", sn3, base=sn1,
+                                  mode=ConflictMode.ACCEPT)
+            t_merge = time.perf_counter() - t0
+            builds_merge = _visibility_builds(engine) - b2
+
+            out.append({
+                "op": f"HotDiffMerge{'PK' if pk else 'NoPK'}",
+                "change": cname, "rows": n_rows, "changed_rows": csize,
+                "diff_cold_s": t_cold,
+                "diff_warm_s": float(np.min(warm_times)),
+                "diff_warm_avg_s": float(np.mean(warm_times)),
+                "merge_s": t_merge,
+                "visibility_builds_cold": builds_cold,
+                "visibility_builds_warm": builds_warm,
+                "visibility_builds_merge": builds_merge,
+                "rows_scanned_diff": d_cold.stats.rows_scanned,
+                "objects_scanned_diff": d_cold.stats.objects_scanned,
+                "visibility_builds_stat": getattr(
+                    d_cold.stats, "visibility_builds", 0),
+                "merged_inserted": rep.inserted,
+                "merged_deleted": rep.deleted,
+            })
+    return out
+
+
 def _mk_engine(n_rows: int, pk: bool, seed: int = 0):
     engine = Engine()
     schema = LINEITEM_SCHEMA if pk else LINEITEM_SCHEMA_NOPK
@@ -90,7 +164,7 @@ def table23_diff_merge(n_rows: int = 2_000_000) -> List[Dict]:
     for pk in (True, False):
         for cname, csize in CHANGE_SETS.items():
             csize = min(csize, n_rows // 5)
-            rng = np.random.default_rng(hash(cname) % 2**31)
+            rng = np.random.default_rng([csize] + list(cname.encode()))
             engine, base = _mk_engine(n_rows, pk)
             sn1 = engine.create_snapshot("sn1", "lineitem")
             engine.clone_table("t", sn1)
@@ -121,7 +195,7 @@ def table23_diff_merge(n_rows: int = 2_000_000) -> List[Dict]:
             s1b = engine2.create_snapshot("sn1", "lineitem")
             engine2.clone_table("t", s1b)
             _random_update(engine2, "t", base2, csize,
-                           np.random.default_rng(hash(cname) % 2**31), pk)
+                           np.random.default_rng([csize] + list(cname.encode())), pk)
             s3b = engine2.create_snapshot("sn3", "t")
             t0 = time.perf_counter()
             dd = sql_diff(engine2.store, engine2.current_snapshot("lineitem"),

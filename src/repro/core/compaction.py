@@ -20,7 +20,7 @@ import numpy as np
 
 from .objects import OBJECT_CAPACITY, DataObject, seal_data_object
 from .schema import concat_batches, take_batch
-from .visibility import VisibilityIndex
+from .visibility import visibility_index
 
 
 def pick_compaction_sources(engine, table: str,
@@ -29,14 +29,14 @@ def pick_compaction_sources(engine, table: str,
     """Deterministic policy: compact data objects that are small (< 25% of
     capacity) or carry any dead rows, once there are at least two of them."""
     t = engine.table(table)
-    vi = VisibilityIndex(engine.store, t.directory)
+    vi = visibility_index(engine.store, t.directory)
     picked = []
     for oid in t.directory.data_oids:
         obj: DataObject = engine.store.get(oid)
         if obj.nrows < OBJECT_CAPACITY * small_frac:
             picked.append(oid)
             continue
-        if vi.killed_mask(obj).any():
+        if vi.has_kills(obj):
             picked.append(oid)
     return picked if len(picked) >= min_objects else []
 
@@ -50,7 +50,7 @@ def compact_objects(engine, table: str, src_oids: Sequence[int],
     src = [o for o in src_oids if o in set(t.directory.data_oids)]
     if not src:
         return 0
-    vi = VisibilityIndex(engine.store, t.directory)
+    vi = visibility_index(engine.store, t.directory)
     batches, tss, rlo, rhi, klo, khi, lsigs = [], [], [], [], [], [], []
     for oid in src:
         obj: DataObject = engine.store.get(oid)

@@ -27,7 +27,7 @@ import numpy as np
 from ..kernels import ops
 from .directory import Directory
 from .objects import DataObject, ObjectStore, pack_rowid
-from .visibility import VisibilityIndex
+from .visibility import KeyedLRU, visibility_index
 
 
 @dataclass
@@ -78,17 +78,72 @@ class DeltaStats:
         self.objects_skipped_shared = 0
         self.rows_scanned = 0
         self.bytes_scanned = 0
+        # fresh tombstone-target-array constructions this op triggered
+        # (0 on a warm visibility cache — one build per directory version)
+        self.visibility_builds = 0
+        # signed Δ streams served from the memo instead of re-scanned
+        self.delta_cache_hits = 0
+
+
+class DeltaCache(KeyedLRU):
+    """Memo of signed Δ streams keyed by the two directory values.
+
+    Directories and objects are immutable, so ``signed_delta(a, b)`` is a
+    pure function of ``(a, b)`` — repeated diffs of the same two directory
+    versions (the paper's PR-review / collaborative loops) can reuse the
+    stream without touching a single object. LRU-bounded; entries
+    referencing a GC'd object are dropped via ``on_delete``."""
+
+    # streams larger than this are cheap to rebuild relative to the memory
+    # they would pin (6 u64/i32 arrays + the aggregation memo), and huge
+    # deltas are the least likely to be re-diffed — don't cache them
+    MAX_CACHED_ROWS = 1_000_000
+
+    def __init__(self, capacity: int = 8):
+        super().__init__(capacity)
+        self.hits = 0
+
+    @staticmethod
+    def _key(a: Directory, b: Directory):
+        return (a.data_oids, a.tomb_oids, a.ts,
+                b.data_oids, b.tomb_oids, b.ts)
+
+    def get(self, a: Directory, b: Directory):
+        s = self.lookup(self._key(a, b))
+        if s is not None:
+            self.hits += 1
+        return s
+
+    def put(self, a: Directory, b: Directory, stream: "SignedStream"):
+        if stream.n > self.MAX_CACHED_ROWS:
+            return
+        for f in ("sign", "key_lo", "key_hi", "row_lo", "row_hi", "rowid"):
+            getattr(stream, f).setflags(write=False)
+        self.insert(self._key(a, b), stream)
+
+    def on_delete(self, oid: int) -> None:
+        self.drop_if(lambda k: oid in k[0] or oid in k[1]
+                     or oid in k[3] or oid in k[4])
 
 
 def signed_delta(store: ObjectStore, a: Directory, b: Directory,
                  stats: DeltaStats | None = None) -> SignedStream:
     stats = stats if stats is not None else DeltaStats()
+    cache = getattr(store, "delta_cache", None)
+    if cache is None:
+        cache = store.delta_cache = DeltaCache()
+    cached = cache.get(a, b)
+    if cached is not None:
+        stats.delta_cache_hits += 1
+        return cached
     set_a, set_b = set(a.data_oids), set(b.data_oids)
     only_a = sorted(set_a - set_b)
     only_b = sorted(set_b - set_a)
     shared = sorted(set_a & set_b)
-    vi_a = VisibilityIndex(store, a)
-    vi_b = VisibilityIndex(store, b)
+    b0 = store.vis_cache.builds if store.vis_cache is not None else 0
+    vi_a = visibility_index(store, a)
+    vi_b = visibility_index(store, b)
+    stats.visibility_builds += store.vis_cache.builds - b0
     parts = []
 
     for oid in only_b:
@@ -116,21 +171,33 @@ def signed_delta(store: ObjectStore, a: Directory, b: Directory,
     ts_min = min(a.ts, b.ts)
     for oid in shared:
         obj = store.get(oid)
-        touched = np.zeros((obj.nrows,), bool)
-        any_tomb = (vi_a.targets.shape[0] or vi_b.targets.shape[0])
+        # zone pruning: a shared object with no tombstone from either side
+        # and every commit_ts within both horizons cannot contribute
+        any_tomb = vi_a.has_kills(obj) or vi_b.has_kills(obj)
+        ts_touched = obj.nrows > 0 and obj.ts_zone[1] > ts_min
+        if not any_tomb and not ts_touched:
+            stats.objects_skipped_shared += 1
+            continue
+        # candidate offsets only — tombstone targets of either side plus
+        # horizon-straddling rows; never the object's full row range
+        base = pack_rowid(obj.oid, np.zeros((1,), np.uint64))[0]
+        cand_parts = []
         if any_tomb:
-            touched |= vi_a.killed_mask(obj)
-            touched |= vi_b.killed_mask(obj)
-        if obj.commit_ts.shape[0] and int(obj.commit_ts.max()) > ts_min:
-            touched |= obj.commit_ts > np.uint64(ts_min)
-        if not touched.any():
+            for vi in (vi_a, vi_b):
+                t = vi.object_targets(oid)
+                if t.shape[0]:
+                    cand_parts.append((t - base).astype(np.int64))
+        if ts_touched:
+            cand_parts.append(np.flatnonzero(
+                obj.commit_ts > np.uint64(ts_min)))
+        cand = np.unique(np.concatenate(cand_parts))
+        if cand.shape[0] == 0:
             stats.objects_skipped_shared += 1
             continue
         stats.objects_scanned += 1
-        cand = np.flatnonzero(touched)
         stats.rows_scanned += int(cand.shape[0])
-        va = vi_a.visible_mask(obj)[cand]
-        vb = vi_b.visible_mask(obj)[cand]
+        va = vi_a.visible_rows(obj, cand)
+        vb = vi_b.visible_rows(obj, cand)
         plus = cand[vb & ~va]
         minus = cand[va & ~vb]
         if plus.shape[0]:
@@ -138,14 +205,18 @@ def signed_delta(store: ObjectStore, a: Directory, b: Directory,
         if minus.shape[0]:
             parts.append(_emit(obj, minus, -1))
 
-    return SignedStream.concat(parts)
+    stream = SignedStream.concat(parts)
+    cache.put(a, b, stream)
+    return stream
 
 
 def full_scan_stream(store: ObjectStore, d: Directory, sign: int,
                      stats: DeltaStats | None = None) -> SignedStream:
     """Scan ALL visible rows of a snapshot (the SQL-baseline path, Listing 2)."""
     stats = stats if stats is not None else DeltaStats()
-    vi = VisibilityIndex(store, d)
+    b0 = store.vis_cache.builds if store.vis_cache is not None else 0
+    vi = visibility_index(store, d)
+    stats.visibility_builds += store.vis_cache.builds - b0
     parts = []
     for oid in d.data_oids:
         obj = store.get(oid)

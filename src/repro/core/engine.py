@@ -20,7 +20,7 @@ from .objects import (OBJECT_CAPACITY, DataObject, ObjectStore,
 from .schema import Schema, concat_batches, take_batch
 from .sigs import compute_sigs, key_sigs_for_lookup
 from .table import Table
-from .visibility import VisibilityIndex
+from .visibility import visibility_index
 from .wal import WAL
 
 
@@ -202,11 +202,12 @@ class Engine:
                     if tx._del.get(name) else np.zeros((0,), np.uint64))
             # write-write conflict check: every target must still be visible
             if dels.shape[0]:
-                vi = VisibilityIndex(self.store, t.directory)
+                vi = visibility_index(self.store, t.directory)
                 if vi.killed_rowids(dels).any():
                     raise TxnConflict(f"{name}: delete target already deleted")
+                live_oids = set(t.directory.data_oids)
                 for oid in np.unique(rowid_oid(dels)):
-                    if int(oid) not in set(t.directory.data_oids):
+                    if int(oid) not in live_oids:
                         raise TxnConflict(f"{name}: target object gone")
             ins = tx._ins.get(name, [])
             data_oids, key_sigs = self._seal_inserts(t.schema, ins, ts)
@@ -254,8 +255,9 @@ class Engine:
 
     def drop_snapshot(self, name: str, *, _log=True) -> None:
         del self.snapshots[name]
-        self._base = {k: v for k, v in self._base.items()
-                      if v.name != name or v.name is None}
+        # drop lineage entries pointing at the dropped snapshot (anonymous
+        # bases have name=None and never match a named drop)
+        self._base = {k: v for k, v in self._base.items() if v.name != name}
         if _log:
             self.wal.append("drop_snapshot", name=name)
 
@@ -337,7 +339,7 @@ class Engine:
         t.directory = t.directory.replace(
             drop_data=t.directory.data_oids,
             drop_tombs=t.directory.tomb_oids, ts=t.directory.ts)
-        t.history.append((t.directory.ts, t.directory))
+        t._history_append(t.directory)
         if n:
             tx = self.begin()
             tx.insert(table, batch)

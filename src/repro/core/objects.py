@@ -47,6 +47,8 @@ class DataObject:
     key_hi: np.ndarray
     lob_sigs: Dict[str, np.ndarray] = field(default_factory=dict)
     nbytes: int = 0                      # logical payload bytes
+    _ts_zone: Optional[Tuple[int, int]] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def zone(self) -> Tuple[np.uint64, np.uint64]:
@@ -54,6 +56,20 @@ class DataObject:
         if self.nrows == 0:
             return np.uint64(0), np.uint64(0)
         return self.key_lo[0], self.key_lo[-1]
+
+    @property
+    def ts_zone(self) -> Tuple[int, int]:
+        """(min, max) commit_ts — computed once; objects are immutable.
+
+        Visibility uses this to skip the per-row horizon compare when the
+        whole object is within (or beyond) a directory's ts."""
+        if self._ts_zone is None:
+            if self.nrows == 0:
+                self._ts_zone = (0, 0)
+            else:
+                self._ts_zone = (int(self.commit_ts.min()),
+                                 int(self.commit_ts.max()))
+        return self._ts_zone
 
     def rowids(self) -> np.ndarray:
         return pack_rowid(self.oid, np.arange(self.nrows, dtype=np.uint64))
@@ -108,6 +124,11 @@ class ObjectStore:
         self._objects: Dict[int, object] = {}
         self._next_oid = 1
         self.bytes_written = 0  # cumulative physical write volume
+        # visibility-target / signed-delta caches, attached lazily by
+        # core.visibility / core.delta to avoid import cycles (both modules
+        # import objects)
+        self.vis_cache = None
+        self.delta_cache = None
 
     def new_oid(self) -> int:
         oid = self._next_oid
@@ -127,7 +148,11 @@ class ObjectStore:
         return oid in self._objects
 
     def delete(self, oid: int) -> None:
-        del self._objects[oid]
+        obj = self._objects.pop(oid)
+        if self.vis_cache is not None and isinstance(obj, TombstoneObject):
+            self.vis_cache.on_delete(oid)
+        if self.delta_cache is not None:
+            self.delta_cache.on_delete(oid)
 
     def oids(self):
         return self._objects.keys()

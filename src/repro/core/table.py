@@ -1,6 +1,7 @@
 """Table: schema + current directory + PITR history + key probes."""
 from __future__ import annotations
 
+import bisect
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -9,7 +10,7 @@ from ..kernels import ops
 from .directory import Directory
 from .objects import DataObject, pack_rowid
 from .schema import Schema, concat_batches, take_batch
-from .visibility import VisibilityIndex
+from .visibility import visibility_index
 
 
 class Table:
@@ -19,21 +20,40 @@ class Table:
         self._store = store
         self.directory = Directory.empty(ts)
         # PITR history: every directory version, trimmed by Engine GC.
+        # Kept sorted by apply-ts (see _history_append) so directory_at is
+        # a bisect, not a linear scan.
         self.history: List[Tuple[int, Directory]] = [(ts, self.directory)]
 
     # ------------------------------------------------------------- state
-    def set_directory(self, d: Directory) -> None:
-        self.directory = d
+    def _history_append(self, d: Directory) -> None:
+        """Append a directory version, keeping history sorted by ts.
+
+        An out-of-order apply-ts (RESTORE to an older snapshot) shadows
+        every existing entry with ts >= its own — those entries could never
+        be returned by directory_at again (the restored version is applied
+        later and wins any horizon that admits them) — so they are pruned,
+        preserving linear-scan semantics exactly."""
+        while self.history and self.history[-1][0] >= d.ts:
+            self.history.pop()
         self.history.append((d.ts, d))
+
+    def set_directory(self, d: Directory) -> None:
+        old = self.directory
+        self.directory = d
+        self._history_append(d)
+        # incremental visibility maintenance: derive the new version's
+        # tombstone-target array from the parent's (sorted merge of the
+        # freshly sealed batches) instead of re-sorting the world
+        cache = self._store.vis_cache
+        if cache is not None:
+            cache.extend(old, d)
 
     def directory_at(self, ts: int) -> Directory:
         """PITR: latest directory version with apply-ts <= ts, horizon ts."""
-        best = None
-        for t, d in self.history:
-            if t <= ts:
-                best = d
-        if best is None:
+        i = bisect.bisect_right(self.history, ts, key=lambda e: e[0])
+        if i == 0:
             raise KeyError(f"no PITR history for {self.name} at ts={ts}")
+        best = self.history[i - 1][1]
         return Directory(best.data_oids, best.tomb_oids, ts)
 
     # -------------------------------------------------------------- scan
@@ -41,7 +61,7 @@ class Table:
              with_sigs: bool = False):
         """Materialize all visible rows: (batch, rowids[, row_lo, row_hi])."""
         d = directory or self.directory
-        vi = VisibilityIndex(self._store, d)
+        vi = visibility_index(self._store, d)
         batches, rowids, rlo, rhi = [], [], [], []
         for oid in d.data_oids:
             obj: DataObject = self._store.get(oid)
@@ -64,8 +84,8 @@ class Table:
 
     def count(self, directory: Optional[Directory] = None) -> int:
         d = directory or self.directory
-        vi = VisibilityIndex(self._store, d)
-        return int(sum(int(vi.visible_mask(self._store.get(o)).sum())
+        vi = visibility_index(self._store, d)
+        return int(sum(vi.visible_count(self._store.get(o))
                        for o in d.data_oids))
 
     # ------------------------------------------------------------ probes
@@ -77,7 +97,7 @@ class Table:
         searchsorted kernel. PK uniqueness -> at most one visible match.
         """
         d = directory or self.directory
-        vi = VisibilityIndex(self._store, d)
+        vi = visibility_index(self._store, d)
         q = key_lo.shape[0]
         out = np.zeros((q,), np.uint64)
         pending = np.arange(q)
@@ -98,27 +118,34 @@ class Table:
             pending = np.concatenate([pending[~sel], cand[~hit]])
         return out
 
-    def _probe_object(self, obj: DataObject, vi: VisibilityIndex,
+    def _probe_object(self, obj: DataObject, vi,
                       q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
-        """rowids of visible matches of (q_lo, q_hi) in obj (0 = miss)."""
+        """rowids of visible matches of (q_lo, q_hi) in obj (0 = miss).
+
+        Fully vectorized: exact hits resolve at the lower bound; lo64-
+        collision runs (or runs whose first row is invisible) are expanded
+        flat and resolved with one segmented min-reduction — no per-query
+        Python walk."""
         n = obj.nrows
-        vis = vi.visible_mask(obj)
-        lb = ops.lower_bound(obj.key_lo, q_lo)
         out = np.zeros(q_lo.shape, np.uint64)
-        # fast path: exact hit at the lower bound
+        lb = ops.lower_bound(obj.key_lo, q_lo)
         idx = np.minimum(lb, n - 1)
-        exact = ((lb < n) & (obj.key_lo[idx] == q_lo)
-                 & (obj.key_hi[idx] == q_hi) & vis[idx])
+        hit_lo = (lb < n) & (obj.key_lo[idx] == q_lo)
+        if not hit_lo.any():
+            return out
+        vis = vi.visible_mask(obj)
+        exact = hit_lo & (obj.key_hi[idx] == q_hi) & vis[idx]
         out[exact] = pack_rowid(obj.oid, idx[exact].astype(np.uint64))
-        # slow path: lo64-collision runs or invisible first row — walk the run
-        maybe = np.flatnonzero((lb < n) & ~exact & (obj.key_lo[idx] == q_lo))
-        for qi in maybe:
-            i = int(lb[qi])
-            while i < n and obj.key_lo[i] == q_lo[qi]:
-                if obj.key_hi[i] == q_hi[qi] and vis[i]:
-                    out[qi] = pack_rowid(obj.oid, np.asarray([i], np.uint64))[0]
-                    break
-                i += 1
+        maybe = np.flatnonzero(hit_lo & ~exact)
+        if maybe.shape[0] == 0:
+            return out
+        ub = ops.upper_bound(obj.key_lo, q_lo[maybe])
+        lens = ub - lb[maybe]                    # > 0: key_lo hit confirmed
+        seg, base, flat = ops.segment_expand(lb[maybe], lens)
+        match = (obj.key_hi[flat] == q_hi[maybe][seg]) & vis[flat]
+        first = np.minimum.reduceat(np.where(match, flat, n), base)
+        found = first < n
+        out[maybe[found]] = pack_rowid(obj.oid, first[found].astype(np.uint64))
         return out
 
     def locate_rowsig_multi(self, sig_lo: np.ndarray, sig_hi: np.ndarray,
@@ -128,11 +155,15 @@ class Table:
         """NoPK probe: up to ``need[i]`` visible rowids per row-signature.
 
         Used by merge to delete k rows among duplicates (paper §3 NoPK
-        cardinality resolution).
-        """
+        cardinality resolution). Vectorized: per object, all still-needy
+        signatures expand their equal-sig_lo runs flat; matches are ranked
+        within their query segment by a cumulative count and the first
+        ``remaining`` of them taken — no nested per-row Python loop."""
         d = directory or self.directory
-        vi = VisibilityIndex(self._store, d)
-        found: List[List[int]] = [[] for _ in range(sig_lo.shape[0])]
+        vi = visibility_index(self._store, d)
+        q = sig_lo.shape[0]
+        part_rows: List[np.ndarray] = []   # flat (rowid, query) accumulation
+        part_qids: List[np.ndarray] = []
         remaining = need.astype(np.int64).copy()
         for oid in reversed(d.data_oids):
             if not (remaining > 0).any():
@@ -140,15 +171,44 @@ class Table:
             obj: DataObject = self._store.get(oid)
             if obj.nrows == 0:
                 continue
+            act = np.flatnonzero(remaining > 0)
+            zmin, zmax = obj.zone
+            act = act[(sig_lo[act] >= zmin) & (sig_lo[act] <= zmax)]
+            if act.shape[0] == 0:
+                continue
+            lb = ops.lower_bound(obj.key_lo, sig_lo[act])
+            ub = ops.upper_bound(obj.key_lo, sig_lo[act])
+            lens = ub - lb
+            nz = lens > 0
+            act, lb, lens = act[nz], lb[nz], lens[nz]
+            if act.shape[0] == 0:
+                continue
             vis = vi.visible_mask(obj)
-            lb = ops.lower_bound(obj.key_lo, sig_lo)
-            for qi in np.flatnonzero(remaining > 0):
-                i = int(lb[qi])
-                while (i < obj.nrows and obj.key_lo[i] == sig_lo[qi]
-                       and remaining[qi] > 0):
-                    if obj.key_hi[i] == sig_hi[qi] and vis[i]:
-                        found[qi].append(int(pack_rowid(
-                            obj.oid, np.asarray([i], np.uint64))[0]))
-                        remaining[qi] -= 1
-                    i += 1
-        return [np.asarray(f, np.uint64) for f in found]
+            seg, base, flat = ops.segment_expand(lb, lens)
+            match = ((obj.key_hi[flat] == sig_hi[act][seg]) & vis[flat]
+                     ).astype(np.int64)
+            # rank of each match within its query segment (1-based)
+            cm = np.cumsum(match)
+            seg_base = cm[base] - match[base]
+            rank = cm - seg_base[seg]
+            take = (match > 0) & (rank <= remaining[act][seg])
+            taken = np.flatnonzero(take)
+            if taken.shape[0]:
+                part_rows.append(pack_rowid(obj.oid,
+                                            flat[taken].astype(np.uint64)))
+                part_qids.append(act[seg[taken]])
+            remaining[act] -= np.add.reduceat(take.astype(np.int64), base)
+        # bucket the flat hits per query in one pass (stable by discovery
+        # order: newest object first, ascending offset within object)
+        empty = np.zeros((0,), np.uint64)
+        found = [empty] * q
+        if part_rows:
+            rows = np.concatenate(part_rows)
+            qids = np.concatenate(part_qids)
+            order = np.argsort(qids, kind="stable")
+            rows, qids = rows[order], qids[order]
+            cuts = np.flatnonzero(qids[1:] != qids[:-1]) + 1
+            heads = np.concatenate([[0], cuts])
+            for qi, part in zip(qids[heads], np.split(rows, cuts)):
+                found[qi] = part
+        return found

@@ -8,60 +8,311 @@ A row r of data object o is visible in directory d iff
 Tombstone membership tests are range queries on the per-directory sorted
 target array (objects own contiguous rowid ranges), served by the
 ``searchsorted`` kernel via ``ops.lower_bound``.
+
+Hot-path design (ISSUE 1): the sorted target array depends only on
+``(d.tomb_oids, d.ts)`` and the immutable tombstone objects, so it is built
+once per *directory version* and cached in the store's ``VisibilityCache``
+— not rebuilt per operation.  Commits extend the parent version's array
+incrementally (sorted merge of the freshly sealed tombstone batch) instead
+of re-sorting the world.  The array is partitioned per data object (objects
+own contiguous rowid ranges in the sorted array), so ``killed_mask`` slices
+instead of searching, objects without tombstones skip masking entirely, and
+per-object commit-ts zones let fully-visible objects skip the horizon
+compare too.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from ..kernels import ops
 from .directory import Directory
-from .objects import DataObject, ObjectStore, pack_rowid
+from .objects import DataObject, ObjectStore, pack_rowid, rowid_oid
+
+_EMPTY_U64 = np.zeros((0,), np.uint64)
+_EMPTY_U64.setflags(write=False)
+
+
+class _Entry:
+    """One cached directory version: the sorted target array, its lazy
+    per-object partition, and whether the ts-horizon filter dropped rows
+    while building (if it did not, the array can be extended to any later
+    horizon without rebuilding)."""
+
+    __slots__ = ("targets", "slices", "complete")
+
+    def __init__(self, targets: np.ndarray, complete: bool):
+        targets.setflags(write=False)
+        self.targets = targets
+        self.slices: Optional[Dict[int, Tuple[int, int]]] = None
+        self.complete = complete
+
+    def object_slices(self) -> Dict[int, Tuple[int, int]]:
+        if self.slices is None:
+            t = self.targets
+            if t.shape[0] == 0:
+                self.slices = {}
+            else:
+                oids = rowid_oid(t)
+                bnd = np.flatnonzero(oids[1:] != oids[:-1]) + 1
+                starts = np.concatenate([[0], bnd])
+                ends = np.concatenate([bnd, [t.shape[0]]])
+                self.slices = {int(oids[s]): (int(s), int(e))
+                               for s, e in zip(starts, ends)}
+        return self.slices
+
+
+def _build_entry(store: ObjectStore, d: Directory) -> _Entry:
+    targets, complete = [], True
+    ts = np.uint64(d.ts)
+    for oid in d.tomb_oids:
+        t = store.get(oid)
+        m = t.commit_ts <= ts
+        if m.all():
+            targets.append(t.target)
+        else:
+            complete = False
+            targets.append(t.target[m])
+    arr = (np.sort(np.concatenate(targets)) if targets
+           else _EMPTY_U64)
+    return _Entry(arr, complete)
+
+
+class KeyedLRU:
+    """Tiny keyed LRU shared by the visibility and delta caches."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._cache: OrderedDict = OrderedDict()
+
+    def lookup(self, key):
+        v = self._cache.get(key)
+        if v is not None:
+            self._cache.move_to_end(key)
+        return v
+
+    def insert(self, key, value) -> None:
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+
+    def drop_if(self, pred) -> None:
+        for k in [k for k in self._cache if pred(k)]:
+            del self._cache[k]
+
+    def clear(self) -> None:
+        self._cache.clear()
+
+
+class _Pending:
+    """A not-yet-materialized extension: base entry + new sorted batches.
+
+    Commits only record the freshly sealed batches (O(batch) per commit);
+    the single merge copy is paid by the first *read* of the version, so a
+    write-only burst never copies the full target array per commit."""
+
+    __slots__ = ("base", "batches", "complete")
+
+    def __init__(self, base: _Entry, batches, complete: bool):
+        self.base = base
+        self.batches = batches
+        self.complete = complete
+
+
+class VisibilityCache(KeyedLRU):
+    """LRU cache of tombstone-target arrays keyed by (tomb_oids, ts).
+
+    Correctness is by construction: keys are value-based over immutable
+    inputs (tombstone objects are write-once; oids are never reused), so a
+    directory change — commit, restore, compaction — yields a different key
+    and can never observe a stale array.  ``on_delete`` additionally drops
+    entries referencing a GC'd tombstone to bound memory.
+    """
+
+    def __init__(self, store: ObjectStore, capacity: int = 32):
+        super().__init__(capacity)
+        self.store = store
+        self.builds = 0    # full target-array constructions
+        self.extends = 0   # incremental parent -> child extensions
+        self.hits = 0
+
+    @staticmethod
+    def _key(d: Directory) -> Tuple:
+        return (d.tomb_oids, d.ts)
+
+    def entry(self, d: Directory) -> _Entry:
+        key = self._key(d)
+        val = self.lookup(key)
+        if isinstance(val, _Pending):
+            val = self._materialize(key, val)
+        if val is not None:
+            self.hits += 1
+            return val
+        val = _build_entry(self.store, d)
+        self.builds += 1
+        self.insert(key, val)
+        return val
+
+    def _materialize(self, key: Tuple, p: _Pending) -> _Entry:
+        """Pay the deferred merge: one sort of the accumulated batches and
+        one copy of the base array, regardless of how many commits piled
+        up since the base was last read."""
+        if len(p.batches) == 1:
+            add = p.batches[0]
+        else:
+            add = np.sort(np.concatenate(p.batches))
+        merged = p.base.targets
+        if add.shape[0]:
+            pos = np.searchsorted(merged, add)
+            merged = np.insert(merged, pos, add)
+        entry = _Entry(merged, p.complete)
+        self.insert(key, entry)
+        return entry
+
+    def get(self, d: Directory) -> "VisibilityIndex":
+        return VisibilityIndex(self.store, d, _entry=self.entry(d))
+
+    def extend(self, parent: Directory, child: Directory) -> None:
+        """Derive the child version's array from the parent's by recording
+        the newly added (already sorted at seal time) tombstone batches.
+        No-op unless the parent is cached, the child only *adds*
+        tombstones, and the parent array was horizon-complete."""
+        ckey = self._key(child)
+        if self._cache.get(ckey) is not None:
+            return
+        pval = self._cache.get(self._key(parent))
+        if pval is None or not pval.complete:
+            return
+        p_set = set(parent.tomb_oids)
+        c_set = set(child.tomb_oids)
+        if not (p_set <= c_set) or child.ts < parent.ts:
+            return
+        complete = True
+        ts = np.uint64(child.ts)
+        batches = []
+        for oid in child.tomb_oids:
+            if oid in p_set:
+                continue
+            t = self.store.get(oid)
+            m = t.commit_ts <= ts
+            batches.append(t.target if m.all() else t.target[m])
+            complete = complete and bool(m.all())
+        if isinstance(pval, _Pending):   # chain of unread commits: flatten
+            base, batches = pval.base, pval.batches + batches
+        else:
+            base = pval
+        if not batches:
+            self.insert(ckey, _Entry(base.targets, complete))
+        else:
+            self.insert(ckey, _Pending(base, batches, complete))
+        self.extends += 1
+
+    def on_delete(self, oid: int) -> None:
+        """A tombstone object was GC'd: drop entries referencing it."""
+        self.drop_if(lambda k: oid in k[0])
+
+
+def visibility_index(store: ObjectStore, d: Directory) -> "VisibilityIndex":
+    """The cached entry point every hot path goes through."""
+    cache = getattr(store, "vis_cache", None)
+    if cache is None:
+        cache = VisibilityCache(store)
+        store.vis_cache = cache
+    return cache.get(d)
 
 
 class VisibilityIndex:
-    """Sorted tombstone-target index for one directory (built once per op)."""
+    """View over one directory version's sorted tombstone-target array."""
 
-    def __init__(self, store: ObjectStore, d: Directory):
+    def __init__(self, store: ObjectStore, d: Directory,
+                 _entry: Optional[_Entry] = None):
         self.store = store
         self.d = d
-        targets = []
-        for oid in d.tomb_oids:
-            t = store.get(oid)
-            m = t.commit_ts <= np.uint64(d.ts)
-            targets.append(t.target[m])
-        self.targets = (np.sort(np.concatenate(targets))
-                        if targets else np.zeros((0,), np.uint64))
+        if _entry is None:
+            _entry = _build_entry(store, d)
+        self._entry = _entry
+
+    @property
+    def targets(self) -> np.ndarray:
+        return self._entry.targets
+
+    def object_targets(self, oid: int) -> np.ndarray:
+        """The slice of targets that can touch data object ``oid``."""
+        sl = self._entry.object_slices().get(oid)
+        if sl is None:
+            return _EMPTY_U64
+        return self._entry.targets[sl[0]:sl[1]]
+
+    def has_kills(self, obj: DataObject) -> bool:
+        return obj.oid in self._entry.object_slices()
+
+    def fully_visible(self, obj: DataObject) -> bool:
+        """Zone pruning: every row passes without masking — no tombstone
+        targets the object and its commit-ts zone is within the horizon."""
+        return (obj.oid not in self._entry.object_slices()
+                and obj.ts_zone[1] <= self.d.ts)
 
     def killed_mask(self, obj: DataObject) -> np.ndarray:
         """(nrows,) bool — True where a tombstone kills the row."""
         n = obj.nrows
-        if self.targets.shape[0] == 0 or n == 0:
-            return np.zeros((n,), bool)
-        base = pack_rowid(obj.oid, np.zeros((1,), np.uint64))[0]
-        lo = int(ops.lower_bound(self.targets, np.asarray([base]))[0])
-        hi = int(ops.lower_bound(self.targets,
-                                 np.asarray([base + np.uint64(n)]))[0])
         mask = np.zeros((n,), bool)
-        if hi > lo:
-            offs = (self.targets[lo:hi] - base).astype(np.int64)
-            mask[offs] = True
+        if n == 0:
+            return mask
+        t = self.object_targets(obj.oid)
+        if t.shape[0]:
+            base = pack_rowid(obj.oid, np.zeros((1,), np.uint64))[0]
+            mask[(t - base).astype(np.int64)] = True
         return mask
 
     def killed_rowids(self, rowids: np.ndarray) -> np.ndarray:
         """(k,) bool for arbitrary rowids."""
-        if self.targets.shape[0] == 0 or rowids.shape[0] == 0:
+        targets = self._entry.targets
+        if targets.shape[0] == 0 or rowids.shape[0] == 0:
             return np.zeros(rowids.shape, bool)
-        idx = ops.lower_bound(self.targets, rowids)
-        idx_c = np.minimum(idx, self.targets.shape[0] - 1)
-        return (self.targets[idx_c] == rowids) & (idx < self.targets.shape[0])
+        idx = ops.lower_bound(targets, rowids)
+        idx_c = np.minimum(idx, targets.shape[0] - 1)
+        return (targets[idx_c] == rowids) & (idx < targets.shape[0])
+
+    def killed_offsets(self, obj: DataObject, offs: np.ndarray) -> np.ndarray:
+        """(k,) bool for row offsets within one object — searches only the
+        object's slice of the target array, not the global array."""
+        t = self.object_targets(obj.oid)
+        if t.shape[0] == 0 or offs.shape[0] == 0:
+            return np.zeros(offs.shape, bool)
+        base = pack_rowid(obj.oid, np.zeros((1,), np.uint64))[0]
+        toffs = (t - base).astype(np.int64)
+        pos = np.searchsorted(toffs, offs)
+        pos_c = np.minimum(pos, toffs.shape[0] - 1)
+        return (toffs[pos_c] == offs) & (pos < toffs.shape[0])
+
+    def visible_rows(self, obj: DataObject, offs: np.ndarray) -> np.ndarray:
+        """Visibility of selected row offsets without materializing the
+        object-wide mask (Δ-scan hot path: cost ∝ candidates, not rows)."""
+        ok = ~self.killed_offsets(obj, offs)
+        lo, hi = obj.ts_zone
+        if hi <= self.d.ts:
+            return ok
+        if lo > self.d.ts:
+            return np.zeros(offs.shape, bool)
+        return ok & (obj.commit_ts[offs] <= np.uint64(self.d.ts))
 
     def visible_mask(self, obj: DataObject) -> np.ndarray:
+        if self.fully_visible(obj):
+            return np.ones((obj.nrows,), bool)
+        if obj.ts_zone[1] <= self.d.ts:
+            return ~self.killed_mask(obj)
         return (obj.commit_ts <= np.uint64(self.d.ts)) & ~self.killed_mask(obj)
+
+    def visible_count(self, obj: DataObject) -> int:
+        """Visible-row count without materializing a mask when pruned."""
+        if self.fully_visible(obj):
+            return obj.nrows
+        return int(self.visible_mask(obj).sum())
 
 
 def visible_rowcount(store: ObjectStore, d: Directory) -> int:
-    vi = VisibilityIndex(store, d)
-    return int(sum(int(vi.visible_mask(store.get(oid)).sum())
-                   for oid in d.data_oids))
+    vi = visibility_index(store, d)
+    return int(sum(vi.visible_count(store.get(oid)) for oid in d.data_oids))

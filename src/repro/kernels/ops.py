@@ -125,6 +125,38 @@ def lower_bound(sorted_u64: np.ndarray, queries_u64: np.ndarray) -> np.ndarray:
     return np.searchsorted(sorted_u64, queries_u64, side="left").astype(np.int64)
 
 
+def upper_bound(sorted_u64: np.ndarray, queries_u64: np.ndarray) -> np.ndarray:
+    """First index i with sorted[i] > q, per query. Returns int64 indices.
+
+    Served by the same searchsorted kernel: ub(q) == lb(q + 1) for any q
+    below the uint64 maximum (equal-key runs are what the probe paths
+    resolve vectorized with lb/ub pairs)."""
+    if queries_u64.shape[0] == 0 or sorted_u64.shape[0] == 0:
+        return np.zeros(queries_u64.shape, np.int64)
+    if backend_uses_pallas():
+        q = np.asarray(queries_u64, np.uint64)
+        with np.errstate(over="ignore"):
+            idx = lower_bound(sorted_u64, q + np.uint64(1))
+        return np.where(q == np.uint64(0xFFFFFFFFFFFFFFFF),
+                        np.int64(sorted_u64.shape[0]), idx)
+    return np.searchsorted(sorted_u64, queries_u64, side="right").astype(np.int64)
+
+
+def segment_expand(starts: np.ndarray, lens: np.ndarray):
+    """Expand per-segment (start, len) pairs into flat element indices.
+
+    Returns (seg, base, flat): ``seg[j]`` is the segment owning flat slot j,
+    ``base[i]`` the first flat slot of segment i (valid reduceat offsets when
+    every ``lens[i] > 0``), and ``flat[j]`` the source index — i.e. segment
+    ``seg[j]`` contributes ``starts[i] .. starts[i]+lens[i]-1`` in order.
+    Callers must pre-filter zero-length segments."""
+    total = int(lens.sum())
+    seg = np.repeat(np.arange(lens.shape[0]), lens)
+    base = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    flat = starts[seg] + (np.arange(total, dtype=np.int64) - base[seg])
+    return seg, base, flat
+
+
 # --------------------------------------------------------- diff aggregate
 
 class DiffAgg:
@@ -135,10 +167,10 @@ class DiffAgg:
       run_starts: (K,) int64 — index of each run's first element.
       run_lens:   (K,) int64
       run_sums:   (K,) int32 — net sign per run (0 == fully cancelled).
-      run_ids:    (N,) int64 — run index per element.
+      run_ids:    (N,) int64 — run index per element (computed lazily).
     """
 
-    __slots__ = ("boundary", "run_starts", "run_lens", "run_sums", "run_ids")
+    __slots__ = ("boundary", "run_starts", "run_lens", "run_sums", "_run_ids")
 
     def __init__(self, boundary, signs):
         boundary = np.asarray(boundary, bool)
@@ -150,7 +182,42 @@ class DiffAgg:
         self.run_lens = ends - self.run_starts
         self.run_sums = (np.add.reduceat(signs, self.run_starts)
                          if n else np.zeros((0,), np.int32)).astype(np.int32)
-        self.run_ids = np.cumsum(boundary).astype(np.int64) - 1
+        self._run_ids = None
+
+    @property
+    def run_ids(self) -> np.ndarray:
+        if self._run_ids is None:
+            self._run_ids = np.cumsum(self.boundary).astype(np.int64) - 1
+        return self._run_ids
+
+
+def _sort128(sig_lo: np.ndarray, sig_hi: np.ndarray) -> np.ndarray:
+    """Stable lexicographic argsort by (sig_lo, sig_hi).
+
+    Equivalent to ``np.lexsort((sig_hi, sig_lo))`` but ~2x faster: one
+    stable radix argsort on the primary word, then an exact refinement of
+    the (vanishingly rare for hashed sigs) equal-lo runs whose hi words
+    are out of order."""
+    order = np.argsort(sig_lo, kind="stable")
+    lo_s = sig_lo[order]
+    dup = np.flatnonzero(lo_s[1:] == lo_s[:-1])
+    if dup.shape[0]:
+        hi_s = sig_hi[order]
+        bad = dup[hi_s[dup + 1] < hi_s[dup]]
+        if bad.shape[0]:
+            # collision runs whose hi words are out of order: stable-sort
+            # each such equal-lo slice by hi, each exactly once
+            n = lo_s.shape[0]
+            neq = np.empty((n,), bool)
+            neq[0] = True
+            neq[1:] = lo_s[1:] != lo_s[:-1]
+            starts = np.flatnonzero(neq)
+            ends = np.append(starts[1:], n)
+            rid = np.searchsorted(starts, bad, side="right") - 1
+            for ri in np.unique(rid):
+                s, e = int(starts[ri]), int(ends[ri])
+                order[s:e] = order[s:e][np.argsort(hi_s[s:e], kind="stable")]
+    return order.astype(np.int64)
 
 
 def diff_aggregate(sig_lo: np.ndarray, sig_hi: np.ndarray,
@@ -167,7 +234,7 @@ def diff_aggregate(sig_lo: np.ndarray, sig_hi: np.ndarray,
         order = np.arange(n, dtype=np.int64)
         s_lo, s_hi, s_sg = sig_lo, sig_hi, np.asarray(signs, np.int32)
     else:
-        order = np.lexsort((sig_hi, sig_lo)).astype(np.int64)
+        order = _sort128(sig_lo, sig_hi)
         s_lo, s_hi = sig_lo[order], sig_hi[order]
         s_sg = np.asarray(signs, np.int32)[order]
 

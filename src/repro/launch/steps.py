@@ -23,6 +23,17 @@ from ..optim import AdamWCfg, OptState, apply_updates, init_opt_state
 BF16 = jnp.bfloat16
 
 
+def as_shardings(tree, mesh: Mesh):
+    """jax<=0.4 requires concrete ``Sharding``s in ``jax.jit``'s
+    in/out_shardings; newer jax accepts bare PartitionSpecs (under
+    ``jax.set_mesh``). Convert specs on old jax, pass through on new."""
+    if hasattr(jax, "set_mesh"):
+        return tree
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree, is_leaf=lambda s: isinstance(s, P))
+
+
 # -------------------------------------------------------------- policies
 
 def dp_size(mesh: Mesh) -> int:
@@ -208,8 +219,8 @@ def make_train_step(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
     _, in_sh = input_specs(cfg, shape, mesh, sc)
     jitted = jax.jit(
         train_step,
-        in_shardings=(st_specs, in_sh["batch"]),
-        out_shardings=(st_specs, P()),
+        in_shardings=as_shardings((st_specs, in_sh["batch"]), mesh),
+        out_shardings=as_shardings((st_specs, P()), mesh),
         donate_argnums=(0,),
     )
     return jitted, st_specs, in_sh
@@ -241,8 +252,8 @@ def make_prefill_step(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
         prefill_step, params_shape, abs_in["tokens"],
         *([abs_in["ctx"]] if "ctx" in abs_in else []))[1]
     cache_specs = tree_cache_specs(cfg, sc, cache_shape, mesh)
-    jitted = jax.jit(prefill_step, in_shardings=args,
-                     out_shardings=(P(), cache_specs))
+    jitted = jax.jit(prefill_step, in_shardings=as_shardings(args, mesh),
+                     out_shardings=as_shardings((P(), cache_specs), mesh))
     return jitted, pspecs, in_sh
 
 
@@ -260,8 +271,9 @@ def make_decode_step(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
     abs_in, in_sh = input_specs(cfg, shape, mesh, sc)
     jitted = jax.jit(
         decode,
-        in_shardings=(pspecs, in_sh["token"], in_sh["cache"]),
-        out_shardings=(P(), in_sh["cache"]),
+        in_shardings=as_shardings((pspecs, in_sh["token"], in_sh["cache"]),
+                                  mesh),
+        out_shardings=as_shardings((P(), in_sh["cache"]), mesh),
         donate_argnums=(2,),
     )
     return jitted, pspecs, in_sh, abs_in

@@ -120,5 +120,6 @@ def test_elastic_remap_subprocess():
     process (device count is fixed per process)."""
     r = subprocess.run([sys.executable, "-c", _SUBPROC],
                        capture_output=True, text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "ELASTIC_OK" in r.stdout, r.stderr[-2000:]

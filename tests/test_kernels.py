@@ -118,6 +118,7 @@ def test_empty_inputs():
 
 # ---------------------------------------------------------- flash attention
 
+@pytest.mark.slow
 @pytest.mark.parametrize("sq,sk,hd,causal", [(128, 128, 64, True),
                                              (128, 192, 64, False),
                                              (256, 256, 128, True)])
@@ -137,6 +138,7 @@ def test_flash_attention_vs_naive(sq, sk, hd, causal):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_attention_dispatcher_gqa_matches_xla_path():
     from repro.kernels.ops import attention
     B, S, H, KV, hd = 1, 64, 4, 2, 32

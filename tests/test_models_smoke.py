@@ -10,6 +10,8 @@ import pytest
 from repro.configs import all_arch_names, get_config
 from repro.models import lm
 
+pytestmark = pytest.mark.slow  # heavyweight model/accelerator tests
+
 ARCHS = all_arch_names()
 
 

@@ -7,6 +7,8 @@ from collections import Counter
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Column, CType, ConflictMode, Engine,

@@ -5,6 +5,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight model/accelerator tests
+
 _TMPL = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -33,5 +35,6 @@ def test_cell_lowers_and_compiles(arch, shape):
     src = _TMPL.replace("%ARCH%", arch).replace("%SHAPE%", shape)
     r = subprocess.run([sys.executable, "-c", src], capture_output=True,
                        text=True, timeout=420,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "CELL_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])

@@ -104,6 +104,7 @@ def test_examples_run():
     import sys
     r = subprocess.run([sys.executable, "examples/quickstart.py"],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-2000:]
     assert "merge:" in r.stdout

@@ -1,0 +1,415 @@
+"""ISSUE 1 coverage: the cached/incremental visibility subsystem.
+
+- cache reuse + incremental extension on commit (set_directory)
+- correctness across invalidation-relevant ops (restore, compaction, GC)
+- per-object target partitioning vs. a brute-force oracle
+- directory_at bisect vs. the old linear-scan semantics
+- vectorized probe paths (locate_keys run walk, locate_rowsig_multi)
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Column, CType, ConflictMode, Engine, Schema,
+                        snapshot_diff, sql_diff, three_way_merge)
+from repro.core.compaction import compact_objects
+from repro.core.directory import Directory
+from repro.core.visibility import (VisibilityCache, VisibilityIndex,
+                                   visibility_index)
+from repro.kernels import ops
+
+SCH = Schema((Column("k", CType.I64), Column("v", CType.I64)),
+             primary_key=("k",))
+SCH_NOPK = Schema(SCH.columns, primary_key=None)
+
+
+def mk_engine(n=40, pk=True):
+    e = Engine()
+    e.create_table("t", SCH if pk else SCH_NOPK)
+    e.insert("t", {"k": np.arange(n, dtype=np.int64),
+                   "v": np.zeros(n, np.int64)})
+    return e
+
+
+def brute_visible(store, d, obj):
+    """Oracle: per-row visibility via a python set of tombstone targets."""
+    dead = set()
+    for toid in d.tomb_oids:
+        t = store.get(toid)
+        for tgt, ts in zip(t.target.tolist(), t.commit_ts.tolist()):
+            if ts <= d.ts:
+                dead.add(tgt)
+    from repro.core.objects import pack_rowid
+    rids = pack_rowid(obj.oid, np.arange(obj.nrows, dtype=np.uint64))
+    return np.array([(ts <= d.ts) and (int(r) not in dead)
+                     for r, ts in zip(rids, obj.commit_ts.tolist())], bool)
+
+
+# ------------------------------------------------------------------ cache
+
+def test_repeated_ops_reuse_one_build():
+    e = mk_engine()
+    e.delete_by_keys("t", {"k": np.array([3, 5, 7])})
+    c = e.store.vis_cache
+    builds0 = c.builds
+    for _ in range(4):
+        e.table("t").scan()
+        e.table("t").count()
+    assert c.builds == builds0          # same directory version -> no rebuild
+    assert c.hits >= 8
+
+
+def test_commit_extends_instead_of_rebuilding():
+    e = mk_engine()
+    e.table("t").scan()                  # warm the current version
+    c = e.store.vis_cache
+    b0, x0 = c.builds, c.extends
+    e.delete_by_keys("t", {"k": np.array([1, 2])})
+    e.delete_by_keys("t", {"k": np.array([10, 11])})
+    assert c.extends >= x0 + 2           # each commit merged incrementally
+    assert c.builds == b0                # ... with zero full rebuilds
+    # and the extended array equals a from-scratch build
+    d = e.table("t").directory
+    fresh = VisibilityIndex(e.store, d)  # direct ctor bypasses the cache
+    cached = visibility_index(e.store, d)
+    np.testing.assert_array_equal(fresh.targets, cached.targets)
+
+
+def test_write_burst_defers_merge_until_read():
+    """A write-only burst of commits records pending batches (O(batch) per
+    commit); the first read pays one merge and matches a fresh build."""
+    e = mk_engine(60)
+    e.table("t").scan()                  # warm the current version
+    c = e.store.vis_cache
+    b0, x0 = c.builds, c.extends
+    for i in range(10):                  # no reads in between
+        e.delete_by_keys("t", {"k": np.array([i])})
+    assert c.extends == x0 + 10
+    assert c.builds == b0
+    d = e.table("t").directory
+    cached = visibility_index(e.store, d)
+    fresh = VisibilityIndex(e.store, d)
+    np.testing.assert_array_equal(fresh.targets, cached.targets)
+    assert e.table("t").count() == 50
+
+
+def test_warm_diff_reports_zero_visibility_builds():
+    e = mk_engine()
+    s1 = e.create_snapshot("s1", "t")
+    e.clone_table("t2", s1)
+    e.update_by_keys("t2", {"k": np.array([1, 2, 3]),
+                            "v": np.array([9, 9, 9])})
+    s2 = e.create_snapshot("s2", "t2")
+    snapshot_diff(e.store, s1, s2)       # cold
+    warm = snapshot_diff(e.store, s1, s2)
+    assert warm.stats.visibility_builds == 0
+    assert warm.n_groups == 6
+
+
+def test_cache_lru_eviction_bounded():
+    e = mk_engine(8)
+    e.store.vis_cache = VisibilityCache(e.store, capacity=2)
+    for i in range(6):
+        e.delete_by_keys("t", {"k": np.array([i])})
+    assert len(e.store.vis_cache._cache) <= 2
+    # correctness unaffected by evictions
+    assert e.table("t").count() == 2
+
+
+def test_gc_drops_entries_referencing_dead_tombstones():
+    e = Engine(retention_versions=1)
+    e.create_table("t", SCH)
+    e.insert("t", {"k": np.arange(20, dtype=np.int64),
+                   "v": np.zeros(20, np.int64)})
+    e.delete_by_keys("t", {"k": np.arange(10, dtype=np.int64)})
+    tomb_oids = e.table("t").directory.tomb_oids
+    e.table("t").scan()
+    compact_objects(e, "t", list(e.table("t").directory.data_oids))
+    e.gc()
+    assert all(not e.store.has(o) for o in tomb_oids)
+    cache = e.store.vis_cache
+    assert all(not (set(k[0]) & set(tomb_oids)) for k in cache._cache)
+    assert e.table("t").count() == 10
+
+
+def test_delta_cache_memoizes_and_invalidates_by_key():
+    e = mk_engine()
+    s1 = e.create_snapshot("s1", "t")
+    e.clone_table("t2", s1)
+    e.update_by_keys("t2", {"k": np.array([1]), "v": np.array([9])})
+    s2 = e.create_snapshot("s2", "t2")
+    d1 = snapshot_diff(e.store, s1, s2)
+    assert d1.stats.delta_cache_hits == 0
+    d2 = snapshot_diff(e.store, s1, s2)
+    assert d2.stats.delta_cache_hits == 1
+    np.testing.assert_array_equal(d1.diff_cnt, d2.diff_cnt)
+    np.testing.assert_array_equal(d1.rowid, d2.rowid)
+    # a new commit changes the directory (new key) -> no stale reuse
+    e.update_by_keys("t2", {"k": np.array([2]), "v": np.array([8])})
+    s3 = e.create_snapshot("s3", "t2")
+    d3 = snapshot_diff(e.store, s1, s3)
+    assert d3.stats.delta_cache_hits == 0
+    assert d3.n_groups == 4
+
+
+def test_delta_cache_entries_dropped_on_gc():
+    e = Engine(retention_versions=1)
+    e.create_table("t", SCH)
+    e.insert("t", {"k": np.arange(10, dtype=np.int64),
+                   "v": np.zeros(10, np.int64)})
+    s1 = e.current_snapshot("t")
+    e.delete_by_keys("t", {"k": np.array([0, 1])})
+    s2 = e.current_snapshot("t")
+    snapshot_diff(e.store, s1, s2)
+    compact_objects(e, "t", list(e.table("t").directory.data_oids))
+    e.gc()
+    alive = set(e.store.oids())
+    for key in e.store.delta_cache._cache:
+        for part in (key[0], key[1], key[3], key[4]):
+            assert set(part) <= alive
+
+
+# -------------------------------------------------- correctness across ops
+
+def test_no_stale_visibility_after_restore():
+    e = mk_engine()
+    snap = e.create_snapshot("before", "t")
+    e.delete_by_keys("t", {"k": np.arange(10, dtype=np.int64)})
+    assert e.table("t").count() == 30
+    e.restore_table("t", "before")
+    assert e.table("t").count() == 40    # deleted rows visible again
+    e.delete_by_keys("t", {"k": np.array([0])})
+    assert e.table("t").count() == 39
+
+
+def test_no_stale_visibility_after_compaction():
+    e = mk_engine()
+    e.delete_by_keys("t", {"k": np.array([3, 5, 7])})
+    before, _ = e.table("t").scan()
+    compact_objects(e, "t", list(e.table("t").directory.data_oids))
+    after, _ = e.table("t").scan()
+    assert sorted(before["k"].tolist()) == sorted(after["k"].tolist())
+    assert e.table("t").directory.tomb_oids == ()  # tombs died with targets
+
+
+def test_partitioned_masks_match_bruteforce_oracle():
+    rng = np.random.default_rng(7)
+    e = mk_engine(60)
+    for _ in range(3):
+        ks = rng.choice(60, size=5, replace=False)
+        e.delete_by_keys("t", {"k": ks.astype(np.int64)})
+    d = e.table("t").directory
+    vi = visibility_index(e.store, d)
+    for oid in d.data_oids:
+        obj = e.store.get(oid)
+        np.testing.assert_array_equal(
+            vi.visible_mask(obj), brute_visible(e.store, d, obj))
+        assert vi.has_kills(obj) == bool(
+            (~brute_visible(e.store, d, obj)).any()
+            or (obj.commit_ts > np.uint64(d.ts)).any()) or not vi.has_kills(obj)
+    # killed_rowids agrees with killed_mask per object
+    for oid in d.data_oids:
+        obj = e.store.get(oid)
+        np.testing.assert_array_equal(
+            vi.killed_rowids(obj.rowids()), vi.killed_mask(obj))
+
+
+def test_fully_visible_zone_pruning():
+    e = mk_engine()
+    d = e.table("t").directory
+    vi = visibility_index(e.store, d)
+    for oid in d.data_oids:
+        obj = e.store.get(oid)
+        assert vi.fully_visible(obj)
+        assert vi.visible_mask(obj).all()
+        assert vi.visible_count(obj) == obj.nrows
+    # a horizon before the insert sees nothing
+    old = Directory(d.data_oids, d.tomb_oids, 0)
+    vi0 = visibility_index(e.store, old)
+    for oid in d.data_oids:
+        assert not vi0.fully_visible(e.store.get(oid))
+        assert not vi0.visible_mask(e.store.get(oid)).any()
+
+
+# -------------------------------------------------------------- PITR bisect
+
+def linear_directory_at(history, name, ts):
+    best = None
+    for t, d in history:
+        if t <= ts:
+            best = d
+    if best is None:
+        raise KeyError(name)
+    return Directory(best.data_oids, best.tomb_oids, ts)
+
+
+def test_directory_at_bisect_matches_linear_scan():
+    e = mk_engine(10)
+    for i in range(5):
+        e.insert("t", {"k": np.array([100 + i]), "v": np.array([i])})
+    t = e.table("t")
+    for ts in range(0, e.ts + 2):
+        got = t.directory_at(ts)
+        exp = linear_directory_at(t.history, "t", ts)
+        assert got == exp
+
+
+def test_directory_at_after_restore_shadows_newer_entries():
+    e = mk_engine(10)
+    snap = e.create_snapshot("s", "t")
+    snap_ts = snap.ts
+    e.insert("t", {"k": np.array([100]), "v": np.array([1])})
+    e.insert("t", {"k": np.array([101]), "v": np.array([2])})
+    e.restore_table("t", "s")            # out-of-order apply-ts
+    t = e.table("t")
+    # history stays sorted by ts
+    tss = [h[0] for h in t.history]
+    assert tss == sorted(tss)
+    # any horizon >= snap_ts now resolves to the restored version
+    for ts in range(snap_ts, e.ts + 2):
+        assert t.directory_at(ts).data_oids == snap.directory.data_oids
+    assert e.table("t").count() == 10
+
+
+def test_directory_at_before_history_raises():
+    e = Engine()
+    e.next_ts(); e.next_ts()
+    e.create_table("t", SCH)
+    with pytest.raises(KeyError):
+        e.table("t").directory_at(0)
+
+
+# ------------------------------------------------------- vectorized probes
+
+def test_locate_keys_resolves_invisible_run_heads():
+    """An updated key's old row sorts at the lower bound but is dead: the
+    vectorized run resolution must skip it (in its object) and the LSM walk
+    must find the new version in the newer object."""
+    e = mk_engine(50)
+    from repro.core.sigs import key_sigs_for_lookup
+    e.update_by_keys("t", {"k": np.arange(0, 50, 3, dtype=np.int64),
+                           "v": np.full(17, 5, np.int64)})
+    batch, rowids = e.table("t").scan()
+    expect = dict(zip(batch["k"].tolist(), rowids.tolist()))
+    klo, khi = key_sigs_for_lookup(SCH, {"k": np.arange(50, dtype=np.int64)})
+    got = e.table("t").locate_keys(klo, khi)
+    for i in range(50):
+        assert int(got[i]) == expect[i], i
+    # absent keys miss
+    klo, khi = key_sigs_for_lookup(SCH, {"k": np.array([777], np.int64)})
+    assert e.table("t").locate_keys(klo, khi)[0] == 0
+
+
+def test_locate_rowsig_multi_cardinality():
+    """NoPK: k duplicates inserted, need<=k resolved, visibility honored."""
+    e = Engine()
+    e.create_table("t", SCH_NOPK)
+    # 4 identical rows (k=1,v=1), 2 identical (k=2,v=2), 1 unique
+    e.insert("t", {"k": np.array([1, 1, 1, 1, 2, 2, 3], np.int64),
+                   "v": np.array([1, 1, 1, 1, 2, 2, 3], np.int64)})
+    _, _, row_lo, row_hi = e.table("t").scan(with_sigs=True)
+    batch, rowids = e.table("t").scan()
+    k = batch["k"]
+    sig1 = (row_lo[k == 1][0], row_hi[k == 1][0])
+    sig2 = (row_lo[k == 2][0], row_hi[k == 2][0])
+    sig_lo = np.array([sig1[0], sig2[0]], np.uint64)
+    sig_hi = np.array([sig1[1], sig2[1]], np.uint64)
+    found = e.table("t").locate_rowsig_multi(sig_lo, sig_hi,
+                                             np.array([3, 5], np.int64))
+    assert found[0].shape[0] == 3        # capped by need
+    assert found[1].shape[0] == 2        # capped by availability
+    assert set(found[0]) <= set(rowids[k == 1].tolist())
+    assert set(found[1]) == set(rowids[k == 2].tolist())
+    # delete two of the k=1 dups: only 2 remain findable
+    tx = e.begin()
+    tx.delete_rowids("t", found[0][:2])
+    tx.commit()
+    found2 = e.table("t").locate_rowsig_multi(sig_lo, sig_hi,
+                                              np.array([4, 1], np.int64))
+    assert found2[0].shape[0] == 2
+    assert found2[1].shape[0] == 1
+
+
+def test_upper_bound_matches_numpy():
+    rng = np.random.default_rng(3)
+    arr = np.sort(rng.integers(0, 100, 50).astype(np.uint64))
+    q = rng.integers(0, 110, 30).astype(np.uint64)
+    np.testing.assert_array_equal(
+        ops.upper_bound(arr, q),
+        np.searchsorted(arr, q, side="right").astype(np.int64))
+    # uint64-max query cannot overflow into index 0
+    q_max = np.array([np.iinfo(np.uint64).max], np.uint64)
+    assert ops.upper_bound(arr, q_max)[0] == arr.shape[0]
+
+
+def test_upper_bound_pallas_interpret_agrees():
+    prev = ops.FORCE_PALLAS_INTERPRET
+    ops.FORCE_PALLAS_INTERPRET = True
+    try:
+        rng = np.random.default_rng(4)
+        arr = np.sort(rng.integers(0, 1 << 62, 64).astype(np.uint64))
+        q = np.concatenate([rng.integers(0, 1 << 62, 17).astype(np.uint64),
+                            arr[:5],
+                            np.array([np.iinfo(np.uint64).max], np.uint64)])
+        np.testing.assert_array_equal(
+            ops.upper_bound(arr, q),
+            np.searchsorted(arr, q, side="right").astype(np.int64))
+    finally:
+        ops.FORCE_PALLAS_INTERPRET = prev
+
+
+def test_per_key_conflicts_vectorized():
+    e = mk_engine(20)
+    s1 = e.create_snapshot("s1", "t")
+    e.clone_table("t2", s1)
+    # t: update keys 0,1 ; t2: update keys 1,2 -> key 1 conflicts
+    e.update_by_keys("t", {"k": np.array([0, 1]), "v": np.array([5, 5])})
+    e.update_by_keys("t2", {"k": np.array([1, 2]), "v": np.array([6, 6])})
+    d = snapshot_diff(e.store, e.current_snapshot("t"),
+                      e.current_snapshot("t2"))
+    groups = d.per_key_conflicts()
+    # every touched key (0, 1, 2) has a version on both sides of the diff
+    assert len(groups) == 3
+    for grp in groups:
+        assert (np.sign(d.diff_cnt[grp]) > 0).any()
+        assert (np.sign(d.diff_cnt[grp]) < 0).any()
+        assert np.unique(d.key_lo[grp]).shape[0] == 1
+    empty = snapshot_diff(e.store, e.current_snapshot("t"),
+                          e.current_snapshot("t"))
+    assert empty.per_key_conflicts() == []
+
+
+def test_merge_and_diff_agree_after_cache_churn():
+    """End-to-end: interleave commits, restores and compaction, then check
+    snapshot_diff == sql_diff and a merge lands correctly (PK + NoPK)."""
+    for pk in (True, False):
+        e = Engine()
+        e.create_table("t", SCH if pk else SCH_NOPK)
+        e.insert("t", {"k": np.arange(30, dtype=np.int64),
+                       "v": np.zeros(30, np.int64)})
+        s0 = e.create_snapshot("s0", "t")
+        e.clone_table("b", s0)
+        tx = e.begin()
+        if pk:
+            tx.update_by_keys("b", {"k": np.array([1, 2, 3]),
+                                    "v": np.array([7, 7, 7])})
+        else:
+            _, rowids = e.table("b").scan()
+            tx.delete_rowids("b", rowids[:3])
+            tx.insert("b", {"k": np.array([100, 101, 102], np.int64),
+                            "v": np.array([7, 7, 7], np.int64)})
+        tx.commit()
+        compact_objects(e, "b", list(e.table("b").directory.data_oids))
+        sb = e.create_snapshot("sb", "b")
+        d1 = snapshot_diff(e.store, s0, sb)
+        d2 = sql_diff(e.store, s0, sb)
+        assert d1.n_groups == d2.n_groups == 6
+        rep = three_way_merge(e, "t", sb, base=s0, mode=ConflictMode.ACCEPT)
+        assert rep.true_conflicts == 0
+        got = dict()
+        batch, _ = e.table("t").scan()
+        for kk, vv in zip(batch["k"].tolist(), batch["v"].tolist()):
+            got.setdefault(kk, []).append(vv)
+        if pk:
+            assert got[1] == [7] and got[2] == [7] and got[3] == [7]
+        else:
+            assert got[100] == [7] and got[101] == [7] and got[102] == [7]
