@@ -211,11 +211,10 @@ def table23_diff_merge(n_rows: int = 2_000_000) -> List[Dict]:
                     "l_linenumber": payload["l_linenumber"]})
             else:
                 t = engine2.table("lineitem")
-                found = t.locate_rowsig_multi(
+                rids = t.locate_rowsig_multi(
                     dd.row_lo[minus], dd.row_hi[minus],
-                    (-dd.diff_cnt[minus]).astype(np.int64))
-                tx.delete_rowids("lineitem", np.concatenate(found)
-                                 if found else np.zeros((0,), np.uint64))
+                    (-dd.diff_cnt[minus]).astype(np.int64), flat=True)
+                tx.delete_rowids("lineitem", rids)
             ins = gather_payload(engine2.store, dd.schema, dd.rowid[plus])
             tx.insert("lineitem", ins)
             tx.commit()

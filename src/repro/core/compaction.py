@@ -69,15 +69,21 @@ def compact_objects(engine, table: str, src_oids: Sequence[int],
         batch = concat_batches(t.schema, batches)
         ts = np.concatenate(tss)
         row_lo, row_hi = np.concatenate(rlo), np.concatenate(rhi)
-        key_lo, key_hi = np.concatenate(klo), np.concatenate(khi)
+        if t.schema.has_pk:
+            key_lo, key_hi = np.concatenate(klo), np.concatenate(khi)
+        else:
+            key_lo, key_hi = row_lo, row_hi  # NoPK: key IS the row signature
         lob = {k: np.concatenate([d[k] for d in lsigs])
                for k in (lsigs[0] if lsigs else {})}
         order = np.lexsort((key_hi, key_lo))
         for s in range(0, order.shape[0], OBJECT_CAPACITY):
             idx = order[s:s + OBJECT_CAPACITY]
+            rl, rh = row_lo[idx], row_hi[idx]
+            kl = rl if key_lo is row_lo else key_lo[idx]
+            kh = rh if key_hi is row_hi else key_hi[idx]
             obj = seal_data_object(
                 engine.store.new_oid(), t.schema, take_batch(batch, idx),
-                ts[idx], row_lo[idx], row_hi[idx], key_lo[idx], key_hi[idx],
+                ts[idx], rl, rh, kl, kh,
                 {k: v[idx] for k, v in lob.items()})
             engine.store.put(obj)
             new_oids.append(obj.oid)

@@ -17,10 +17,18 @@ Stream row fields:
 Because objects store per-row signatures, "joining with the base revision to
 fetch deleted values" (paper §5.1 step 2) is a direct gather by rowid and is
 deferred until a payload is actually output.
+
+Sortedness invariant (ISSUE 2): data objects are sealed key-sorted, so every
+emitted per-object run is already in (key_lo, key_hi) order — ForkBase-style
+ordered immutable chunks. ``signed_delta`` k-way merges those presorted runs
+once (``SignedStream.merge_by_key``) and caches the globally key-sorted
+stream; diff aggregation, PK collapse and the merge paths then run sort-free
+(``presorted=True``), never rebuilding an order that was free at emission.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -30,44 +38,128 @@ from .objects import DataObject, ObjectStore, pack_rowid
 from .visibility import KeyedLRU, visibility_index
 
 
+_FIELDS = ("sign", "key_lo", "key_hi", "row_lo", "row_hi", "rowid")
+
+_RUN0 = np.zeros((1,), np.int64)
+_RUN0.setflags(write=False)
+
+
 @dataclass
 class SignedStream:
+    """A signed Δ stream with a per-part sortedness invariant.
+
+    ``runs`` (when not None) is an int64 array of run-start offsets
+    (``runs[0] == 0``): every run ``[runs[i], runs[i+1])`` is sorted by
+    (key_lo, key_hi) — the order data objects are sealed in, so presorted
+    emission is free. A single run means the whole stream is key-sorted.
+    ``None`` means no ordering is known (the unsorted fallback).
+
+    ``key_is_row`` marks streams whose key signature IS the row signature
+    (NoPK emission): for those, key order is value order and diff
+    aggregation needs no sort at all.
+    """
     sign: np.ndarray      # (n,) int32
     key_lo: np.ndarray    # (n,) uint64
     key_hi: np.ndarray
     row_lo: np.ndarray
     row_hi: np.ndarray
     rowid: np.ndarray     # (n,) uint64
+    runs: Optional[np.ndarray] = None
+    key_is_row: bool = False
 
     @property
     def n(self) -> int:
         return int(self.sign.shape[0])
 
+    @property
+    def sorted_by_key(self) -> bool:
+        """True iff the whole stream is one key-sorted run."""
+        return self.runs is not None and self.runs.shape[0] <= 1
+
     @staticmethod
     def empty() -> "SignedStream":
         z64 = np.zeros((0,), np.uint64)
-        return SignedStream(np.zeros((0,), np.int32), z64, z64, z64, z64, z64)
+        return SignedStream(np.zeros((0,), np.int32), z64, z64, z64, z64, z64,
+                            runs=np.zeros((0,), np.int64), key_is_row=True)
 
     @staticmethod
     def concat(parts) -> "SignedStream":
         parts = [p for p in parts if p.n]
         if not parts:
             return SignedStream.empty()
-        return SignedStream(*[np.concatenate([getattr(p, f) for p in parts])
-                              for f in ("sign", "key_lo", "key_hi",
-                                        "row_lo", "row_hi", "rowid")])
+        if len(parts) == 1:
+            return parts[0]
+        alias = all(p.key_lo is p.row_lo and p.key_hi is p.row_hi
+                    for p in parts)
+        fields = []
+        for f in _FIELDS:
+            if alias and f in ("key_lo", "key_hi"):
+                fields.append(None)  # patched below from the row arrays
+            else:
+                fields.append(np.concatenate([getattr(p, f) for p in parts]))
+        if alias:
+            fields[1], fields[2] = fields[3], fields[4]
+        runs = None
+        if all(p.runs is not None for p in parts):
+            offs, off = [], 0
+            for p in parts:
+                offs.append((p.runs if p.runs.shape[0] else _RUN0) + off)
+                off += p.n
+            runs = np.concatenate(offs)
+        return SignedStream(*fields, runs=runs,
+                            key_is_row=all(p.key_is_row for p in parts))
 
     def take(self, idx) -> "SignedStream":
-        return SignedStream(self.sign[idx], self.key_lo[idx], self.key_hi[idx],
-                            self.row_lo[idx], self.row_hi[idx], self.rowid[idx])
+        rl, rh = self.row_lo[idx], self.row_hi[idx]
+        kl = rl if self.key_lo is self.row_lo else self.key_lo[idx]
+        kh = rh if self.key_hi is self.row_hi else self.key_hi[idx]
+        return SignedStream(self.sign[idx], kl, kh, rl, rh,
+                            self.rowid[idx], key_is_row=self.key_is_row)
+
+    def filter_mask(self, mask: np.ndarray) -> "SignedStream":
+        """Subset by boolean mask. Order-preserving, so a fully key-sorted
+        stream stays key-sorted (finer run metadata is dropped)."""
+        out = self.take(np.flatnonzero(mask))
+        if self.sorted_by_key:
+            out.runs = _RUN0 if out.n else np.zeros((0,), np.int64)
+        return out
+
+    def merge_by_key(self) -> "SignedStream":
+        """Materialize the globally key-sorted stream: a stable k-way merge
+        of the presorted runs (ties keep emission order), falling back to a
+        stable 128-bit sort when no run structure is known. Identity when
+        already sorted."""
+        if self.n == 0 or self.sorted_by_key:
+            return self
+        if self.runs is not None:
+            order = ops.merge128_runs(self.key_lo, self.key_hi, self.runs)
+        else:
+            order = ops._sort128(self.key_lo, self.key_hi)
+        out = self.take(order)
+        out.runs = _RUN0
+        return out
 
 
-def _emit(obj: DataObject, idx: np.ndarray, sign: int) -> SignedStream:
+def _emit(obj: DataObject, idx: Optional[np.ndarray],
+          sign: int) -> SignedStream:
+    """One presorted run from one object. ``idx`` must be ascending row
+    offsets (objects are sealed key-sorted, so any ascending subset is a
+    key-sorted run); ``idx=None`` emits every row zero-copy — the stream
+    fields ARE the object's immutable arrays."""
+    key_is_row = obj.key_lo is obj.row_lo
+    if idx is None:
+        return SignedStream(
+            np.full((obj.nrows,), sign, np.int32),
+            obj.key_lo, obj.key_hi, obj.row_lo, obj.row_hi, obj.rowids(),
+            runs=_RUN0, key_is_row=key_is_row)
+    rl, rh = obj.row_lo[idx], obj.row_hi[idx]
+    kl = rl if key_is_row else obj.key_lo[idx]
+    kh = rh if key_is_row else obj.key_hi[idx]
     return SignedStream(
         np.full((idx.shape[0],), sign, np.int32),
-        obj.key_lo[idx], obj.key_hi[idx],
-        obj.row_lo[idx], obj.row_hi[idx],
-        pack_rowid(obj.oid, idx.astype(np.uint64)))
+        kl, kh, rl, rh,
+        pack_rowid(obj.oid, idx.astype(np.uint64)),
+        runs=_RUN0, key_is_row=key_is_row)
 
 
 class DeltaStats:
@@ -117,8 +209,10 @@ class DeltaCache(KeyedLRU):
     def put(self, a: Directory, b: Directory, stream: "SignedStream"):
         if stream.n > self.MAX_CACHED_ROWS:
             return
-        for f in ("sign", "key_lo", "key_hi", "row_lo", "row_hi", "rowid"):
+        for f in _FIELDS:
             getattr(stream, f).setflags(write=False)
+        if stream.runs is not None:
+            stream.runs.setflags(write=False)
         self.insert(self._key(a, b), stream)
 
     def on_delete(self, oid: int) -> None:
@@ -146,23 +240,20 @@ def signed_delta(store: ObjectStore, a: Directory, b: Directory,
     stats.visibility_builds += store.vis_cache.builds - b0
     parts = []
 
-    for oid in only_b:
-        obj = store.get(oid)
-        stats.objects_scanned += 1
-        stats.rows_scanned += obj.nrows
-        stats.bytes_scanned += int(obj.nbytes)
-        idx = np.flatnonzero(vi_b.visible_mask(obj))
-        if idx.shape[0]:
-            parts.append(_emit(obj, idx, +1))
-
-    for oid in only_a:
-        obj = store.get(oid)
-        stats.objects_scanned += 1
-        stats.rows_scanned += obj.nrows
-        stats.bytes_scanned += int(obj.nbytes)
-        idx = np.flatnonzero(vi_a.visible_mask(obj))
-        if idx.shape[0]:
-            parts.append(_emit(obj, idx, -1))
+    for only, vi, sign in ((only_b, vi_b, +1), (only_a, vi_a, -1)):
+        for oid in only:
+            obj = store.get(oid)
+            stats.objects_scanned += 1
+            stats.rows_scanned += obj.nrows
+            stats.bytes_scanned += int(obj.nbytes)
+            if obj.nrows == 0:
+                continue
+            if vi.fully_visible(obj):
+                parts.append(_emit(obj, None, sign))  # zero-copy run
+                continue
+            idx = np.flatnonzero(vi.visible_mask(obj))
+            if idx.shape[0]:
+                parts.append(_emit(obj, idx, sign))
 
     # Shared objects: only rows whose visibility DIFFERS can contribute.
     # The candidates are exactly the tombstone targets of either side within
@@ -173,7 +264,9 @@ def signed_delta(store: ObjectStore, a: Directory, b: Directory,
         obj = store.get(oid)
         # zone pruning: a shared object with no tombstone from either side
         # and every commit_ts within both horizons cannot contribute
-        any_tomb = vi_a.has_kills(obj) or vi_b.has_kills(obj)
+        kills_a = vi_a.has_kills(obj)
+        kills_b = vi_b.has_kills(obj)
+        any_tomb = kills_a or kills_b
         ts_touched = obj.nrows > 0 and obj.ts_zone[1] > ts_min
         if not any_tomb and not ts_touched:
             stats.objects_skipped_shared += 1
@@ -183,19 +276,29 @@ def signed_delta(store: ObjectStore, a: Directory, b: Directory,
         base = pack_rowid(obj.oid, np.zeros((1,), np.uint64))[0]
         cand_parts = []
         if any_tomb:
-            for vi in (vi_a, vi_b):
-                t = vi.object_targets(oid)
-                if t.shape[0]:
+            for vi, kills in ((vi_a, kills_a), (vi_b, kills_b)):
+                if kills:
+                    t = vi.object_targets(oid)
                     cand_parts.append((t - base).astype(np.int64))
         if ts_touched:
             cand_parts.append(np.flatnonzero(
                 obj.commit_ts > np.uint64(ts_min)))
-        cand = np.unique(np.concatenate(cand_parts))
+        # each part is already sorted & duplicate-free (target slices and
+        # flatnonzero results); the common single-part case skips the sort
+        cand = (cand_parts[0] if len(cand_parts) == 1
+                else np.unique(np.concatenate(cand_parts)))
         if cand.shape[0] == 0:
             stats.objects_skipped_shared += 1
             continue
         stats.objects_scanned += 1
         stats.rows_scanned += int(cand.shape[0])
+        if not ts_touched and kills_a != kills_b:
+            # one-sided tombstones within both horizons (the dominant diff
+            # shape): every candidate flips visibility the same way — no
+            # per-row visibility probes needed. Rows killed only in b were
+            # visible in a (−); rows killed only in a are visible in b (+).
+            parts.append(_emit(obj, cand, -1 if kills_b else +1))
+            continue
         va = vi_a.visible_rows(obj, cand)
         vb = vi_b.visible_rows(obj, cand)
         plus = cand[vb & ~va]
@@ -205,7 +308,9 @@ def signed_delta(store: ObjectStore, a: Directory, b: Directory,
         if minus.shape[0]:
             parts.append(_emit(obj, minus, -1))
 
-    stream = SignedStream.concat(parts)
+    # k-way merge the presorted per-object runs: the cached stream is
+    # globally key-sorted, so every consumer aggregates sort-free
+    stream = SignedStream.concat(parts).merge_by_key()
     cache.put(a, b, stream)
     return stream
 
@@ -223,7 +328,14 @@ def full_scan_stream(store: ObjectStore, d: Directory, sign: int,
         stats.objects_scanned += 1
         stats.rows_scanned += obj.nrows
         stats.bytes_scanned += int(obj.nbytes)
+        if obj.nrows == 0:
+            continue
+        if vi.fully_visible(obj):
+            parts.append(_emit(obj, None, sign))  # zero-copy run
+            continue
         idx = np.flatnonzero(vi.visible_mask(obj))
         if idx.shape[0]:
             parts.append(_emit(obj, idx, sign))
+    # presorted runs, deliberately NOT merged here: the SQL-baseline path
+    # concatenates two full scans and pays one merge at aggregation time
     return SignedStream.concat(parts)

@@ -59,8 +59,11 @@ class DiffResult:
         the (typically few) conflicting runs are materialized."""
         if self.n_groups == 0:
             return []
+        # NoPK results are value-sorted and key == value, so the key
+        # grouping is free; PK results need the (small) key sort
         order, agg = ops.diff_aggregate(self.key_lo, self.key_hi,
-                                        np.ones_like(self.diff_cnt))
+                                        np.ones_like(self.diff_cnt),
+                                        presorted=not self.schema.has_pk)
         starts = agg.run_starts
         sg = np.sign(self.diff_cnt[order])
         any_pos = np.add.reduceat((sg > 0).astype(np.int64), starts) > 0
@@ -94,10 +97,14 @@ def _aggregate_stream(schema: Schema, stream: SignedStream,
                       stats: DeltaStats) -> DiffResult:
     """Diff aggregation: cancel identical changes, keep net per value-group.
 
-    Grouping is by full row signature (Listing-2 multiset semantics). The
-    representative payload rowid per group prefers a + row (payload exists in
-    the right snapshot) and falls back to a − row (gathered from the left /
-    base objects — the paper's tombstone join)."""
+    Grouping is by full row signature (Listing-2 multiset semantics),
+    executed sort-free along the stream's presorted key order: for NoPK
+    streams key == value so the groups are immediate; for PK streams the
+    value groups are sub-groups of the (≤ 2-element) per-key runs and only
+    the *surviving* groups pay a final sort into the value-signature output
+    order. The representative payload rowid per group prefers a + row
+    (payload exists in the right snapshot) and falls back to a − row
+    (gathered from the left / base objects — the paper's tombstone join)."""
     if stream.n == 0:
         z64 = np.zeros((0,), np.uint64)
         return DiffResult(schema, np.zeros((0,), np.int32),
@@ -108,33 +115,44 @@ def _aggregate_stream(schema: Schema, stream: SignedStream,
     memo = getattr(stream, "_agg_memo", None)
     if memo is not None:
         return DiffResult(schema, *memo, stats)
-    order, agg = ops.diff_aggregate(stream.row_lo, stream.row_hi, stream.sign)
-    keep = np.flatnonzero(agg.run_sums != 0)
-    diff_cnt = agg.run_sums[keep]
-    starts = agg.run_starts[keep]
-    first_orig = order[starts]         # gather run heads from the raw stream
-    key_lo = stream.key_lo[first_orig]
-    key_hi = stream.key_hi[first_orig]
-    row_lo = stream.row_lo[first_orig]
-    row_hi = stream.row_hi[first_orig]
+    st = stream.merge_by_key()  # always globally key-sorted for n > 0
+    _, agg = ops.diff_aggregate_rows(st.key_lo, st.key_hi,
+                                     st.row_lo, st.row_hi, st.sign,
+                                     presorted=True)
+    surviving = agg.run_sums != 0
+    if surviving.all():  # pure-churn diffs: nothing cancelled
+        keep = slice(None)
+        diff_cnt, starts = agg.run_sums, agg.run_starts
+    else:
+        keep = np.flatnonzero(surviving)
+        diff_cnt, starts = agg.run_sums[keep], agg.run_starts[keep]
     # representative rowid: first element in the run whose sign matches the
     # net direction (all elements share the same value, so any matching-sign
     # element's payload is correct). The run head already matches in the
     # overwhelmingly common case (single-element runs, or net in the head's
     # direction); only mismatching runs pay the per-run argmin.
-    n = stream.n
-    sign_sorted = stream.sign[order]
+    n = st.n
     want = np.sign(agg.run_sums)
     rep_pos = agg.run_starts.copy()
-    bad = np.flatnonzero((sign_sorted[agg.run_starts] != want)
+    bad = np.flatnonzero((st.sign[agg.run_starts] != want)
                          & (agg.run_sums != 0))
     if bad.shape[0]:
         seg, base, flat = ops.segment_expand(agg.run_starts[bad],
                                              agg.run_lens[bad])
-        score = np.where(sign_sorted[flat] == want[bad][seg], flat, n)
+        score = np.where(st.sign[flat] == want[bad][seg], flat, n)
         rep_pos[bad] = np.minimum.reduceat(score, base)
-    rep = stream.rowid[order[rep_pos[keep]]]
-    fields = (diff_cnt.astype(np.int32), key_lo, key_hi, row_lo, row_hi, rep)
+    key_lo, key_hi = st.key_lo[starts], st.key_hi[starts]
+    row_lo = key_lo if st.row_lo is st.key_lo else st.row_lo[starts]
+    row_hi = key_hi if st.row_hi is st.key_hi else st.row_hi[starts]
+    fields = [diff_cnt.astype(np.int32), key_lo, key_hi, row_lo, row_hi,
+              st.rowid[rep_pos[keep]]]
+    if not st.key_is_row and diff_cnt.shape[0] > 1:
+        # PK stream: groups surfaced in key order, but the DiffResult
+        # contract is value-signature order — sort just the survivors
+        # (distinct signatures, so an unstable primary sort is exact)
+        fo = ops._sort128(fields[3], fields[4], stable=False)
+        fields = [f[fo] for f in fields]
+    fields = tuple(fields)
     for a in fields:
         a.setflags(write=False)
     stream._agg_memo = fields

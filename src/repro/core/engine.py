@@ -119,6 +119,12 @@ class Engine:
         return t
 
     def drop_table(self, name: str, *, _log=True) -> None:
+        # drop secondary-index specs and their auxiliary tables with the
+        # base table — a dropped table must not leave dangling
+        # ``engine.indices`` entries or live aux tables behind
+        for spec in self.indices.pop(name, []):
+            if spec.aux_table in self.tables:
+                self.drop_table(spec.aux_table, _log=False)
         del self.tables[name]
         self._base = {k: v for k, v in self._base.items() if name not in k}
         if _log:
@@ -159,10 +165,14 @@ class Engine:
         tsa = np.full((n,), np.uint64(ts))
         for s in range(0, n, OBJECT_CAPACITY):
             idx = order[s:s + OBJECT_CAPACITY]
+            rl, rh = row_lo[idx], row_hi[idx]
+            # NoPK: compute_sigs aliases key sigs to row sigs — keep the
+            # identity through the gather (seal tags the object key==row)
+            kl = rl if key_lo is row_lo else key_lo[idx]
+            kh = rh if key_hi is row_hi else key_hi[idx]
             obj = seal_data_object(
                 self.store.new_oid(), schema, take_batch(batch, idx),
-                tsa[:idx.shape[0]], row_lo[idx], row_hi[idx],
-                key_lo[idx], key_hi[idx],
+                tsa[:idx.shape[0]], rl, rh, kl, kh,
                 {k: v[idx] for k, v in lob_sigs.items()})
             self.store.put(obj)
             oids.append(obj.oid)
@@ -278,7 +288,11 @@ class Engine:
         """CREATE TABLE new FROM SNAPSHOT src — metadata-only copy.
 
         ``with_indices`` (beyond paper §5.5.4): also clone the auxiliary
-        index tables — still metadata-only."""
+        index tables — still metadata-only, and at the *snapshot-consistent*
+        aux version (PITR on the aux table's history at the snapshot's
+        creation horizon), never at the aux table's current head. An index
+        created after the snapshot (or whose history was GC-trimmed past
+        the horizon) is instead rebuilt from the cloned data."""
         snap = self.resolve_snapshot(src)
         if new_name in self.tables:
             raise ValueError(f"table {new_name} exists")
@@ -288,12 +302,27 @@ class Engine:
         self.tables[new_name] = t
         self.set_common_base(new_name, snap.table, snap)
         if with_indices:
-            from .indices import IndexSpec
+            from .indices import IndexSpec, backfill_index
+            horizon = max(snap.created_ts, snap.directory.ts)
+            batch = None  # one rebuild scan shared by every rebuilt index
             for spec in self.indices.get(snap.table, []):
                 new_spec = IndexSpec(spec.name, new_name, spec.columns)
-                self.clone_table(new_spec.aux_table,
-                                 self.current_snapshot(spec.aux_table),
-                                 _log=False)
+                aux_t = self.tables.get(spec.aux_table)
+                aux_dir = None
+                if aux_t is not None:
+                    try:
+                        aux_dir = aux_t.directory_at(horizon)
+                    except KeyError:
+                        pass  # index younger than the snapshot
+                if aux_dir is not None:
+                    self.clone_table(
+                        new_spec.aux_table,
+                        Snapshot(name=None, table=spec.aux_table,
+                                 schema=aux_t.schema, directory=aux_dir,
+                                 created_ts=horizon),
+                        _log=False)
+                else:
+                    batch = backfill_index(self, new_spec, batch)
                 self.indices.setdefault(new_name, []).append(new_spec)
         if _log:
             self.wal.append("clone", new=new_name, snap=snap,
@@ -381,7 +410,9 @@ class Engine:
             elif k == "clone":
                 snap = p["snap"]
                 snap = e.snapshots.get(snap.name, snap) if snap.name else snap
-                e.clone_table(p["new"], snap, _log=False)
+                e.clone_table(p["new"], snap,
+                              with_indices=p.get("with_indices", False),
+                              _log=False)
             elif k == "restore":
                 snap = p["snap"]
                 snap = e.snapshots.get(snap.name, snap) if snap.name else snap

@@ -52,6 +52,24 @@ def aux_schema(base: Schema) -> Schema:
     return Schema(cols, primary_key=("isig",) + tuple(base.primary_key))
 
 
+def backfill_index(engine, spec: IndexSpec, batch=None):
+    """Create ``spec``'s aux table and backfill it from the base table.
+
+    The single backfill implementation — used by CREATE INDEX and by
+    snapshot-clone index rebuilds (sub-operations unlogged either way).
+    ``batch`` lets a caller rebuilding several indices share one base-table
+    scan; returns the batch actually used so it can be reused."""
+    t = engine.table(spec.table)
+    engine.create_table(spec.aux_table, aux_schema(t.schema), _log=False)
+    if batch is None:
+        batch, _ = t.scan()
+    if batch[t.schema.primary_key[0]].shape[0]:
+        tx = engine.begin()
+        tx.insert(spec.aux_table, aux_rows(t.schema, spec, batch))
+        engine._commit(tx, _log=False)
+    return batch
+
+
 def create_index(engine, table: str, name: str, columns: Sequence[str],
                  *, _log: bool = True) -> IndexSpec:
     """CREATE INDEX name ON table(columns) — backfills existing rows.
@@ -65,13 +83,8 @@ def create_index(engine, table: str, name: str, columns: Sequence[str],
     if _log:
         engine.wal.append("create_index", table=table, name=name,
                           columns=tuple(columns))
-    engine.create_table(spec.aux_table, aux_schema(t.schema), _log=False)
     engine.indices.setdefault(table, []).append(spec)
-    batch, _ = t.scan()
-    if batch[t.schema.primary_key[0]].shape[0]:
-        tx = engine.begin()
-        tx.insert(spec.aux_table, aux_rows(t.schema, spec, batch))
-        engine._commit(tx, _log=False)
+    backfill_index(engine, spec)
     return spec
 
 

@@ -68,7 +68,10 @@ class MergeReport:
     deleted: int = 0
     commit_ts: Optional[int] = None
     used_base: bool = True
-    # conflicting keys, for FAIL-mode reporting / manual resolution
+    # the true-conflict keys, populated in EVERY mode (the paper's PR-review
+    # flow must show WHICH keys were force-resolved under SKIP/ACCEPT/CELL,
+    # not just how many). On a FAIL/CELL raise they narrow to the keys that
+    # caused the failure. NoPK paths report value signatures here.
     conflict_key_lo: np.ndarray = field(
         default_factory=lambda: np.zeros((0,), np.uint64))
     conflict_key_hi: np.ndarray = field(
@@ -101,13 +104,15 @@ def collapse_pk(stream: SignedStream) -> Tuple[PKChanges, int]:
     """Collapse a branch Δ stream per primary key; drop pure moves.
 
     Returns (changes, n_moves_dropped). PK uniqueness guarantees at most one
-    − (the base/left row) and one + (the new/right row) per key."""
+    − (the base/left row) and one + (the new/right row) per key. Streams
+    from ``signed_delta`` arrive key-sorted, so the collapse is sort-free;
+    the output key arrays are sorted by (lo, hi) either way."""
     if stream.n == 0:
         z64 = np.zeros((0,), np.uint64)
         return PKChanges(z64, z64, np.zeros((0,), np.int8), z64.copy(),
                          z64.copy(), z64.copy(), z64.copy()), 0
-    order, agg = ops.diff_aggregate(stream.key_lo, stream.key_hi, stream.sign)
-    s = stream.take(order)
+    s = stream.merge_by_key()
+    _, agg = ops.diff_aggregate(s.key_lo, s.key_hi, s.sign, presorted=True)
     n = s.n
     pos = np.arange(n, dtype=np.int64)
     first_minus = np.minimum.reduceat(
@@ -138,28 +143,35 @@ def collapse_pk(stream: SignedStream) -> Tuple[PKChanges, int]:
 
 
 def _align_keys(t: PKChanges, s: PKChanges):
-    """Merge-join the two branches' per-key change sets.
+    """Linear merge-join of the two branches' (key-sorted) change sets.
 
-    Returns (t_idx, s_idx): equal-length arrays over the union of keys;
-    -1 where that branch has no change for the key."""
-    key_lo = np.concatenate([t.key_lo, s.key_lo])
-    key_hi = np.concatenate([t.key_hi, s.key_hi])
-    side = np.concatenate([np.zeros((t.k,), np.int8), np.ones((s.k,), np.int8)])
-    srcpos = np.concatenate([np.arange(t.k), np.arange(s.k)])
-    order, agg = ops.diff_aggregate(
-        key_lo, key_hi, np.ones((t.k + s.k,), np.int32))
-    side_o, srcpos_o = side[order], srcpos[order]
-    n = side_o.shape[0]
-    pos = np.arange(n, dtype=np.int64)
-    first_t = np.minimum.reduceat(
-        np.where(side_o == 0, pos, _NONE), agg.run_starts)
-    first_s = np.minimum.reduceat(
-        np.where(side_o == 1, pos, _NONE), agg.run_starts)
-    t_idx = np.where(first_t != _NONE,
-                     srcpos_o[np.minimum(first_t, max(n - 1, 0))], -1)
-    s_idx = np.where(first_s != _NONE,
-                     srcpos_o[np.minimum(first_s, max(n - 1, 0))], -1)
-    return t_idx.astype(np.int64), s_idx.astype(np.int64)
+    Both collapsed change sets are already sorted by (key_lo, key_hi) with
+    unique keys, so the union is one searchsorted probe plus a stable 2-run
+    merge — no third global sort per merge. Returns (t_idx, s_idx):
+    equal-length arrays over the key-sorted union of keys; -1 where that
+    branch has no change for the key."""
+    if t.k == 0:
+        return (np.full((s.k,), -1, np.int64),
+                np.arange(s.k, dtype=np.int64))
+    if s.k == 0:
+        return (np.arange(t.k, dtype=np.int64),
+                np.full((t.k,), -1, np.int64))
+    pos = ops.searchsorted128(t.key_lo, t.key_hi, s.key_lo, s.key_hi)
+    posc = np.minimum(pos, t.k - 1)
+    matched = ((pos < t.k) & (t.key_lo[posc] == s.key_lo)
+               & (t.key_hi[posc] == s.key_hi))
+    s_at_t = np.full((t.k,), -1, np.int64)
+    s_at_t[pos[matched]] = np.flatnonzero(matched)
+    only = np.flatnonzero(~matched)
+    lo = np.concatenate([t.key_lo, s.key_lo[only]])
+    hi = np.concatenate([t.key_hi, s.key_hi[only]])
+    order = ops.merge128_runs(lo, hi, np.array([0, t.k], np.int64))
+    from_t = order < t.k
+    t_idx = np.where(from_t, order, -1)
+    s_idx = np.empty(order.shape, np.int64)
+    s_idx[from_t] = s_at_t[order[from_t]]
+    s_idx[~from_t] = only[order[~from_t] - t.k]
+    return t_idx, s_idx
 
 
 # --------------------------------------------------------------------------
@@ -190,10 +202,10 @@ def _merge_pk(engine: Engine, target: str, source: Snapshot,
     conflict_ti, conflict_si = ti[~identical], si[~identical]
     report.false_conflicts += int(identical.sum()) + int(only_s.sum())
     report.true_conflicts = int(conflict_si.shape[0])
+    report.conflict_key_lo = ch_s.key_lo[conflict_si]
+    report.conflict_key_hi = ch_s.key_hi[conflict_si]
 
     if report.true_conflicts and mode is ConflictMode.FAIL:
-        report.conflict_key_lo = ch_s.key_lo[conflict_si]
-        report.conflict_key_hi = ch_s.key_hi[conflict_si]
         raise MergeConflictError(report)
 
     del_lo, del_hi, ins = [], [], []
@@ -276,9 +288,9 @@ def _merge_pk_nobase(engine: Engine, target: str, source: Snapshot,
     inserts = ch.op == OP_INS
     report.false_conflicts += int(inserts.sum()) + moves
     report.true_conflicts = int(conflicts.sum())
+    report.conflict_key_lo = ch.key_lo[conflicts]
+    report.conflict_key_hi = ch.key_hi[conflicts]
     if report.true_conflicts and mode is ConflictMode.FAIL:
-        report.conflict_key_lo = ch.key_lo[conflicts]
-        report.conflict_key_hi = ch.key_hi[conflicts]
         raise MergeConflictError(report)
     del_rowids = [np.zeros((0,), np.uint64)]
     ins_rowids = [ch.plus_rowid[inserts]]
@@ -311,22 +323,30 @@ def _merge_nopk(engine: Engine, target: str, source: Snapshot,
         if common_del.shape[0] == 0 or stream.n == 0:
             return stream
         drop = (stream.sign < 0) & np.isin(stream.rowid, common_del)
-        return stream.take(np.flatnonzero(~drop))
+        return stream.filter_mask(~drop)  # order-preserving: stays sorted
 
     d_t, d_s = residual(d_t), residual(d_s)
 
-    row_lo = np.concatenate([d_t.row_lo, d_s.row_lo])
-    row_hi = np.concatenate([d_t.row_hi, d_s.row_hi])
-    side = np.concatenate([np.zeros((d_t.n,), np.int8),
-                           np.ones((d_s.n,), np.int8)])
-    sign = np.concatenate([d_t.sign, d_s.sign])
-    rowid = np.concatenate([d_t.rowid, d_s.rowid])
-    if row_lo.shape[0] == 0:
+    combined = SignedStream.concat([d_t, d_s])
+    if combined.n == 0:
         z = np.zeros((0,), np.uint64)
         return z, z.copy(), np.zeros((0,), np.int64), z.copy()
-    order, agg = ops.diff_aggregate(row_lo, row_hi, np.ones_like(sign))
-    ro_lo, ro_hi = row_lo[order], row_hi[order]
-    sd, sg, rid = side[order], sign[order], rowid[order]
+    side = np.concatenate([np.zeros((d_t.n,), np.int8),
+                           np.ones((d_s.n,), np.int8)])
+    # both branch streams are value-sorted (NoPK key == value), so the
+    # combined stream is a stable 2-run merge and aggregation is sort-free
+    if combined.sorted_by_key:
+        st = combined
+    else:
+        order = (ops.merge128_runs(combined.key_lo, combined.key_hi,
+                                   combined.runs)
+                 if combined.runs is not None
+                 else ops._sort128(combined.row_lo, combined.row_hi))
+        st, side = combined.take(order), side[order]
+    _, agg = ops.diff_aggregate(st.row_lo, st.row_hi,
+                                np.ones_like(st.sign), presorted=True)
+    ro_lo, ro_hi = st.row_lo, st.row_hi
+    sd, sg, rid = side, st.sign, st.rowid
     starts = agg.run_starts
     k = starts.shape[0]
     plus_t = np.add.reduceat(((sd == 0) & (sg > 0)).astype(np.int64), starts)
@@ -342,9 +362,9 @@ def _merge_nopk(engine: Engine, target: str, source: Snapshot,
     false_c = (dt == 0) & (ds != 0)
     report.true_conflicts = int(conflict.sum())
     report.false_conflicts += int(false_c.sum())
+    report.conflict_key_lo = ro_lo[starts][conflict]
+    report.conflict_key_hi = ro_hi[starts][conflict]
     if report.true_conflicts and mode is ConflictMode.FAIL:
-        report.conflict_key_lo = ro_lo[starts][conflict]
-        report.conflict_key_hi = ro_hi[starts][conflict]
         raise MergeConflictError(report)
 
     apply_net = np.zeros((k,), np.int64)
@@ -384,8 +404,9 @@ def _merge_nopk_nobase(engine: Engine, target: str, source: Snapshot,
     if cross.n == 0:
         z = np.zeros((0,), np.uint64)
         return z, z.copy()
-    order, agg = ops.diff_aggregate(cross.row_lo, cross.row_hi, cross.sign)
-    s = cross.take(order)
+    s = cross.merge_by_key()  # NoPK: key order IS value order; identity
+    #                           for cache-served streams
+    _, agg = ops.diff_aggregate(s.row_lo, s.row_hi, s.sign, presorted=True)
     starts, lens, nets = agg.run_starts, agg.run_lens, agg.run_sums
     minus_cnt = np.add.reduceat((s.sign < 0).astype(np.int64), starts)
     plus_cnt = np.add.reduceat((s.sign > 0).astype(np.int64), starts)
@@ -393,9 +414,9 @@ def _merge_nopk_nobase(engine: Engine, target: str, source: Snapshot,
     pure_ins = (minus_cnt == 0) & (nets > 0)
     report.true_conflicts = int(mixed.sum())
     report.false_conflicts += int(pure_ins.sum())
+    report.conflict_key_lo = s.row_lo[starts][mixed]
+    report.conflict_key_hi = s.row_hi[starts][mixed]
     if report.true_conflicts and mode is ConflictMode.FAIL:
-        report.conflict_key_lo = s.row_lo[starts][mixed]
-        report.conflict_key_hi = s.row_hi[starts][mixed]
         raise MergeConflictError(report)
 
     apply_net = np.zeros(nets.shape, np.int64)
@@ -461,9 +482,8 @@ def three_way_merge(engine: Engine, target: str, source: Snapshot,
             sig_lo, sig_hi, need, ins_rowids = _merge_nopk(
                 engine, target, source, base.directory, mode, report)
             if sig_lo.shape[0]:
-                found = t_tab.locate_rowsig_multi(sig_lo, sig_hi, need)
-                rids = (np.concatenate(found) if found
-                        else np.zeros((0,), np.uint64))
+                rids = t_tab.locate_rowsig_multi(sig_lo, sig_hi, need,
+                                                 flat=True)
                 if rids.shape[0]:
                     tx.delete_rowids(target, rids)
                 report.deleted = int(rids.shape[0])

@@ -49,6 +49,8 @@ class DataObject:
     nbytes: int = 0                      # logical payload bytes
     _ts_zone: Optional[Tuple[int, int]] = field(
         default=None, repr=False, compare=False)
+    _rowids: Optional[np.ndarray] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def zone(self) -> Tuple[np.uint64, np.uint64]:
@@ -72,7 +74,12 @@ class DataObject:
         return self._ts_zone
 
     def rowids(self) -> np.ndarray:
-        return pack_rowid(self.oid, np.arange(self.nrows, dtype=np.uint64))
+        # computed once; objects are immutable and the zero-copy Δ emission
+        # path reuses this array per scan
+        if self._rowids is None:
+            self._rowids = pack_rowid(self.oid,
+                                      np.arange(self.nrows, dtype=np.uint64))
+        return self._rowids
 
 
 @dataclass
@@ -100,13 +107,19 @@ def seal_data_object(oid: int, schema: Schema, batch: Dict[str, np.ndarray],
     """Sort rows by key signature and freeze them as an immutable object."""
     order = np.lexsort((key_hi, key_lo))
     batch = take_batch(batch, order)
+    row_lo_s, row_hi_s = row_lo[order], row_hi[order]
+    # NoPK tables: the key signature IS the row signature — keep the array
+    # identity through the gather so Δ emission can tag streams key==row
+    # (and halve the signature memory per object)
+    key_lo_s = row_lo_s if key_lo is row_lo else key_lo[order]
+    key_hi_s = row_hi_s if key_hi is row_hi else key_hi[order]
     return DataObject(
         oid=oid,
         nrows=int(order.shape[0]),
         cols=batch,
         commit_ts=commit_ts[order],
-        row_lo=row_lo[order], row_hi=row_hi[order],
-        key_lo=key_lo[order], key_hi=key_hi[order],
+        row_lo=row_lo_s, row_hi=row_hi_s,
+        key_lo=key_lo_s, key_hi=key_hi_s,
         lob_sigs={k: v[order] for k, v in lob_sigs.items()},
         nbytes=batch_nbytes(schema, batch),
     )

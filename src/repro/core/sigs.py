@@ -30,12 +30,15 @@ _F32_NAN = np.uint32(0x7FC00000)
 
 
 def lob_sig64(arr: np.ndarray) -> np.ndarray:
-    """Content signature (uint64) per LOB value. Ingest-time, host-side."""
-    out = np.empty((arr.shape[0],), np.uint64)
-    for i, v in enumerate(arr):
-        d = hashlib.blake2b(v, digest_size=8).digest()
-        out[i] = np.uint64(int.from_bytes(d, "little"))
-    return out
+    """Content signature (uint64) per LOB value. Ingest-time, host-side.
+
+    The digest loop is unavoidably per-row (hashlib); keep the loop body to
+    the bare C calls — ``np.fromiter`` stores python ints straight into the
+    uint64 buffer, without per-element ``np.uint64`` round-trips."""
+    b2b, ib = hashlib.blake2b, int.from_bytes
+    return np.fromiter(
+        (ib(b2b(v, digest_size=8).digest(), "little") for v in arr),
+        np.uint64, count=arr.shape[0])
 
 
 def _canon64(col: np.ndarray, ctype: CType,

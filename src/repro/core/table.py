@@ -65,6 +65,15 @@ class Table:
         batches, rowids, rlo, rhi = [], [], [], []
         for oid in d.data_oids:
             obj: DataObject = self._store.get(oid)
+            if obj.nrows and vi.fully_visible(obj):
+                # zone-pruned objects contribute their immutable arrays
+                # directly — no mask, no gather (concat copies once below)
+                batches.append(obj.cols)
+                rowids.append(obj.rowids())
+                if with_sigs:
+                    rlo.append(obj.row_lo)
+                    rhi.append(obj.row_hi)
+                continue
             m = vi.visible_mask(obj)
             if not m.any():
                 continue
@@ -150,15 +159,19 @@ class Table:
 
     def locate_rowsig_multi(self, sig_lo: np.ndarray, sig_hi: np.ndarray,
                             need: np.ndarray,
-                            directory: Optional[Directory] = None
-                            ) -> List[np.ndarray]:
+                            directory: Optional[Directory] = None,
+                            *, flat: bool = False):
         """NoPK probe: up to ``need[i]`` visible rowids per row-signature.
 
         Used by merge to delete k rows among duplicates (paper §3 NoPK
         cardinality resolution). Vectorized: per object, all still-needy
         signatures expand their equal-sig_lo runs flat; matches are ranked
         within their query segment by a cumulative count and the first
-        ``remaining`` of them taken — no nested per-row Python loop."""
+        ``remaining`` of them taken — no nested per-row Python loop.
+
+        ``flat=True`` returns one query-ordered rowid array (exactly the
+        concatenation of the per-query buckets), skipping the Python-level
+        per-query split — use it when the caller treats all hits alike."""
         d = directory or self.directory
         vi = visibility_index(self._store, d)
         q = sig_lo.shape[0]
@@ -184,8 +197,8 @@ class Table:
             if act.shape[0] == 0:
                 continue
             vis = vi.visible_mask(obj)
-            seg, base, flat = ops.segment_expand(lb, lens)
-            match = ((obj.key_hi[flat] == sig_hi[act][seg]) & vis[flat]
+            seg, base, offs = ops.segment_expand(lb, lens)
+            match = ((obj.key_hi[offs] == sig_hi[act][seg]) & vis[offs]
                      ).astype(np.int64)
             # rank of each match within its query segment (1-based)
             cm = np.cumsum(match)
@@ -195,20 +208,23 @@ class Table:
             taken = np.flatnonzero(take)
             if taken.shape[0]:
                 part_rows.append(pack_rowid(obj.oid,
-                                            flat[taken].astype(np.uint64)))
+                                            offs[taken].astype(np.uint64)))
                 part_qids.append(act[seg[taken]])
             remaining[act] -= np.add.reduceat(take.astype(np.int64), base)
         # bucket the flat hits per query in one pass (stable by discovery
         # order: newest object first, ascending offset within object)
         empty = np.zeros((0,), np.uint64)
+        if not part_rows:
+            return empty if flat else [empty] * q
+        rows = np.concatenate(part_rows)
+        qids = np.concatenate(part_qids)
+        order = np.argsort(qids, kind="stable")
+        rows, qids = rows[order], qids[order]
+        if flat:
+            return rows
         found = [empty] * q
-        if part_rows:
-            rows = np.concatenate(part_rows)
-            qids = np.concatenate(part_qids)
-            order = np.argsort(qids, kind="stable")
-            rows, qids = rows[order], qids[order]
-            cuts = np.flatnonzero(qids[1:] != qids[:-1]) + 1
-            heads = np.concatenate([[0], cuts])
-            for qi, part in zip(qids[heads], np.split(rows, cuts)):
-                found[qi] = part
+        cuts = np.flatnonzero(qids[1:] != qids[:-1]) + 1
+        heads = np.concatenate([[0], cuts])
+        for qi, part in zip(qids[heads], np.split(rows, cuts)):
+            found[qi] = part
         return found

@@ -165,9 +165,19 @@ class VisibilityCache(KeyedLRU):
         else:
             add = np.sort(np.concatenate(p.batches))
         merged = p.base.targets
-        if add.shape[0]:
+        if add.shape[0] and merged.shape[0] == 0:
+            merged = add.copy()
+        elif add.shape[0]:
+            # manual sorted insert: one allocation + two masked copies
+            # (np.insert pays extra normalization overhead per call)
             pos = np.searchsorted(merged, add)
-            merged = np.insert(merged, pos, add)
+            out = np.empty((merged.shape[0] + add.shape[0],), merged.dtype)
+            at = pos + np.arange(add.shape[0])
+            mask = np.zeros(out.shape, bool)
+            mask[at] = True
+            out[at] = add
+            out[~mask] = merged
+            merged = out
         entry = _Entry(merged, p.complete)
         self.insert(key, entry)
         return entry

@@ -142,6 +142,40 @@ def upper_bound(sorted_u64: np.ndarray, queries_u64: np.ndarray) -> np.ndarray:
     return np.searchsorted(sorted_u64, queries_u64, side="right").astype(np.int64)
 
 
+def searchsorted128(t_lo: np.ndarray, t_hi: np.ndarray,
+                    q_lo: np.ndarray, q_hi: np.ndarray,
+                    side: str = "left") -> np.ndarray:
+    """Exact 128-bit searchsorted against a stream sorted by (lo, hi).
+
+    Primary ranks come from the 64-bit searchsorted kernel on the lo word.
+    Queries whose lo word exists in the table — the COMMON case for the
+    merge-join and rank-sum callers, where most queries are exact key
+    matches — refine against the hi word in one vectorized gather+compare
+    (the table run has length 1 for distinct hashed signatures); only
+    genuine lo64 collisions (run length > 1) pay a scalar bisect."""
+    n = t_lo.shape[0]
+    if q_lo.shape[0] == 0 or n == 0:
+        return np.zeros(q_lo.shape, np.int64)
+    lb = lower_bound(t_lo, q_lo)
+    out = lb.copy()
+    hit = (lb < n) & (t_lo[np.minimum(lb, n - 1)] == q_lo)
+    # the matched run extends past lb only on a genuine lo64 collision
+    multi = hit & (lb + 1 < n) & (t_lo[np.minimum(lb + 1, n - 1)] == q_lo)
+    one = hit & ~multi
+    if one.any():
+        idx = lb[one]
+        after = (t_hi[idx] < q_hi[one] if side == "left"
+                 else t_hi[idx] <= q_hi[one])
+        out[one] = idx + after
+    midx = np.flatnonzero(multi)
+    if midx.shape[0]:
+        ub = upper_bound(t_lo, q_lo[midx])
+        for j, i in enumerate(midx):
+            s, e = int(lb[i]), int(ub[j])
+            out[i] = s + int(np.searchsorted(t_hi[s:e], q_hi[i], side=side))
+    return out
+
+
 def segment_expand(starts: np.ndarray, lens: np.ndarray):
     """Expand per-segment (start, len) pairs into flat element indices.
 
@@ -170,7 +204,8 @@ class DiffAgg:
       run_ids:    (N,) int64 — run index per element (computed lazily).
     """
 
-    __slots__ = ("boundary", "run_starts", "run_lens", "run_sums", "_run_ids")
+    __slots__ = ("boundary", "run_starts", "_n", "_run_lens", "run_sums",
+                 "_run_ids")
 
     def __init__(self, boundary, signs):
         boundary = np.asarray(boundary, bool)
@@ -178,11 +213,27 @@ class DiffAgg:
         self.boundary = boundary
         self.run_starts = np.flatnonzero(boundary).astype(np.int64)
         n = boundary.shape[0]
-        ends = np.append(self.run_starts[1:], n)
-        self.run_lens = ends - self.run_starts
-        self.run_sums = (np.add.reduceat(signs, self.run_starts)
-                         if n else np.zeros((0,), np.int32)).astype(np.int32)
+        self._n = n
+        if n:
+            # net sign per run via one cumsum + end-point differences
+            # (faster than add.reduceat when runs are short, the Δ-stream
+            # common case)
+            cs = np.cumsum(signs, dtype=np.int64)
+            ends = np.append(self.run_starts[1:], n)
+            sums = cs[ends - 1]
+            sums[1:] -= cs[self.run_starts[1:] - 1]
+            self.run_sums = sums.astype(np.int32)
+        else:
+            self.run_sums = np.zeros((0,), np.int32)
+        self._run_lens = None
         self._run_ids = None
+
+    @property
+    def run_lens(self) -> np.ndarray:
+        if self._run_lens is None:
+            ends = np.append(self.run_starts[1:], self._n)
+            self._run_lens = ends - self.run_starts
+        return self._run_lens
 
     @property
     def run_ids(self) -> np.ndarray:
@@ -191,14 +242,48 @@ class DiffAgg:
         return self._run_ids
 
 
-def _sort128(sig_lo: np.ndarray, sig_hi: np.ndarray) -> np.ndarray:
-    """Stable lexicographic argsort by (sig_lo, sig_hi).
+_RADIX_MIN_N = 1 << 15
 
-    Equivalent to ``np.lexsort((sig_hi, sig_lo))`` but ~2x faster: one
-    stable radix argsort on the primary word, then an exact refinement of
-    the (vanishingly rare for hashed sigs) equal-lo runs whose hi words
-    are out of order."""
-    order = np.argsort(sig_lo, kind="stable")
+
+def _radix16_argsort(a: np.ndarray) -> np.ndarray:
+    """Stable LSD radix argsort of uint64 in four 16-bit passes.
+
+    numpy's stable sort on uint16 keys IS a radix sort, so each pass is
+    O(n); on unstructured uint64 input this beats the 64-bit stable sort
+    (timsort) ~2x at Δ-pipeline sizes."""
+    order = np.argsort((a & np.uint64(0xFFFF)).astype(np.uint16),
+                       kind="stable")
+    for shift in (16, 32, 48):
+        d = ((a[order] >> np.uint64(shift)) & np.uint64(0xFFFF)
+             ).astype(np.uint16)
+        order = order[np.argsort(d, kind="stable")]
+    return order
+
+
+def _argsort64_stable(a: np.ndarray) -> np.ndarray:
+    """Stable uint64 argsort with a bucket/radix pre-pass decision.
+
+    Presorted-run-structured input (the Δ pipeline's emission order) is
+    near-linear under timsort's galloping merge; unstructured input is ~2x
+    faster under 16-bit LSD radix. One O(n) descent count picks the path."""
+    n = a.shape[0]
+    if n >= _RADIX_MIN_N:
+        descents = int(np.count_nonzero(a[1:] < a[:-1]))
+        if descents > (n >> 6):
+            return _radix16_argsort(a)
+    return np.argsort(a, kind="stable")
+
+
+def _sort128(sig_lo: np.ndarray, sig_hi: np.ndarray, *,
+             stable: bool = True) -> np.ndarray:
+    """Lexicographic argsort by (sig_lo, sig_hi), stable by default.
+
+    Equivalent to ``np.lexsort((sig_hi, sig_lo))`` but faster: one argsort
+    on the primary word (radix/run-aware when stable, introsort when the
+    caller's signatures are known distinct and stability is moot), then an
+    exact refinement of the (vanishingly rare for hashed sigs) equal-lo
+    runs whose hi words are out of order."""
+    order = _argsort64_stable(sig_lo) if stable else np.argsort(sig_lo)
     lo_s = sig_lo[order]
     dup = np.flatnonzero(lo_s[1:] == lo_s[:-1])
     if dup.shape[0]:
@@ -220,6 +305,55 @@ def _sort128(sig_lo: np.ndarray, sig_hi: np.ndarray) -> np.ndarray:
     return order.astype(np.int64)
 
 
+def merge128_runs(lo: np.ndarray, hi: np.ndarray,
+                  starts: np.ndarray) -> np.ndarray:
+    """Stable merge permutation for concatenated presorted runs.
+
+    ``starts`` (k,) int64 holds each run's first offset (``starts[0] == 0``);
+    run i spans ``[starts[i], starts[i+1])`` and is sorted by (lo, hi).
+    Returns ``order`` such that ``lo[order], hi[order]`` is the stable k-way
+    merge — identical to ``np.lexsort((hi, lo))`` on the whole stream (ties
+    resolved by run order, then in-run position).
+
+    Backend dispatch: on the Pallas backend the runs are merged by
+    searchsorted rank-sums (k passes of the searchsorted kernel, no sort at
+    all); on CPU the run-aware stable argsort is measurably faster (timsort's
+    galloping merge on run-structured input: ~4ms vs ~40ms per 200k rows x 9
+    runs), so the rank-sum path is reserved for the kernel backend."""
+    n = lo.shape[0]
+    starts = np.asarray(starts, np.int64)
+    if n == 0 or starts.shape[0] <= 1:
+        return np.arange(n, dtype=np.int64)
+    if backend_uses_pallas() and starts.shape[0] <= 64:
+        return _merge128_ranksum(lo, hi, starts)
+    return _sort128(lo, hi)
+
+
+def _merge128_ranksum(lo: np.ndarray, hi: np.ndarray,
+                      starts: np.ndarray) -> np.ndarray:
+    """k-way merge by rank sums: each element's merged position is its
+    in-run rank plus, per other run, the count of elements that must precede
+    it (strictly-less, or less-or-equal for earlier runs — that tie-break
+    makes the merge stable)."""
+    n = lo.shape[0]
+    bounds = np.append(starts, n)
+    k = starts.shape[0]
+    dest = np.empty((n,), np.int64)
+    for r in range(k):
+        s, e = int(bounds[r]), int(bounds[r + 1])
+        d = np.arange(e - s, dtype=np.int64)
+        for q in range(k):
+            if q == r:
+                continue
+            qs, qe = int(bounds[q]), int(bounds[q + 1])
+            d += searchsorted128(lo[qs:qe], hi[qs:qe], lo[s:e], hi[s:e],
+                                 side="right" if q < r else "left")
+        dest[s:e] = d
+    order = np.empty((n,), np.int64)
+    order[dest] = np.arange(n, dtype=np.int64)
+    return order
+
+
 def diff_aggregate(sig_lo: np.ndarray, sig_hi: np.ndarray,
                    signs: np.ndarray, *, presorted: bool = False):
     """Sort a signed stream by 128-bit signature and aggregate runs.
@@ -239,28 +373,80 @@ def diff_aggregate(sig_lo: np.ndarray, sig_hi: np.ndarray,
         s_sg = np.asarray(signs, np.int32)[order]
 
     if backend_uses_pallas():
-        lo_hi32, lo_lo32 = unpack64(s_lo)
-        hi_hi32, hi_lo32 = unpack64(s_hi)
-        keys = np.stack([lo_lo32, lo_hi32, hi_lo32, hi_hi32], axis=1)
-        keys_p = _pad_rows(keys, DEFAULT_BLOCK, fill=np.uint32(0xFFFFFFFF))
-        sg_p = _pad_rows(s_sg, DEFAULT_BLOCK)
-        nblocks = keys_p.shape[0] // DEFAULT_BLOCK
-        prev_last = np.empty((nblocks, 4), np.uint32)
-        prev_last[0] = np.uint32(0xFFFFFFFF)  # forces boundary at row 0 unless
-        # keys[0] == all-ones sentinel; patched below.
-        if nblocks > 1:
-            prev_last[1:] = keys_p[np.arange(1, nblocks) * DEFAULT_BLOCK - 1]
-        bnd, _csum, _tot = segsum_pallas(jnp.asarray(keys_p),
-                                         jnp.asarray(prev_last),
-                                         jnp.asarray(sg_p), interpret=_interp())
-        bnd = np.array(bnd[:n])  # copy: jax buffers are read-only
-        bnd[0] = True
+        bnd = _segsum_boundary(s_lo, s_hi, s_sg)
         return order, DiffAgg(bnd, s_sg)
 
     # CPU fast path
     neq = np.empty((n,), bool)
     neq[0] = True
     neq[1:] = (s_lo[1:] != s_lo[:-1]) | (s_hi[1:] != s_hi[:-1])
+    return order, DiffAgg(neq, s_sg)
+
+
+def _segsum_boundary(s_lo: np.ndarray, s_hi: np.ndarray,
+                     s_sg: np.ndarray) -> np.ndarray:
+    """New-run boundary flags of a sorted stream via the segsum kernel."""
+    n = s_lo.shape[0]
+    lo_hi32, lo_lo32 = unpack64(s_lo)
+    hi_hi32, hi_lo32 = unpack64(s_hi)
+    keys = np.stack([lo_lo32, lo_hi32, hi_lo32, hi_hi32], axis=1)
+    keys_p = _pad_rows(keys, DEFAULT_BLOCK, fill=np.uint32(0xFFFFFFFF))
+    sg_p = _pad_rows(s_sg, DEFAULT_BLOCK)
+    nblocks = keys_p.shape[0] // DEFAULT_BLOCK
+    prev_last = np.empty((nblocks, 4), np.uint32)
+    prev_last[0] = np.uint32(0xFFFFFFFF)  # forces boundary at row 0 unless
+    # keys[0] == all-ones sentinel; patched below.
+    if nblocks > 1:
+        prev_last[1:] = keys_p[np.arange(1, nblocks) * DEFAULT_BLOCK - 1]
+    bnd, _csum, _tot = segsum_pallas(jnp.asarray(keys_p),
+                                     jnp.asarray(prev_last),
+                                     jnp.asarray(sg_p), interpret=_interp())
+    bnd = np.array(bnd[:n])  # copy: jax buffers are read-only
+    bnd[0] = True
+    return bnd
+
+
+def diff_aggregate_rows(key_lo: np.ndarray, key_hi: np.ndarray,
+                        row_lo: np.ndarray, row_hi: np.ndarray,
+                        signs: np.ndarray, *, presorted: bool = False):
+    """Aggregate a signed stream into (key, row-signature) runs along KEY
+    order — the sort-free execution of Listing-2 value grouping.
+
+    The stream must be (or is stably made) sorted by (key_lo, key_hi); runs
+    are maximal groups of equal (key, row). For NoPK streams key == row, so
+    this is exactly value-group aggregation; for PK streams each run is a
+    sub-group of one key's (≤ 2-element, by PK uniqueness) run, so
+    equal-valued ± pairs cancel exactly as the row-sorted aggregation would,
+    while the key order itself is free at emission time.
+
+    Returns (order, DiffAgg); ``order`` is identity when presorted.
+    """
+    n = key_lo.shape[0]
+    if n == 0:
+        return (np.zeros((0,), np.int64),
+                DiffAgg(np.zeros((0,), bool), np.zeros((0,), np.int32)))
+    if presorted:
+        order = np.arange(n, dtype=np.int64)
+        k_lo, k_hi, r_lo, r_hi = key_lo, key_hi, row_lo, row_hi
+        s_sg = np.asarray(signs, np.int32)
+    else:
+        order = _sort128(key_lo, key_hi)
+        k_lo, k_hi = key_lo[order], key_hi[order]
+        r_lo, r_hi = row_lo[order], row_hi[order]
+        s_sg = np.asarray(signs, np.int32)[order]
+
+    same = r_lo is k_lo and r_hi is k_hi  # NoPK: key IS the row signature
+    if backend_uses_pallas():
+        bnd = _segsum_boundary(k_lo, k_hi, s_sg)
+        if not same:
+            bnd |= _segsum_boundary(r_lo, r_hi, s_sg)
+        return order, DiffAgg(bnd, s_sg)
+
+    neq = np.empty((n,), bool)
+    neq[0] = True
+    neq[1:] = (k_lo[1:] != k_lo[:-1]) | (k_hi[1:] != k_hi[:-1])
+    if not same:
+        neq[1:] |= (r_lo[1:] != r_lo[:-1]) | (r_hi[1:] != r_hi[:-1])
     return order, DiffAgg(neq, s_sg)
 
 

@@ -1,0 +1,104 @@
+"""Byte-identity regression guard for the Δ pipeline.
+
+Runs a fixed-seed PK + NoPK update workload and hashes every array of the
+resulting ``DiffResult``s (built-in and SQL paths), the merge application
+(report counters + post-merge table scan), and a PITR diff. The golden
+digests below were recorded on the PR 1 engine; any refactor of the signed-Δ
+pipeline (sorted emission, k-way merge, aggregation) must keep them stable —
+"sort-free" is an execution strategy, not a semantics change.
+
+All inputs are deterministic: gen_lineitem uses seeded PCG64 (stable streams
+across numpy versions), signatures are exact integer math, and sort orders
+are fully determined by the 128-bit signatures.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_vcs import gen_lineitem  # noqa: F401 (det. check)
+from repro.core import (ConflictMode, Engine, snapshot_diff, sql_diff,
+                        three_way_merge)
+
+
+def _h(update, arr):
+    a = np.ascontiguousarray(arr)
+    update(a.tobytes())
+
+
+def diff_digest(d) -> str:
+    h = hashlib.sha256()
+    for f in ("diff_cnt", "key_lo", "key_hi", "row_lo", "row_hi", "rowid"):
+        _h(h.update, getattr(d, f))
+    return h.hexdigest()[:16]
+
+
+def scan_digest(engine, table) -> str:
+    batch, rowids, lo, hi = engine.table(table).scan(with_sigs=True)
+    h = hashlib.sha256()
+    _h(h.update, rowids)
+    _h(h.update, lo)
+    _h(h.update, hi)
+    for name in sorted(batch):
+        col = batch[name]
+        if col.dtype == object:
+            h.update(b"\x00".join(bytes(x) for x in col))
+        else:
+            _h(h.update, col)
+    return h.hexdigest()[:16]
+
+
+def run_workload(pk: bool, n_rows: int = 50_000, csize: int = 2_000):
+    from benchmarks.vcs_tables import _mk_engine, _random_update
+    rng = np.random.default_rng([csize] + list(b"DIG"))
+    engine, base = _mk_engine(n_rows, pk)
+    sn1 = engine.create_snapshot("sn1", "lineitem")
+    engine.clone_table("t", sn1)
+    _random_update(engine, "t", base, csize, rng, pk)
+    sn3 = engine.create_snapshot("sn3", "t")
+    cur = engine.current_snapshot("lineitem")
+
+    d_b = snapshot_diff(engine.store, cur, sn3)
+    d_s = sql_diff(engine.store, cur, sn3)
+    rep = three_way_merge(engine, "lineitem", sn3, base=sn1,
+                          mode=ConflictMode.ACCEPT)
+    d_pitr = snapshot_diff(engine.store, engine.snapshot_at("lineitem", 1),
+                           engine.current_snapshot("lineitem"))
+    return {
+        "diff": diff_digest(d_b),
+        "sql_diff": diff_digest(d_s),
+        "merge": f"{rep.inserted}/{rep.deleted}/{rep.true_conflicts}",
+        "scan": scan_digest(engine, "lineitem"),
+        "pitr": diff_digest(d_pitr),
+    }
+
+
+# Golden digests recorded on the PR 1 engine (fixed-seed workload above).
+GOLDEN = {
+    True: {
+        "diff": "4953744753d67b10",
+        "sql_diff": "4953744753d67b10",
+        "merge": "2000/2000/0",
+        "scan": "8ef72a49adf021ca",
+        "pitr": "593ece73c0d631df",
+    },
+    False: {
+        "diff": "b265412cf4eb3342",
+        "sql_diff": "b265412cf4eb3342",
+        "merge": "2000/2000/0",
+        "scan": "a7500c287b142086",
+        "pitr": "7de964732d98a93e",
+    },
+}
+
+
+@pytest.mark.parametrize("pk", [True, False])
+def test_diff_pipeline_byte_identical(pk):
+    got = run_workload(pk)
+    assert got == GOLDEN[pk], got
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps({("PK" if pk else "NoPK"): run_workload(pk)
+                      for pk in (True, False)}, indent=1))
