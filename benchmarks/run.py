@@ -11,15 +11,24 @@ import sys
 
 
 _HOTPATH_METRICS = ("diff_cold_s", "diff_warm_s", "merge_s")
+_WORKFLOW_METRICS = ("branch_s", "pr_diff_s", "publish_s", "revert_s")
+
+
+def _row_metrics(row_or_op):
+    op = row_or_op if isinstance(row_or_op, str) else row_or_op["op"]
+    return _WORKFLOW_METRICS if op.startswith("Workflow") else _HOTPATH_METRICS
 
 
 def _fold_hotpath_trajectory(prev_path, n_rows, rows, note):
-    """Fold a fresh hotpath run into the committed before/after shape.
+    """Fold a fresh hotpath/workflow run into the committed before/after
+    shape.
 
     ``before`` comes from the previous BENCH json — its ``after`` block when
     it is itself a trajectory file, its raw metrics otherwise — so each PR's
     committed file always compares against the immediately preceding engine
-    (ROADMAP: keep ``BENCH_vcs.json`` monotone)."""
+    (ROADMAP: keep ``BENCH_vcs.json`` monotone). Rows the previous file
+    lacks (a freshly added scenario) enter as raw metrics and seed the next
+    PR's ``before``."""
     with open(prev_path) as f:
         prev = json.load(f)
     prev_by_key = {}
@@ -27,17 +36,18 @@ def _fold_hotpath_trajectory(prev_path, n_rows, rows, note):
         op = r.get("op") or f"HotDiffMerge{r['mode']}"
         src = r.get("after", r)
         prev_by_key[(op, r["change"])] = {
-            m: src[m] for m in _HOTPATH_METRICS if m in src}
+            m: src[m] for m in _row_metrics(op) if m in src}
     results = []
     for r in rows:
+        metrics = _row_metrics(r)
         before = prev_by_key.get((r["op"], r["change"]))
-        after = {m: r[m] for m in _HOTPATH_METRICS}
+        after = {m: r[m] for m in metrics}
         entry = {"op": r["op"], "change": r["change"], "rows": r["rows"],
                  "changed_rows": r["changed_rows"]}
         if before:
             entry["before"] = before
             entry["after"] = after
-            for m in _HOTPATH_METRICS:
+            for m in metrics:
                 if m in before and after[m] > 0:
                     entry[f"speedup_{m[:-2]}"] = round(before[m] / after[m], 2)
         else:
@@ -77,14 +87,23 @@ def main() -> None:
     from . import vcs_tables as V
 
     if args.hotpath_only:
-        rows = V.diff_merge_hotpath(n_rows)
+        run_once = lambda: (V.diff_merge_hotpath(n_rows)
+                            + V.workflow_scenario(n_rows))
+        rows = run_once()
         for rep in range(args.repeat - 1):
             print(f"# repeat {rep + 2}/{args.repeat} (min-fold)")
-            for r, r2 in zip(rows, V.diff_merge_hotpath(n_rows)):
-                for m in _HOTPATH_METRICS + ("diff_warm_avg_s",):
+            for r, r2 in zip(rows, run_once()):
+                for m in _row_metrics(r) + ("diff_warm_avg_s",):
                     if m in r:
                         r[m] = min(r[m], r2[m])
         for r in rows:
+            if r["op"].startswith("Workflow"):
+                print(f"workflow/{r['op']}/{r['change']}: "
+                      f"branch {r['branch_s']*1e3:.1f}ms "
+                      f"diff {r['pr_diff_s']*1e3:.1f}ms "
+                      f"publish {r['publish_s']*1e3:.1f}ms "
+                      f"revert {r['revert_s']*1e3:.1f}ms")
+                continue
             print(f"hotpath/{r['op']}/{r['change']}: "
                   f"diff cold {r['diff_cold_s']*1e3:.1f}ms "
                   f"warm {r['diff_warm_s']*1e3:.1f}ms "
@@ -132,6 +151,17 @@ def main() -> None:
               f"{r['diff_warm_s']*1e6:.0f},"
               f"cold_us={r['diff_cold_s']*1e6:.0f};"
               f"builds_warm={r['visibility_builds_warm']}")
+    sys.stdout.flush()
+
+    # ---- workflow porcelain (ISSUE 3): branch -> PR -> publish -> revert
+    wf = V.workflow_scenario(n_rows)
+    json_out["sections"]["workflow"] = wf
+    for r in wf:
+        print(f"workflow/{r['op']}/{r['change']}/publish,"
+              f"{r['publish_s']*1e6:.0f},"
+              f"branch_us={r['branch_s']*1e6:.0f};"
+              f"diff_us={r['pr_diff_s']*1e6:.0f};"
+              f"revert_us={r['revert_s']*1e6:.0f}")
     sys.stdout.flush()
 
     if not args.skip_collab:

@@ -127,6 +127,54 @@ def _random_update(engine: Engine, table: str, base, n: int, rng,
     return idx
 
 
+# ------------------------------------------------- workflow porcelain
+
+def workflow_scenario(n_rows: int = 2_000_000, csizes=None) -> List[Dict]:
+    """Branch -> mutate -> PR review -> CI-gated atomic publish -> Δ revert
+    (ISSUE 3). Branch/diff/revert are ∝ metadata/Δ; publish pays the CI
+    preview merge plus the real one."""
+    from repro.core import PublishBlocked  # noqa: F401 (fails fast if absent)
+    out = []
+    for pk in (True, False):
+        for cname, csize in (csizes or {"C3": 10_000, "C4": 100_000}).items():
+            csize = min(csize, n_rows // 5)
+            rng = np.random.default_rng([csize] + list(cname.encode()))
+            engine, base = _mk_engine(n_rows, pk)
+
+            t0 = time.perf_counter()
+            engine.create_branch("dev", ["lineitem"])
+            t_branch = time.perf_counter() - t0
+
+            _random_update(engine, "dev/lineitem", base, csize, rng, pk)
+            pr = engine.open_pr("main", "dev")
+            pr.add_check(lambda ctx: ctx.count("lineitem") == n_rows,
+                         "row-count")
+
+            t0 = time.perf_counter()
+            d = pr.diff()["lineitem"]
+            t_diff = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            pr.publish()
+            t_publish = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            pr.revert_publish()
+            t_revert = time.perf_counter() - t0
+
+            out.append({
+                "op": f"Workflow{'PK' if pk else 'NoPK'}",
+                "change": cname, "rows": n_rows, "changed_rows": csize,
+                "branch_s": t_branch,
+                "pr_diff_s": t_diff,
+                "publish_s": t_publish,
+                "revert_s": t_revert,
+                "diff_groups": d.n_groups,
+                "publish_ts": pr.publish_ts,
+            })
+    return out
+
+
 # ------------------------------------------------------------- Table 1
 
 def table1_clone(n_rows: int = 2_000_000) -> List[Dict]:

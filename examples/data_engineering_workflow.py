@@ -1,9 +1,12 @@
-"""Collaborative data-engineering workflow (paper §6.3/§6.4 + §1).
+"""Collaborative data-engineering workflow (paper §1, §6.3/§6.4) on the
+workflow porcelain: branch refs, data pull requests, CI-gated atomic
+publish, and Δ-based revert.
 
-Four engineers fork the dataset, label/clean their shard, open a
-"pull request" (SNAPSHOT DIFF for review), CI validates it, and the change
-is published to production in one atomic merge. One engineer's branch
-conflicts with another's — resolved with ACCEPT after review.
+Two engineers branch the production dataset, edit in isolation, open PRs,
+and CI checks gate what lands. A failing check blocks one publish until the
+data is fixed; a conflicting PR is reviewed and force-resolved; a bad
+release is rolled back with an inverse-delta revert — history-preserving,
+unlike the head-rewriting restore.
 
   PYTHONPATH=src python examples/data_engineering_workflow.py
 """
@@ -11,76 +14,103 @@ import numpy as np
 
 from repro.configs.paper_vcs import LINEITEM_SCHEMA, gen_lineitem
 from repro.core import (ConflictMode, Engine, MergeConflictError,
-                        snapshot_diff, three_way_merge)
+                        PublishBlocked, snapshot_diff)
 
+N_ROWS = 100_000
 rng = np.random.default_rng(7)
 engine = Engine()
-engine.create_table("prod", LINEITEM_SCHEMA)
-engine.insert("prod", gen_lineitem(200_000))
-print(f"prod: {engine.table('prod').count():,} rows")
+engine.create_table("lineitem", LINEITEM_SCHEMA)
+base = gen_lineitem(N_ROWS)
+engine.insert("lineitem", base)
+print(f"prod lineitem: {engine.table('lineitem').count():,} rows")
 
-release = engine.create_snapshot("release-1", "prod")
-
-# -- each engineer forks from the release tag (instant, zero-copy) ------
-workers = []
-for w in range(4):
-    t = engine.clone_table(f"eng{w}", "release-1")
-    workers.append(t)
-
-# -- independent edits: engineer w relabels their own row range ---------
-base = gen_lineitem(200_000)
+# -- branches: isolated metadata-only forks of the production table -----
+bytes_before = engine.store.bytes_written
+engine.create_branch("relabel", ["lineitem"])
+engine.create_branch("cleanup", ["lineitem"])
+assert engine.store.bytes_written == bytes_before  # zero data copied
+print("branches:", [b.name for b in engine.list_branches()],
+      "(clones are metadata-only)")
 
 
-def relabel(sl, w):
+def edit(sl, flag_shift, discount=None):
     out = {k: v[sl].copy() for k, v in base.items()}
-    out["l_returnflag"] = (out["l_returnflag"] + 1 + w) % 3  # new labels
+    out["l_returnflag"] = (out["l_returnflag"] + flag_shift) % 3
+    if discount is not None:
+        out["l_discount"] = np.full_like(out["l_discount"], discount)
     out["l_comment"] = np.array(
-        [b"eng%d-%d" % (w, i) for i in range(len(out["l_comment"]))],
+        [b"edit-%d-%d" % (flag_shift, i) for i in range(len(out["l_comment"]))],
         dtype=object)
     return out
 
 
-for w in range(4):
-    lo = w * 12_000
-    tx = engine.begin()
-    tx.update_by_keys(f"eng{w}", relabel(slice(lo, lo + 2_000), w))
-    # engineer 3 also touches engineer 0's range -> a true conflict later
-    if w == 3:
-        tx.update_by_keys(f"eng{w}", relabel(slice(100, 200), w))
-    tx.commit()
+# -- engineer 1 relabels a shard — but fat-fingers an illegal discount --
+engine.update_by_keys("relabel/lineitem", edit(slice(0, 2_000), 1,
+                                               discount=0.75))
+# -- engineer 2 cleans an overlapping shard ------------------------------
+engine.update_by_keys("cleanup/lineitem", edit(slice(1_000, 3_000), 2))
 
-# -- pull request: reviewer inspects SNAPSHOT DIFF vs the release -------
-for w in range(4):
-    snap = engine.create_snapshot(f"pr-{w}", f"eng{w}")
-    d = snapshot_diff(engine.store, release, snap)
-    payload = d.payload(engine.store)
-    assert len(payload["l_orderkey"]) == d.n_groups
-    # "CI": validate the changed rows satisfy business rules
-    ok = bool((payload["l_quantity"] >= 0).all()
-              and (payload["l_discount"] <= 0.1).all())
-    print(f"PR-{w}: {d.n_groups:5d} changed groups, rows scanned "
-          f"{d.stats.rows_scanned:,}, CI {'PASS' if ok else 'FAIL'}")
+# -- pull requests: pinned-base review diffs + CI checks -----------------
+pr1 = engine.open_pr("main", "relabel")
+pr2 = engine.open_pr("main", "cleanup")
 
-# -- publish: merge each PR into prod atomically ------------------------
-for w in range(4):
-    snap = engine.snapshots[f"pr-{w}"]
-    try:
-        rep = three_way_merge(engine, "prod", snap, mode=ConflictMode.FAIL)
-    except MergeConflictError as e:
-        print(f"merge PR-{w}: {e.report.true_conflicts} true conflicts "
-              f"-> reviewer chose ACCEPT (take the PR's version)")
-        rep = three_way_merge(engine, "prod", snap, mode=ConflictMode.ACCEPT)
-    print(f"merge PR-{w}: +{rep.inserted}/-{rep.deleted} "
-          f"(false={rep.false_conflicts} true={rep.true_conflicts}) "
-          f"ts={rep.commit_ts}")
 
-print(f"prod after merges: {engine.table('prod').count():,} rows")
+def discount_rule(ctx):
+    batch, _ = ctx.scan("lineitem")
+    return bool((batch["l_discount"] <= 0.1).all())
 
-# -- oops: bad deploy? instant rollback to the release tag --------------
-engine.create_snapshot("release-2", "prod")
-engine.restore_table("prod", "release-1")
-print("rolled back to release-1:",
-      snapshot_diff(engine.store, engine.current_snapshot("prod"),
-                    release).n_groups, "diff groups (0 = identical)")
-engine.restore_table("prod", "release-2")
-print("rolled forward to release-2 — time travel both ways is metadata-only")
+
+def row_count_stable(ctx):
+    return ctx.count("lineitem") == N_ROWS
+
+
+for pr in (pr1, pr2):
+    pr.add_check(discount_rule)
+    pr.add_check(row_count_stable)
+    d = pr.diff()["lineitem"]
+    print(f"PR#{pr.id} {pr.head_name}: {d.n_groups:5d} changed groups, "
+          f"rows scanned {d.stats.rows_scanned:,}")
+
+# -- publish #1: CI catches the bad discount and BLOCKS the publish ------
+try:
+    pr1.publish()
+except PublishBlocked as e:
+    print(f"PR#{pr1.id} blocked: {e}")
+# the engineer fixes the branch; the same PR then lands atomically
+engine.update_by_keys("relabel/lineitem", edit(slice(0, 2_000), 1))
+rep = pr1.publish()["lineitem"]
+print(f"PR#{pr1.id} published: +{rep.inserted}/-{rep.deleted} "
+      f"at ts={pr1.publish_ts}")
+
+# -- publish #2 conflicts (overlapping shard): review, then force --------
+dry = pr2.dry_run_merge()["lineitem"]
+print(f"PR#{pr2.id} dry run: {dry.true_conflicts} true conflicts "
+      f"(no mutation)")
+try:
+    pr2.publish()
+except MergeConflictError as e:
+    print(f"PR#{pr2.id}: {e.report.true_conflicts} true conflicts under "
+          "FAIL -> reviewer ACCEPTs the cleanup branch's version")
+rep = pr2.publish(mode=ConflictMode.ACCEPT)["lineitem"]
+print(f"PR#{pr2.id} published: +{rep.inserted}/-{rep.deleted} "
+      f"at ts={pr2.publish_ts}")
+
+# -- oops: release 2 broke the dashboard — revert it ---------------------
+ts = pr2.revert_publish()
+cur = engine.current_snapshot("lineitem")
+print(f"reverted PR#{pr2.id} at ts={ts} (Δ-sized, history-preserving): "
+      f"{snapshot_diff(engine.store, cur, engine.snapshot_at('lineitem', pr1.publish_ts)).n_groups} "
+      "diff groups vs release 1 (0 = identical)")
+# the reverted release stays reachable through PITR — time travel intact
+published = engine.snapshot_at("lineitem", pr2.publish_ts)
+print("published state still visible at its horizon:",
+      snapshot_diff(engine.store, published, cur).n_groups, "groups differ")
+
+# -- housekeeping: close the done PRs, drop branches, GC ----------------
+pr1.close()          # releases the published PR's revert pins
+engine.drop_branch("relabel")
+engine.drop_branch("cleanup")
+stats = engine.gc()
+print(f"gc: freed {stats.objects_freed} objects, pruned "
+      f"{stats.versions_pruned} history versions, "
+      f"{stats.pinned_horizons} pinned horizons honored")

@@ -10,10 +10,15 @@ Public API:
 """
 from .schema import CType, Column, Schema                      # noqa: F401
 from .directory import Directory, Snapshot                     # noqa: F401
-from .engine import Engine, PKViolation, Txn, TxnConflict      # noqa: F401
-from .diff import DiffResult, gather_payload, snapshot_diff, sql_diff  # noqa: F401
+from .engine import (Engine, GCStats, PKViolation, Txn,        # noqa: F401
+                     TxnConflict)
+from .diff import (DiffResult, gather_payload, gather_rowsigs,  # noqa: F401
+                   snapshot_diff, sql_diff)
 from .merge import (ConflictMode, MergeConflictError, MergeReport,  # noqa: F401
-                    ThreeWayDiff, three_way_diff, three_way_merge,
-                    two_way_merge)
+                    ThreeWayDiff, plan_merge, three_way_diff,
+                    three_way_merge, two_way_merge)
 from .compaction import compact_objects, compact_table         # noqa: F401
 from .wal import WAL                                           # noqa: F401
+from .workspace import (TRUNK, Branch, CheckContext,           # noqa: F401
+                        CheckResult, PublishBlocked, PullRequest,
+                        RevertConflict)

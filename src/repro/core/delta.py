@@ -124,6 +124,16 @@ class SignedStream:
             out.runs = _RUN0 if out.n else np.zeros((0,), np.int64)
         return out
 
+    def inverse(self) -> "SignedStream":
+        """The algebraic inverse Δ(b→a) of this stream Δ(a→b): same rows,
+        flipped signs. Signs do not participate in the sortedness invariant,
+        so runs/key aliasing carry over and every field but ``sign`` is
+        shared (cache-served streams stay untouched — their arrays are
+        read-only and ``-sign`` allocates fresh)."""
+        return SignedStream(-self.sign, self.key_lo, self.key_hi,
+                            self.row_lo, self.row_hi, self.rowid,
+                            runs=self.runs, key_is_row=self.key_is_row)
+
     def merge_by_key(self) -> "SignedStream":
         """Materialize the globally key-sorted stream: a stable k-way merge
         of the presorted runs (ties keep emission order), falling back to a

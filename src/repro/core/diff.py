@@ -93,6 +93,25 @@ def gather_payload(store: ObjectStore, schema: Schema,
     return take_batch(merged, inv)
 
 
+def gather_rowsigs(store: ObjectStore,
+                   rowids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Row-value signatures at physical rowids (preserves input order).
+
+    The Δ-sized value identity probe: two rows are byte-identical iff their
+    128-bit row signatures match, so revert's "is the current row still the
+    one being reverted away?" check never gathers payloads."""
+    lo = np.zeros(rowids.shape, np.uint64)
+    hi = np.zeros(rowids.shape, np.uint64)
+    oids = rowid_oid(rowids)
+    offs = rowid_off(rowids)
+    for oid in np.unique(oids):
+        sel = oids == oid
+        obj = store.get(int(oid))
+        lo[sel] = obj.row_lo[offs[sel]]
+        hi[sel] = obj.row_hi[offs[sel]]
+    return lo, hi
+
+
 def _aggregate_stream(schema: Schema, stream: SignedStream,
                       stats: DeltaStats) -> DiffResult:
     """Diff aggregation: cancel identical changes, keep net per value-group.

@@ -72,7 +72,13 @@ class Txn:
         self.insert(table, batch)
         return n
 
-    def commit(self) -> int:
+    @property
+    def staged(self) -> bool:
+        """True iff the workspace holds any insert or delete."""
+        return (any(b for b in self._ins.values())
+                or any(d.shape[0] for ds in self._del.values() for d in ds))
+
+    def commit(self, *, _log: bool = True) -> int:
         # expand with secondary-index maintenance (same-commit atomic)
         if self.engine.indices:
             from .indices import maintain_on_commit
@@ -83,7 +89,7 @@ class Txn:
                             else np.zeros((0,), np.uint64))
                     maintain_on_commit(self.engine, self, name,
                                        self._ins.get(name, []), dels)
-        ts = self.engine._commit(self)
+        ts = self.engine._commit(self, _log=_log)
         self.committed = ts
         return ts
 
@@ -100,6 +106,10 @@ class Engine:
         self._base: Dict[Tuple[str, str], Snapshot] = {}
         # secondary indices (paper §5.5.4): base table -> [IndexSpec]
         self.indices: Dict[str, list] = {}
+        # workflow porcelain (ISSUE 3): branch refs + pull requests
+        self.branches: Dict[str, "Branch"] = {}
+        self.prs: Dict[int, "PullRequest"] = {}
+        self._next_pr_id = 1
 
     # ------------------------------------------------------------ basics
     def next_ts(self) -> int:
@@ -204,42 +214,68 @@ class Engine:
         return oids
 
     def _commit(self, tx: Txn, *, _log=True) -> int:
+        """Commit a (possibly multi-table) transaction at ONE timestamp.
+
+        Two phases make the commit atomic across tables: phase 1 validates
+        every table and seals its objects WITHOUT touching any directory;
+        phase 2 swings all directories. A conflict or PK violation in any
+        table therefore unwinds every object sealed so far and leaves every
+        table untouched — the workflow subsystem's atomic publish leans on
+        exactly this all-or-nothing property."""
         names = sorted(set(tx._ins) | set(tx._del))
         ts = self.next_ts()
-        for name in names:
-            t = self.table(name)
-            dels = (np.unique(np.concatenate(tx._del[name]))
-                    if tx._del.get(name) else np.zeros((0,), np.uint64))
-            # write-write conflict check: every target must still be visible
-            if dels.shape[0]:
-                vi = visibility_index(self.store, t.directory)
-                if vi.killed_rowids(dels).any():
-                    raise TxnConflict(f"{name}: delete target already deleted")
-                live_oids = set(t.directory.data_oids)
-                for oid in np.unique(rowid_oid(dels)):
-                    if int(oid) not in live_oids:
-                        raise TxnConflict(f"{name}: target object gone")
-            ins = tx._ins.get(name, [])
-            data_oids, key_sigs = self._seal_inserts(t.schema, ins, ts)
-            # PK enforcement
-            if t.schema.has_pk and key_sigs is not None:
-                klo, khi = key_sigs
-                pairs = np.stack([klo, khi], 1)
-                if np.unique(pairs, axis=0).shape[0] != pairs.shape[0]:
-                    self._unwind(data_oids)
-                    raise PKViolation(f"{name}: duplicate key in insert batch")
-                existing = t.locate_keys(klo, khi)
-                live = existing != 0
-                if live.any():
-                    dset = set(dels.tolist())
-                    if any(int(r) not in dset for r in existing[live]):
-                        self._unwind(data_oids)
-                        raise PKViolation(f"{name}: key already exists")
-            tomb_oids = self._seal_tombstones(dels, ts)
-            t.set_directory(t.directory.with_objects(
-                data_oids, tomb_oids, ts=ts))
+        oid0 = self.store._next_oid
+        staged: List[Tuple[Table, object, list, np.ndarray]] = []
+        sealed: List[int] = []
+        try:
+            for name in names:
+                t = self.table(name)
+                dels = (np.unique(np.concatenate(tx._del[name]))
+                        if tx._del.get(name) else np.zeros((0,), np.uint64))
+                # write-write conflict: every target must still be visible
+                if dels.shape[0]:
+                    vi = visibility_index(self.store, t.directory)
+                    if vi.killed_rowids(dels).any():
+                        raise TxnConflict(
+                            f"{name}: delete target already deleted")
+                    live_oids = set(t.directory.data_oids)
+                    for oid in np.unique(rowid_oid(dels)):
+                        if int(oid) not in live_oids:
+                            raise TxnConflict(f"{name}: target object gone")
+                ins = tx._ins.get(name, [])
+                data_oids, key_sigs = self._seal_inserts(t.schema, ins, ts)
+                sealed.extend(data_oids)
+                # PK enforcement
+                if t.schema.has_pk and key_sigs is not None:
+                    klo, khi = key_sigs
+                    pairs = np.stack([klo, khi], 1)
+                    if np.unique(pairs, axis=0).shape[0] != pairs.shape[0]:
+                        raise PKViolation(
+                            f"{name}: duplicate key in insert batch")
+                    existing = t.locate_keys(klo, khi)
+                    live = existing != 0
+                    if live.any():
+                        dset = set(dels.tolist())
+                        if any(int(r) not in dset for r in existing[live]):
+                            raise PKViolation(f"{name}: key already exists")
+                tomb_oids = self._seal_tombstones(dels, ts)
+                sealed.extend(tomb_oids)
+                staged.append((t, t.directory.with_objects(
+                    data_oids, tomb_oids, ts=ts), ins, dels))
+        except Exception:
+            # an aborted transaction must be INVISIBLE: unwind the sealed
+            # objects and roll back the oid counter and the timestamp it
+            # consumed — a failed commit is not WAL-logged, so any leaked
+            # allocation would desynchronize every later rowid-bearing
+            # record at replay time
+            self._unwind(sealed)
+            self.store._next_oid = oid0
+            self.ts = ts - 1
+            raise
+        for t, directory, ins, dels in staged:
+            t.set_directory(directory)
             if _log:
-                self.wal.append("commit", table=name, ts=ts,
+                self.wal.append("commit", table=t.name, ts=ts,
                                 inserts=ins, deletes=dels)
         return ts
 
@@ -372,10 +408,55 @@ class Engine:
         if n:
             tx = self.begin()
             tx.insert(table, batch)
-            tx.commit()
+            # the rewrite is a sub-operation of the ONE alter_add_column
+            # record: logging it as a plain commit too would replay it
+            # twice, desynchronizing oid/ts allocation for every later
+            # rowid-bearing record
+            tx.commit(_log=False)
         if _log:
             self.wal.append("alter_add_column", table=table, column=column,
                             default=default)
+
+    # ------------------------------------------------- workflow porcelain
+    # Branch refs, pull requests, atomic publish, Δ-based revert live in
+    # core.workspace; these shims are the stable engine-level API (local
+    # imports break the engine <-> workspace cycle, same as .indices).
+
+    def create_branch(self, name: str, tables, from_ref: Optional[str] = None,
+                      *, _log=True) -> "Branch":
+        from .workspace import create_branch
+        return create_branch(self, name, tables, from_ref, _log=_log)
+
+    def drop_branch(self, name: str, *, _log=True) -> None:
+        from .workspace import drop_branch
+        drop_branch(self, name, _log=_log)
+
+    def branch(self, name: str) -> "Branch":
+        from .workspace import resolve_branch
+        return resolve_branch(self, name)
+
+    def list_branches(self) -> list:
+        """Registered branches, sorted by name."""
+        return sorted(self.branches.values(), key=lambda b: b.name)
+
+    def list_snapshots(self) -> list:
+        """Named snapshots as (name, table, created_ts), oldest first."""
+        return sorted(((s.name, s.table, s.created_ts)
+                       for s in self.snapshots.values()),
+                      key=lambda r: (r[2], r[0]))
+
+    def open_pr(self, base: Optional[str], head: str, *,
+                _log=True) -> "PullRequest":
+        from .workspace import open_pr
+        return open_pr(self, base, head, _log=_log)
+
+    def revert(self, table: str, from_ref: SnapshotRef, to_ref: SnapshotRef,
+               *, _log=True) -> Optional[int]:
+        """Apply the INVERSE of Δ(from_ref -> to_ref) to ``table``'s current
+        state as a new commit — history-preserving, Δ-sized (git revert, not
+        the head-rewriting restore_table)."""
+        from .workspace import revert
+        return revert(self, table, from_ref, to_ref, _log=_log)
 
     # ----------------------------------------------------------- lineage
     def set_common_base(self, a: str, b: str, snap: Snapshot) -> None:
@@ -390,18 +471,34 @@ class Engine:
         """Deterministically rebuild an engine from its WAL (crash recovery)."""
         from .compaction import compact_objects  # local import: cycle
         e = Engine()
-        for rec in wal:
+        records = list(wal)
+        i = 0
+        while i < len(records):
+            rec = records[i]
             k, p = rec.kind, rec.payload
+            i += 1
             if k == "create_table":
                 e.create_table(p["name"], p["schema"], _log=False)
             elif k == "drop_table":
                 e.drop_table(p["name"], _log=False)
             elif k == "commit":
+                # a multi-table transaction emits one commit record per
+                # table at ONE shared ts (in sorted-name order, exactly how
+                # _commit seals) — regroup the run into one transaction so
+                # replay consumes one timestamp and allocates oids in the
+                # live order
                 tx = e.begin()
-                for b in p["inserts"]:
-                    tx._ins.setdefault(p["table"], []).append(b)
-                if p["deletes"].shape[0]:
-                    tx.delete_rowids(p["table"], p["deletes"])
+                while True:
+                    for b in p["inserts"]:
+                        tx._ins.setdefault(p["table"], []).append(b)
+                    if p["deletes"].shape[0]:
+                        tx.delete_rowids(p["table"], p["deletes"])
+                    if (i < len(records) and records[i].kind == "commit"
+                            and records[i].payload["ts"] == p["ts"]):
+                        p = records[i].payload
+                        i += 1
+                    else:
+                        break
                 e._commit(tx, _log=False)
             elif k == "snapshot":
                 e.create_snapshot(p["name"], p["table"], _log=False)
@@ -431,31 +528,94 @@ class Engine:
                                          p["default"], _log=False)
             elif k == "compact":
                 compact_objects(e, p["table"], p["src_oids"], _log=False)
+            # workflow porcelain: one record per logical operation; the
+            # sub-operations (clones, merge planning, the publish commit)
+            # re-derive deterministically from the replayed state
+            elif k == "create_branch":
+                e.create_branch(p["name"], p["tables"], p.get("from_ref"),
+                                _log=False)
+            elif k == "drop_branch":
+                e.drop_branch(p["name"], _log=False)
+            elif k == "open_pr":
+                pr = e.open_pr(p["base"], p["head"], _log=False)
+                if pr.id != p["pr"]:
+                    raise ValueError(
+                        f"replay diverged: PR id {pr.id} != {p['pr']}")
+            elif k == "close_pr":
+                e.prs[p["pr"]].close(_log=False)
+            elif k == "publish":
+                from .merge import ConflictMode
+                e.prs[p["pr"]].publish(mode=ConflictMode(p["mode"]),
+                                       _log=False, _skip_checks=True)
+            elif k == "publish_revert":
+                e.prs[p["pr"]].revert_publish(_log=False)
+            elif k == "revert":
+                sf, st = p["snap_from"], p["snap_to"]
+                sf = e.snapshots.get(sf.name, sf) if sf.name else sf
+                st = e.snapshots.get(st.name, st) if st.name else st
+                e.revert(p["table"], sf, st, _log=False)
             else:
                 raise ValueError(f"unknown WAL record {k}")
-        # replay must land on the same timestamp
-        e.ts = max(e.ts, max((r.payload.get("ts", 0) for r in wal), default=0))
+        # replay must land on the same timestamp (`or 0`: no-op publish /
+        # revert records carry ts=None)
+        e.ts = max(e.ts, max((r.payload.get("ts") or 0 for r in wal),
+                             default=0))
         return e
 
     # ------------------------------------------------------- GC (mark-sweep)
-    def gc(self) -> int:
-        """Drop objects unreachable from current tables, retained PITR
-        history, and named snapshots. Returns #objects collected."""
+    def _pinned_snapshots(self) -> List[Snapshot]:
+        """Snapshots that must survive GC beyond the named ones: lineage
+        bases, branch points, and the horizons held by live pull requests
+        (open PRs pin their base-at-open; published-but-not-closed PRs pin
+        their pre/post publish states so revert_publish stays possible)."""
+        pins = list(self._base.values())
+        for br in self.branches.values():
+            pins.extend(br.base.values())
+        for pr in self.prs.values():
+            if pr.status == "open":
+                pins.extend(pr.base_pins.values())
+            elif pr.status == "published":
+                pins.extend(pr.pre_publish.values())
+                pins.extend(pr.post_publish.values())
+        return pins
+
+    def gc(self) -> "GCStats":
+        """Mark-sweep GC: drop objects unreachable from current tables,
+        retained PITR history, named snapshots, and pinned horizons.
+
+        History is trimmed to ``retention_versions`` per table, but every
+        entry still backing a pinned horizon (open PR base, ``_base``
+        lineage snapshot, branch point) survives the trim — a pin guarantees
+        ``directory_at`` keeps resolving at that horizon."""
+        pins = self._pinned_snapshots()
+        pin_ts: Dict[str, set] = {}
+        for s in list(self.snapshots.values()) + pins:
+            if s.table in self.tables:
+                pin_ts.setdefault(s.table, set()).add(
+                    max(s.created_ts, s.directory.ts))
         marked = set()
-        for t in self.tables.values():
-            t.history = t.history[-self.retention_versions:]
+        pruned = 0
+        for name, t in self.tables.items():
+            pruned += t.trim_history(self.retention_versions,
+                                     pin_ts.get(name, ()))
             for _, d in t.history:
                 marked.update(d.data_oids)
                 marked.update(d.tomb_oids)
             marked.update(t.directory.data_oids)
             marked.update(t.directory.tomb_oids)
-        for s in self.snapshots.values():
-            marked.update(s.directory.data_oids)
-            marked.update(s.directory.tomb_oids)
-        for s in self._base.values():
+        for s in list(self.snapshots.values()) + pins:
             marked.update(s.directory.data_oids)
             marked.update(s.directory.tomb_oids)
         dead = [o for o in list(self.store.oids()) if o not in marked]
         for o in dead:
             self.store.delete(o)
-        return len(dead)
+        return GCStats(objects_freed=len(dead), versions_pruned=pruned,
+                       pinned_horizons=sum(len(v) for v in pin_ts.values()))
+
+
+@dataclass
+class GCStats:
+    """What one GC pass did (and deliberately did not) collect."""
+    objects_freed: int = 0
+    versions_pruned: int = 0
+    pinned_horizons: int = 0

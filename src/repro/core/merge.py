@@ -444,24 +444,25 @@ def _merge_nopk_nobase(engine: Engine, target: str, source: Snapshot,
 # entry points
 # --------------------------------------------------------------------------
 
-def three_way_merge(engine: Engine, target: str, source: Snapshot,
-                    base: Optional[Snapshot] = None,
-                    mode: ConflictMode = ConflictMode.FAIL) -> MergeReport:
-    """SNAPSHOT MERGE TABLE target FROM source [BASED ON base]
-    [WHEN CONFLICT FAIL|SKIP|ACCEPT]."""
+def plan_merge(engine: Engine, target: str, source: Snapshot,
+               base: Optional[Snapshot], mode: ConflictMode,
+               report: MergeReport, tx) -> None:
+    """Stage the merge edits of ``source`` into ``target`` on ``tx``.
+
+    Pure planning: reads the engine, fills ``report``, stages deletes and
+    inserts on the caller's transaction — but never commits. Conflicts under
+    FAIL/CELL raise *before* anything is staged for this table, so a caller
+    batching several tables into one transaction (the workflow subsystem's
+    atomic publish) aborts with nothing applied. Committing — or discarding
+    the transaction for a dry run — is the caller's move."""
     t_tab = engine.table(target)
     if not t_tab.schema.compatible_with(source.schema):
         raise ValueError("SNAPSHOT MERGE: incompatible schemas")
-    if base is None:
-        base = engine.find_common_base(target, source.table)
     if mode is ConflictMode.CELL and (not t_tab.schema.has_pk
                                       or base is None):
         raise ValueError("CELL conflict mode needs a primary key and a "
                          "common base revision")
-    report = MergeReport(used_base=base is not None)
     schema = t_tab.schema
-
-    tx = engine.begin()
     merged_batch = None
     if schema.has_pk:
         if base is not None:
@@ -502,6 +503,17 @@ def three_way_merge(engine: Engine, target: str, source: Snapshot,
         tx.insert(target, merged_batch)
         report.inserted += int(len(next(iter(merged_batch.values()))))
 
+
+def three_way_merge(engine: Engine, target: str, source: Snapshot,
+                    base: Optional[Snapshot] = None,
+                    mode: ConflictMode = ConflictMode.FAIL) -> MergeReport:
+    """SNAPSHOT MERGE TABLE target FROM source [BASED ON base]
+    [WHEN CONFLICT FAIL|SKIP|ACCEPT]."""
+    if base is None:
+        base = engine.find_common_base(target, source.table)
+    report = MergeReport(used_base=base is not None)
+    tx = engine.begin()
+    plan_merge(engine, target, source, base, mode, report, tx)
     if report.inserted or report.deleted:
         report.commit_ts = tx.commit()
     # lineage: the merged-in source snapshot becomes the new common base

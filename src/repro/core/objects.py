@@ -128,9 +128,16 @@ def seal_data_object(oid: int, schema: Schema, batch: Dict[str, np.ndarray],
 class ObjectStore:
     """The immutable object store (stand-in for S3 in the paper).
 
-    Objects are write-once; GC (mark-sweep from directories + named
-    snapshots) is the only deletion path. Immutability makes client caching
-    trivial (paper §4) — here the "cache" is the process heap itself.
+    Objects are write-once; deletion happens only through GC (mark-sweep
+    from directories + named snapshots) and through the rollback paths
+    that make aborted work invisible (``Engine._commit`` unwinding a
+    failed transaction, the workflow layer discarding a CI merge
+    preview). Those rollbacks also rewind ``_next_oid``, so an oid CAN be
+    reused after its object was deleted — any oid-keyed structure must
+    therefore subscribe to ``delete`` notifications (``on_delete``, as
+    the visibility/delta caches do) rather than assume oids are unique
+    forever. Immutability makes client caching trivial (paper §4) — here
+    the "cache" is the process heap itself.
     """
 
     def __init__(self):

@@ -48,6 +48,31 @@ class Table:
         if cache is not None:
             cache.extend(old, d)
 
+    def trim_history(self, retention: int, pinned_ts=()) -> int:
+        """Trim PITR history to the trailing ``retention`` versions while
+        keeping every entry still needed to serve ``directory_at`` of a
+        pinned horizon (open PR bases, lineage snapshots, branch points).
+
+        For each pin the *latest* entry with apply-ts <= pin survives — the
+        one ``directory_at(pin)`` resolves to — so a pinned horizon can
+        never be collected out from under its holder. Returns the number of
+        entries pruned.
+
+        ``retention <= 0`` keeps everything (the pre-existing
+        ``history[-0:]`` semantics of Engine(retention_versions=0))."""
+        n = len(self.history)
+        if retention <= 0 or n <= retention:
+            return 0
+        keep = set(range(n - retention, n))
+        for ts in pinned_ts:
+            i = bisect.bisect_right(self.history, ts, key=lambda e: e[0])
+            if i > 0:
+                keep.add(i - 1)
+        kept = [self.history[i] for i in sorted(keep)]
+        pruned = n - len(kept)
+        self.history = kept
+        return pruned
+
     def directory_at(self, ts: int) -> Directory:
         """PITR: latest directory version with apply-ts <= ts, horizon ts."""
         i = bisect.bisect_right(self.history, ts, key=lambda e: e[0])

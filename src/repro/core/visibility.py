@@ -126,10 +126,13 @@ class VisibilityCache(KeyedLRU):
     """LRU cache of tombstone-target arrays keyed by (tomb_oids, ts).
 
     Correctness is by construction: keys are value-based over immutable
-    inputs (tombstone objects are write-once; oids are never reused), so a
-    directory change — commit, restore, compaction — yields a different key
-    and can never observe a stale array.  ``on_delete`` additionally drops
-    entries referencing a GC'd tombstone to bound memory.
+    inputs (tombstone objects are write-once), so a directory change —
+    commit, restore, compaction — yields a different key and can never
+    observe a stale array.  ``on_delete`` drops entries referencing a
+    deleted tombstone; that is load-bearing, not just a memory bound —
+    rollback paths (aborted commits, discarded CI previews) rewind the oid
+    counter, so a deleted tombstone's oid can be REUSED by a later object
+    and a surviving entry would alias it.
     """
 
     def __init__(self, store: ObjectStore, capacity: int = 32):

@@ -11,11 +11,24 @@ import pickle
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+# Every record kind the engine may emit and ``Engine.replay`` understands.
+# The workflow porcelain (ISSUE 3) logs ONE record per logical operation —
+# its sub-operations (clones, merges, the publish commit) are unlogged and
+# re-derived deterministically at replay time.
+KINDS = frozenset({
+    # storage / transaction layer
+    "create_table", "drop_table", "commit", "snapshot", "drop_snapshot",
+    "clone", "restore", "set_base", "create_index", "drop_index",
+    "alter_add_column", "compact",
+    # workflow porcelain: branches, pull requests, atomic publish, Δ-revert
+    "create_branch", "drop_branch", "open_pr", "close_pr", "publish",
+    "publish_revert", "revert",
+})
+
 
 @dataclass
 class WalRecord:
-    kind: str                 # create_table | commit | snapshot | drop_snapshot
-    #                         | clone | restore | compact | set_base | drop_table
+    kind: str                 # one of KINDS
     payload: Dict[str, Any] = field(default_factory=dict)
 
 
@@ -24,6 +37,10 @@ class WAL:
         self.records: List[WalRecord] = []
 
     def append(self, kind: str, **payload) -> None:
+        # hard error, not assert: a typo'd kind persisted here would only
+        # explode at replay time, after the log is already corrupt
+        if kind not in KINDS:
+            raise ValueError(f"unknown WAL record kind {kind!r}")
         self.records.append(WalRecord(kind, payload))
 
     def __iter__(self):

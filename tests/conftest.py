@@ -1,0 +1,32 @@
+"""Shared helpers for the workflow / WAL round-trip suites.
+
+One definition of the test schema, batch builder, and the content-digest
+idiom (order-independent hash over full-row signatures) — so every suite
+asserts the SAME notion of table equivalence.
+"""
+import hashlib
+
+import numpy as np
+
+from repro.core import Column, CType, Schema
+
+VCS_SCHEMA = Schema((Column("k", CType.I64), Column("v", CType.F64),
+                     Column("doc", CType.LOB)), primary_key=("k",))
+VCS_SCHEMA_NOPK = Schema(VCS_SCHEMA.columns, primary_key=None)
+
+
+def kv_batch(keys, vals=None, docs=None):
+    keys = np.asarray(keys, np.int64)
+    return {"k": keys,
+            "v": np.asarray(vals if vals is not None else keys * 0.5,
+                            np.float64),
+            "doc": [b"d%d" % k for k in keys] if docs is None else docs}
+
+
+def content_digest(engine, table):
+    """Order-independent content digest over full-row signatures."""
+    _, _, lo, hi = engine.table(table).scan(with_sigs=True)
+    order = np.lexsort((hi, lo))
+    h = hashlib.sha256(lo[order].tobytes())
+    h.update(hi[order].tobytes())
+    return h.hexdigest()
