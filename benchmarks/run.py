@@ -4,10 +4,20 @@ Prints ``name,us_per_call,derived`` CSV per benchmark row, plus the
 roofline table from the latest dry-run artifacts if present.
 
   PYTHONPATH=src python -m benchmarks.run [--rows N] [--quick]
+
+Perf-claim protocol (ROADMAP): this container's timings swing ±30-100%
+run to run, so before/after comparisons must use ``--repeat`` (min-fold)
+AND ``--interleave OLD_CHECKOUT`` — each repeat runs the baseline tree
+and the current tree back to back in subprocesses, so machine-state drift
+hits both sides equally instead of masquerading as a regression.
 """
 import argparse
 import json
+import os
+import shutil
+import subprocess
 import sys
+import tempfile
 
 
 _HOTPATH_METRICS = ("diff_cold_s", "diff_warm_s", "merge_s")
@@ -17,6 +27,64 @@ _WORKFLOW_METRICS = ("branch_s", "pr_diff_s", "publish_s", "revert_s")
 def _row_metrics(row_or_op):
     op = row_or_op if isinstance(row_or_op, str) else row_or_op["op"]
     return _WORKFLOW_METRICS if op.startswith("Workflow") else _HOTPATH_METRICS
+
+
+def _run_hotpath_subprocess(root: str, n_rows: int) -> list:
+    """One hotpath+workflow pass of the tree at ``root`` (its own
+    benchmarks/ and src/), returning the raw result rows."""
+    tmp = tempfile.mkdtemp(prefix="bench_ab_")
+    try:
+        out = os.path.join(tmp, "rows.json")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + ((os.pathsep + env["PYTHONPATH"])
+                                     if env.get("PYTHONPATH") else "")
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--hotpath-only",
+             "--rows", str(n_rows), "--json", out],
+            cwd=root, env=env, check=True, stdout=subprocess.DEVNULL)
+        with open(out) as f:
+            return json.load(f)["results"]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _min_fold(acc, rows):
+    if acc is None:
+        return rows
+    by_key = {(r["op"], r["change"]): r for r in acc}
+    for r2 in rows:
+        r = by_key.get((r2["op"], r2["change"]))
+        if r is None:
+            acc.append(r2)
+            continue
+        for m in _row_metrics(r) + ("diff_warm_avg_s",):
+            if m in r and m in r2:
+                r[m] = min(r[m], r2[m])
+    return acc
+
+
+def _run_interleaved(baseline_root: str, n_rows: int, repeat: int):
+    """Alternate baseline/current per repeat, min-folding each side."""
+    old_rows = new_rows = None
+    for rep in range(repeat):
+        print(f"# interleave {rep + 1}/{repeat}: baseline "
+              f"({baseline_root})", flush=True)
+        old_rows = _min_fold(old_rows,
+                             _run_hotpath_subprocess(baseline_root, n_rows))
+        print(f"# interleave {rep + 1}/{repeat}: current", flush=True)
+        new_rows = _min_fold(new_rows, _run_hotpath_subprocess(".", n_rows))
+    old_by_key = {(r["op"], r["change"]): r for r in old_rows}
+    for r in new_rows:
+        old = old_by_key.get((r["op"], r["change"]))
+        line = f"A/B {r['op']}/{r['change']}:"
+        for m in _row_metrics(r):
+            if old is None or m not in old or m not in r:
+                continue
+            ratio = old[m] / r[m] if r[m] > 0 else float("inf")
+            line += (f" {m[:-2]} {old[m]*1e3:.1f}->{r[m]*1e3:.1f}ms"
+                     f" ({ratio:.2f}x)")
+        print(line, flush=True)
+    return old_rows, new_rows
 
 
 def _fold_hotpath_trajectory(prev_path, n_rows, rows, note):
@@ -81,10 +149,36 @@ def main() -> None:
                     help="hotpath only: run N times and keep the per-case "
                          "minimum of each timing (robust against noisy "
                          "shared-tenancy machines)")
+    ap.add_argument("--interleave", default=None, metavar="BASELINE_ROOT",
+                    help="hotpath only: A/B mode — each repeat runs the "
+                         "baseline checkout at BASELINE_ROOT and then this "
+                         "tree, back to back in subprocesses (min-fold per "
+                         "side). --json folds the result as before=baseline "
+                         "mins, after=current mins. This is the required "
+                         "protocol for perf claims on this noisy container.")
     args = ap.parse_args()
     n_rows = args.rows or (200_000 if args.quick else 2_000_000)
 
     from . import vcs_tables as V
+
+    if args.interleave:
+        if not args.hotpath_only:
+            ap.error("--interleave requires --hotpath-only")
+        old_rows, rows = _run_interleaved(args.interleave, n_rows,
+                                          args.repeat)
+        if args.json:
+            tf = tempfile.NamedTemporaryFile(
+                "w", suffix=".json", delete=False)
+            try:
+                json.dump({"results": old_rows}, tf)
+                tf.close()
+                payload = _fold_hotpath_trajectory(tf.name, n_rows, rows,
+                                                   args.note)
+            finally:
+                os.unlink(tf.name)
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1)
+        return
 
     if args.hotpath_only:
         run_once = lambda: (V.diff_merge_hotpath(n_rows)
@@ -92,10 +186,7 @@ def main() -> None:
         rows = run_once()
         for rep in range(args.repeat - 1):
             print(f"# repeat {rep + 2}/{args.repeat} (min-fold)")
-            for r, r2 in zip(rows, run_once()):
-                for m in _row_metrics(r) + ("diff_warm_avg_s",):
-                    if m in r:
-                        r[m] = min(r[m], r2[m])
+            rows = _min_fold(rows, run_once())
         for r in rows:
             if r["op"].startswith("Workflow"):
                 print(f"workflow/{r['op']}/{r['change']}: "

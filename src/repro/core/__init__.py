@@ -10,8 +10,9 @@ Public API:
 """
 from .schema import CType, Column, Schema                      # noqa: F401
 from .directory import Directory, Snapshot                     # noqa: F401
-from .engine import (Engine, GCStats, PKViolation, Txn,        # noqa: F401
-                     TxnConflict)
+from .engine import (CommitStats, Engine, GCStats,             # noqa: F401
+                     PKViolation, Txn, TxnConflict)
+from .sigs import SigBatch, compute_sigs, resolve_sigs         # noqa: F401
 from .diff import (DiffResult, gather_payload, gather_rowsigs,  # noqa: F401
                    snapshot_diff, sql_diff)
 from .merge import (ConflictMode, MergeConflictError, MergeReport,  # noqa: F401

@@ -81,10 +81,12 @@ def compact_objects(engine, table: str, src_oids: Sequence[int],
             rl, rh = row_lo[idx], row_hi[idx]
             kl = rl if key_lo is row_lo else key_lo[idx]
             kh = rh if key_hi is row_hi else key_hi[idx]
+            # the global lexsort above already ordered every slice — seal
+            # presorted instead of paying a second (identity) lexsort
             obj = seal_data_object(
                 engine.store.new_oid(), t.schema, take_batch(batch, idx),
                 ts[idx], rl, rh, kl, kh,
-                {k: v[idx] for k, v in lob.items()})
+                {k: v[idx] for k, v in lob.items()}, presorted=True)
             engine.store.put(obj)
             new_oids.append(obj.oid)
 

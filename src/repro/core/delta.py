@@ -24,6 +24,15 @@ ordered immutable chunks. ``signed_delta`` k-way merges those presorted runs
 once (``SignedStream.merge_by_key``) and caches the globally key-sorted
 stream; diff aggregation, PK collapse and the merge paths then run sort-free
 (``presorted=True``), never rebuilding an order that was free at emission.
+
+The invariant now extends through COMMIT (ISSUE 4): because merged streams
+are globally key-sorted, the apply-side producers (merge, revert, publish)
+emit their insert rowids as key-ascending pieces and declare that order via
+``SigBatch.runs`` — the seal path then reuses the carried order instead of
+re-lexsorting, and the carried signatures instead of rehashing. Anyone
+changing emission order here is changing what producers may claim there:
+the Δ-side ``runs`` rule and the write-side ``SigBatch.runs`` rule are the
+same contract (never claim sortedness that isn't real).
 """
 from __future__ import annotations
 

@@ -25,7 +25,8 @@ from ..kernels import ops
 from .delta import DeltaStats, SignedStream, full_scan_stream, signed_delta
 from .directory import Snapshot
 from .objects import ObjectStore, rowid_off, rowid_oid
-from .schema import Schema, concat_batches, take_batch
+from .schema import CType, Schema, concat_batches, take_batch
+from .sigs import SigBatch
 
 
 @dataclass
@@ -74,23 +75,61 @@ class DiffResult:
 
 
 def gather_payload(store: ObjectStore, schema: Schema,
-                   rowids: np.ndarray) -> Dict[str, np.ndarray]:
-    """Materialize full rows by physical rowid (preserves input order)."""
+                   rowids: np.ndarray, *, with_sigs: bool = False,
+                   runs: Optional[np.ndarray] = None):
+    """Materialize full rows by physical rowid (preserves input order).
+
+    ``with_sigs=True`` returns ``(batch, SigBatch)``: the rows' write-once
+    row/key signatures and LOB content signatures gathered from the same
+    objects — zero hashing — so the batch can be re-sealed verbatim
+    (``Txn.insert(..., sigs=...)``). ``runs`` is the CALLER's sortedness
+    claim about the ``rowids`` sequence (key-sorted run-start offsets; the
+    gather preserves input order, so the claim transfers to the batch) and
+    is carried into the sidecar untouched. Never claim runs that aren't
+    real — the seal path's order depends on it."""
     n = rowids.shape[0]
     oids = rowid_oid(rowids)
     offs = rowid_off(rowids)
-    batches, perm = [], []
+    alias = with_sigs and not schema.has_pk
+    lob_names = ([c.name for c in schema.columns if c.ctype is CType.LOB]
+                 if with_sigs else [])
+    batches, perm, sig_parts = [], [], []
     for oid in np.unique(oids):
         sel = np.flatnonzero(oids == oid)
         obj = store.get(int(oid))
-        batches.append(take_batch(obj.cols, offs[sel]))
+        o = offs[sel]
+        batches.append(take_batch(obj.cols, o))
         perm.append(sel)
+        if with_sigs:
+            sig_parts.append(
+                (obj.row_lo[o], obj.row_hi[o],
+                 None if alias else obj.key_lo[o],
+                 None if alias else obj.key_hi[o],
+                 {c: obj.lob_sigs[c][o] for c in lob_names}))
     if not batches:
-        return concat_batches(schema, [])
+        empty = concat_batches(schema, [])
+        if not with_sigs:
+            return empty
+        z64 = np.zeros((0,), np.uint64)
+        return empty, SigBatch(z64, z64, z64, z64,
+                               {c: z64 for c in lob_names},
+                               runs=np.zeros((0,), np.int64))
     merged = concat_batches(schema, batches)
     inv = np.empty((n,), np.int64)
     inv[np.concatenate(perm)] = np.arange(n)
-    return take_batch(merged, inv)
+    batch = take_batch(merged, inv)
+    if not with_sigs:
+        return batch
+    row_lo = np.concatenate([p[0] for p in sig_parts])[inv]
+    row_hi = np.concatenate([p[1] for p in sig_parts])[inv]
+    if alias:
+        key_lo, key_hi = row_lo, row_hi
+    else:
+        key_lo = np.concatenate([p[2] for p in sig_parts])[inv]
+        key_hi = np.concatenate([p[3] for p in sig_parts])[inv]
+    lob = {c: np.concatenate([p[4][c] for p in sig_parts])[inv]
+           for c in lob_names}
+    return batch, SigBatch(row_lo, row_hi, key_lo, key_hi, lob, runs=runs)
 
 
 def gather_rowsigs(store: ObjectStore,

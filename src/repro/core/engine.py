@@ -13,12 +13,14 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..kernels import ops
 from .directory import Directory, Snapshot
 from .objects import (OBJECT_CAPACITY, DataObject, ObjectStore,
                       TombstoneObject, pack_rowid, rowid_off, rowid_oid,
                       seal_data_object)
 from .schema import Schema, concat_batches, take_batch
-from .sigs import compute_sigs, key_sigs_for_lookup
+from .sigs import (SigBatch, concat_sigs, key_sigs_for_lookup, resolve_sigs,
+                   validate_runs)
 from .table import Table
 from .visibility import visibility_index
 from .wal import WAL
@@ -42,12 +44,29 @@ class Txn:
         self.engine = engine
         self.read_ts = engine.ts
         self._ins: Dict[str, List[Dict[str, np.ndarray]]] = {}
+        # signature sidecars, aligned 1:1 with _ins (None = hash at seal);
+        # kept out of _ins so WAL commit records stay plain batches —
+        # replay recomputes the (identical, write-once) signatures
+        self._sigs: Dict[str, List[Optional[SigBatch]]] = {}
         self._del: Dict[str, List[np.ndarray]] = {}
         self.committed: Optional[int] = None
 
-    def insert(self, table: str, batch) -> None:
+    def insert(self, table: str, batch,
+               sigs: Optional[SigBatch] = None) -> None:
+        """Stage a batch; ``sigs`` is the zero-rehash carry contract.
+
+        Passing ``sigs`` asserts the batch came verbatim off sealed
+        objects (``gather_payload(with_sigs=True)`` / ``scan_carry``):
+        it is already schema-normalized (bytes LOBs, exact dtypes) and
+        the caller RELINQUISHES the arrays — a single-object seal reuses
+        them zero-copy, so mutating them after commit would corrupt the
+        sealed object behind its carried signatures. Producer-authored
+        data must use ``sigs=None`` (normalized + hashed at seal)."""
         t = self.engine.table(table)
-        self._ins.setdefault(table, []).append(t.schema.normalize_batch(batch))
+        if sigs is None:
+            batch = t.schema.normalize_batch(batch)
+        self._ins.setdefault(table, []).append(batch)
+        self._sigs.setdefault(table, []).append(sigs)
 
     def delete_rowids(self, table: str, rowids: np.ndarray) -> None:
         self._del.setdefault(table, []).append(np.asarray(rowids, np.uint64))
@@ -98,6 +117,7 @@ class Engine:
     def __init__(self, retention_versions: int = 1024):
         self.store = ObjectStore()
         self.wal = WAL()
+        self.commit_stats = CommitStats()
         self.ts = 0
         self.tables: Dict[str, Table] = {}
         self.snapshots: Dict[str, Snapshot] = {}
@@ -162,31 +182,77 @@ class Engine:
         return n
 
     # ------------------------------------------------------------ commit
-    def _seal_inserts(self, schema: Schema, batches, ts: int):
-        """Globally key-sort the txn's inserts and seal capacity-sized
-        objects with disjoint zones."""
-        batch = concat_batches(schema, batches)
-        n = schema.validate_batch(batch)
-        if n == 0:
+    def _seal_inserts(self, schema: Schema, batches, sig_batches, ts: int):
+        """Key-sort the txn's inserts and seal capacity-sized objects with
+        disjoint zones.
+
+        The zero-rehash apply path: batches whose rows were gathered from
+        sealed objects arrive with a ``SigBatch`` sidecar — their row/key
+        signatures and LOB content signatures are reused verbatim (they are
+        write-once per object), and a declared-key-sorted batch (one run)
+        skips the global sort outright while multi-run batches take the
+        stable k-way merge (≡ np.lexsort). Only producer-authored rows pay
+        ``compute_sigs``. Returns (oids, (key_lo, key_hi)) with the key
+        lanes in SEALED (sorted) order."""
+        from .sigs import DEBUG_VALIDATE_CARRY
+        stats = self.commit_stats
+        parts = []
+        for b, sg in zip(batches, sig_batches):
+            if schema.validate_batch(b) == 0:
+                continue
+            parts.append((b, resolve_sigs(schema, b, sg, stats)))
+        if not parts:
             return [], None
-        row_lo, row_hi, key_lo, key_hi, lob_sigs = compute_sigs(schema, batch)
-        order = np.lexsort((key_hi, key_lo))
+        batch = (parts[0][0] if len(parts) == 1
+                 else concat_batches(schema, [b for b, _ in parts]))
+        sigs = concat_sigs([s for _, s in parts])
+        row_lo, row_hi = sigs.row_lo, sigs.row_hi
+        key_lo, key_hi = sigs.key_lo, sigs.key_hi
+        lob_sigs, runs = sigs.lob_sigs, sigs.runs
+        alias = key_lo is row_lo           # NoPK: key IS the row signature
+        n = int(row_lo.shape[0])
+        if runs is not None and DEBUG_VALIDATE_CARRY:
+            validate_runs(key_lo, key_hi, runs)
+        order = None
+        if runs is not None and runs.shape[0] <= 1:
+            stats.apply_sort_skipped += 1  # producer-declared key-sorted
+        elif runs is None:
+            order = np.lexsort((key_hi, key_lo))
+            stats.apply_sorts += 1
+        else:
+            order = ops.merge128_runs(key_lo, key_hi, runs)
+            stats.apply_sort_merged += 1
+        if order is not None:
+            s_klo, s_khi = key_lo[order], key_hi[order]
+        else:
+            s_klo, s_khi = key_lo, key_hi
+        # Objects must own COMPACT arrays: sealing capacity slices as views
+        # of one multi-object parent makes every later Δ-scan gather
+        # page-walk the whole parent (measured 3-5x on cold diff). The
+        # single-object case — every Δ-sized apply — stays zero-copy.
+        multi = n > OBJECT_CAPACITY
         oids = []
-        tsa = np.full((n,), np.uint64(ts))
         for s in range(0, n, OBJECT_CAPACITY):
-            idx = order[s:s + OBJECT_CAPACITY]
-            rl, rh = row_lo[idx], row_hi[idx]
-            # NoPK: compute_sigs aliases key sigs to row sigs — keep the
-            # identity through the gather (seal tags the object key==row)
-            kl = rl if key_lo is row_lo else key_lo[idx]
-            kh = rh if key_hi is row_hi else key_hi[idx]
+            e = min(s + OBJECT_CAPACITY, n)
+            if order is not None:
+                idx = order[s:e]
+                take = lambda a: a[idx]
+            elif multi:
+                sl = slice(s, e)
+                take = lambda a: a[sl].copy()
+            else:
+                take = lambda a: a
+            rl, rh = take(row_lo), take(row_hi)
+            kl = rl if alias else take(key_lo)
+            kh = rh if alias else take(key_hi)
             obj = seal_data_object(
-                self.store.new_oid(), schema, take_batch(batch, idx),
-                tsa[:idx.shape[0]], rl, rh, kl, kh,
-                {k: v[idx] for k, v in lob_sigs.items()})
+                self.store.new_oid(), schema,
+                {k: take(v) for k, v in batch.items()},
+                np.full((e - s,), np.uint64(ts)), rl, rh, kl, kh,
+                {k: take(v) for k, v in lob_sigs.items()}, presorted=True)
             self.store.put(obj)
             oids.append(obj.oid)
-        return oids, (key_lo, key_hi)
+        return oids, (s_klo, s_khi)
 
     def _seal_tombstones(self, targets: np.ndarray, ts: int) -> List[int]:
         if targets.shape[0] == 0:
@@ -196,11 +262,17 @@ class Engine:
         khi = np.empty_like(targets)
         toids = rowid_oid(targets)
         offs = rowid_off(targets)
-        for oid in np.unique(toids):
-            m = toids == oid
-            obj: DataObject = self.store.get(int(oid))
-            klo[m] = obj.key_lo[offs[m]]
-            khi[m] = obj.key_hi[offs[m]]
+        # sorted targets group their oids contiguously (rowid = oid<<32 |
+        # off), so one boundary pass gathers every object's key lanes —
+        # the old per-unique-oid boolean masks were O(n·#objects)
+        bnd = np.flatnonzero(toids[1:] != toids[:-1]) + 1
+        starts = np.concatenate([[0], bnd])
+        ends = np.append(bnd, targets.shape[0])
+        for s, e in zip(starts, ends):
+            obj: DataObject = self.store.get(int(toids[s]))
+            klo[s:e] = obj.key_lo[offs[s:e]]
+            khi[s:e] = obj.key_hi[offs[s:e]]
+        uniq_oids = tuple(int(toids[s]) for s in starts)
         oids = []
         for s in range(0, targets.shape[0], OBJECT_CAPACITY):
             sl = slice(s, s + OBJECT_CAPACITY)
@@ -208,7 +280,7 @@ class Engine:
                 oid=self.store.new_oid(), nrows=int(targets[sl].shape[0]),
                 target=targets[sl], key_lo=klo[sl], key_hi=khi[sl],
                 commit_ts=np.full(targets[sl].shape, np.uint64(ts)),
-                target_oids=tuple(int(x) for x in np.unique(toids)))
+                target_oids=uniq_oids)
             self.store.put(t)
             oids.append(t.oid)
         return oids
@@ -243,13 +315,16 @@ class Engine:
                         if int(oid) not in live_oids:
                             raise TxnConflict(f"{name}: target object gone")
                 ins = tx._ins.get(name, [])
-                data_oids, key_sigs = self._seal_inserts(t.schema, ins, ts)
+                data_oids, key_sigs = self._seal_inserts(
+                    t.schema, ins, tx._sigs.get(name, [None] * len(ins)), ts)
                 sealed.extend(data_oids)
-                # PK enforcement
+                # PK enforcement — the seal path returns the key lanes in
+                # sorted order, so in-batch dedup is one adjacent-equal
+                # scan (np.unique(pairs, axis=0) paid a hidden second sort)
                 if t.schema.has_pk and key_sigs is not None:
                     klo, khi = key_sigs
-                    pairs = np.stack([klo, khi], 1)
-                    if np.unique(pairs, axis=0).shape[0] != pairs.shape[0]:
+                    if klo.shape[0] > 1 and ((klo[1:] == klo[:-1])
+                                             & (khi[1:] == khi[:-1])).any():
                         raise PKViolation(
                             f"{name}: duplicate key in insert batch")
                     existing = t.locate_keys(klo, khi)
@@ -320,7 +395,8 @@ class Engine:
 
     # ------------------------------------------------------ clone/restore
     def clone_table(self, new_name: str, src: SnapshotRef, *,
-                    with_indices: bool = False, _log=True) -> Table:
+                    with_indices: bool = False, materialize: bool = False,
+                    _log=True) -> Table:
         """CREATE TABLE new FROM SNAPSHOT src — metadata-only copy.
 
         ``with_indices`` (beyond paper §5.5.4): also clone the auxiliary
@@ -328,10 +404,33 @@ class Engine:
         aux version (PITR on the aux table's history at the snapshot's
         creation horizon), never at the aux table's current head. An index
         created after the snapshot (or whose history was GC-trimmed past
-        the horizon) is instead rebuilt from the cloned data."""
+        the horizon) is instead rebuilt from the cloned data.
+
+        ``materialize=True``: physically rewrite the snapshot's visible
+        rows into fresh objects (an independent copy, decoupled from the
+        source's GC/compaction lifetime). Rides the zero-rehash apply
+        path: the scan carries every signature lane plus per-object sorted
+        runs, so the rewrite never hashes a row and never re-sorts a
+        single-object snapshot."""
         snap = self.resolve_snapshot(src)
         if new_name in self.tables:
             raise ValueError(f"table {new_name} exists")
+        if materialize:
+            if with_indices:
+                raise ValueError("clone_table: materialize=True does not "
+                                 "support with_indices")
+            t = self.create_table(new_name, snap.schema, _log=False)
+            reader = Table(snap.table, snap.schema, self.store, snap.ts)
+            batch, _, sigs = reader.scan_carry(snap.directory)
+            if sigs.row_lo.shape[0]:
+                tx = self.begin()
+                tx.insert(new_name, batch, sigs=sigs)
+                tx.commit(_log=False)
+            self.set_common_base(new_name, snap.table, snap)
+            if _log:
+                self.wal.append("clone", new=new_name, snap=snap,
+                                with_indices=False, materialize=True)
+            return t
         t = Table(new_name, snap.schema, self.store, snap.ts)
         t.directory = snap.directory
         t.history = [(snap.ts, snap.directory)]
@@ -386,20 +485,42 @@ class Engine:
         the new schema (row signatures depend on the full row, so a rewrite
         keeps value identity consistent). Old snapshots keep the old schema;
         diff/merge across schema versions is refused (compatible_with),
-        matching the paper's advice to alter before cloning."""
+        matching the paper's advice to alter before cloning.
+
+        Partial signature carry: row signatures genuinely change (they
+        cover the new column) and are recomputed, but PK key signatures,
+        old-column LOB content signatures, and the per-object key-sorted
+        runs are all unaffected by the added column and ride through —
+        the rewrite never re-runs blake2b and (for PK tables) never
+        re-sorts what the objects already keep sorted."""
         from .schema import Schema
         t = self.table(table)
-        batch, _ = t.scan()
+        batch, _, carried = t.scan_carry()
         n = batch[t.schema.names[0]].shape[0] if t.schema.names else 0
         new_schema = Schema(t.schema.columns + (column,),
                             primary_key=t.schema.primary_key)
         if column.ctype.value == "lob":
+            # the sig-carrying insert below skips normalize_batch, so the
+            # fill value must be normalized here (str -> bytes, like
+            # Schema.normalize_batch would have)
+            if isinstance(default, str):
+                default = default.encode()
+            if not isinstance(default, (bytes, bytearray)):
+                raise TypeError(f"LOB column {column.name}: default must "
+                                "be bytes/str")
             fill = np.empty((n,), object)
-            fill[:] = default
+            fill[:] = bytes(default)
         else:
             fill = np.full((n,), default,
                            dtype=new_schema.np_dtype(column.name))
         batch[column.name] = fill
+        if t.schema.has_pk:
+            sigs = SigBatch(None, None, carried.key_lo, carried.key_hi,
+                            carried.lob_sigs, carried.runs)
+        else:
+            # NoPK keys ARE row signatures — both change with the new
+            # column, and so does their sort order
+            sigs = SigBatch(None, None, None, None, carried.lob_sigs, None)
         t.schema = new_schema
         t.directory = t.directory.replace(
             drop_data=t.directory.data_oids,
@@ -407,7 +528,7 @@ class Engine:
         t._history_append(t.directory)
         if n:
             tx = self.begin()
-            tx.insert(table, batch)
+            tx.insert(table, batch, sigs=sigs)
             # the rewrite is a sub-operation of the ONE alter_add_column
             # record: logging it as a plain commit too would replay it
             # twice, desynchronizing oid/ts allocation for every later
@@ -509,6 +630,7 @@ class Engine:
                 snap = e.snapshots.get(snap.name, snap) if snap.name else snap
                 e.clone_table(p["new"], snap,
                               with_indices=p.get("with_indices", False),
+                              materialize=p.get("materialize", False),
                               _log=False)
             elif k == "restore":
                 snap = p["snap"]
@@ -619,3 +741,20 @@ class GCStats:
     objects_freed: int = 0
     versions_pruned: int = 0
     pinned_horizons: int = 0
+
+
+@dataclass
+class CommitStats:
+    """Where seal-time work went, cumulative per engine.
+
+    The zero-rehash invariant (ISSUE 4): applying rows gathered from sealed
+    objects — merge, revert, publish, materialized clones — must never pay
+    ``rows_rehashed`` or ``lob_rows_hashed``; their signatures ride along in
+    ``SigBatch`` sidecars and the sort is skipped (one declared run) or a
+    k-way run merge. Tests pin the invariant on these counters."""
+    rows_rehashed: int = 0       # rows that ran the rowhash kernel at seal
+    rows_carried: int = 0        # rows sealed on carried write-once sigs
+    lob_rows_hashed: int = 0     # per-LOB-column rows that paid blake2b
+    apply_sorts: int = 0         # seals that paid the global key lexsort
+    apply_sort_merged: int = 0   # seals that k-way merged declared runs
+    apply_sort_skipped: int = 0  # seals of declared-key-sorted batches

@@ -39,6 +39,21 @@ from .diff import gather_payload
 from .directory import Snapshot
 from .engine import Engine
 from .schema import Schema
+from .sigs import SigBatch
+
+
+def _piece_runs(pieces) -> np.ndarray:
+    """Run-start offsets for a concatenation of key-sorted pieces.
+
+    Each (possibly empty) piece is individually key-ascending — the merge
+    paths emit them as ascending subsets of key-sorted collapsed change
+    sets — so the concat is a valid multi-run ``SigBatch.runs`` claim."""
+    offs, off = [], 0
+    for p in pieces:
+        if p.shape[0]:
+            offs.append(off)
+            off += p.shape[0]
+    return np.asarray(offs if offs else [0], np.int64)
 
 
 class ConflictMode(enum.Enum):
@@ -268,7 +283,9 @@ def _merge_pk(engine: Engine, target: str, source: Snapshot,
         merged_batch = merged
 
     cat = lambda xs: (np.concatenate(xs) if xs else np.zeros((0,), np.uint64))
-    return cat(del_lo), cat(del_hi), cat(ins), merged_batch
+    # each ins piece is key-ascending (it walks the key-sorted union), so
+    # the concat carries an exact runs claim into the zero-rehash seal
+    return cat(del_lo), cat(del_hi), cat(ins), _piece_runs(ins), merged_batch
 
 
 def _merge_pk_nobase(engine: Engine, target: str, source: Snapshot,
@@ -297,7 +314,8 @@ def _merge_pk_nobase(engine: Engine, target: str, source: Snapshot,
     if report.true_conflicts and mode is ConflictMode.ACCEPT:
         del_rowids.append(ch.minus_rowid[conflicts])
         ins_rowids.append(ch.plus_rowid[conflicts])
-    return np.concatenate(del_rowids), np.concatenate(ins_rowids)
+    return (np.concatenate(del_rowids), np.concatenate(ins_rowids),
+            _piece_runs(ins_rowids))
 
 
 # --------------------------------------------------------------------------
@@ -464,21 +482,26 @@ def plan_merge(engine: Engine, target: str, source: Snapshot,
                          "common base revision")
     schema = t_tab.schema
     merged_batch = None
+    # every merge path emits its insert rowids as (a few) key-ascending
+    # pieces of the sort-free Δ pipeline — the runs claim lets the seal
+    # skip or k-way-merge instead of re-lexsorting, and the gathered
+    # SigBatch means the apply path never rehashes a row
     if schema.has_pk:
         if base is not None:
-            del_lo, del_hi, ins_rowids, merged_batch = _merge_pk(
+            del_lo, del_hi, ins_rowids, ins_runs, merged_batch = _merge_pk(
                 engine, target, source, base.directory, mode, report)
             if del_lo.shape[0]:
                 rid = t_tab.locate_keys(del_lo, del_hi)
                 tx.delete_rowids(target, rid[rid != 0])
                 report.deleted = int((rid != 0).sum())
         else:
-            del_rowids, ins_rowids = _merge_pk_nobase(
+            del_rowids, ins_rowids, ins_runs = _merge_pk_nobase(
                 engine, target, source, mode, report)
             if del_rowids.shape[0]:
                 tx.delete_rowids(target, del_rowids)
                 report.deleted = int(del_rowids.shape[0])
     else:
+        ins_runs = SigBatch.sorted_run()  # NoPK paths emit value-sorted
         if base is not None:
             sig_lo, sig_hi, need, ins_rowids = _merge_nopk(
                 engine, target, source, base.directory, mode, report)
@@ -496,10 +519,13 @@ def plan_merge(engine: Engine, target: str, source: Snapshot,
                 report.deleted = int(del_rowids.shape[0])
 
     if ins_rowids.shape[0]:
-        payload = gather_payload(engine.store, schema, ins_rowids)
-        tx.insert(target, payload)
+        payload, sigs = gather_payload(engine.store, schema, ins_rowids,
+                                       with_sigs=True, runs=ins_runs)
+        tx.insert(target, payload, sigs=sigs)
         report.inserted = int(ins_rowids.shape[0])
     if merged_batch is not None and len(next(iter(merged_batch.values()))):
+        # CELL-merged rows are freshly constructed values — genuinely new
+        # data, so they take the hashing path
         tx.insert(target, merged_batch)
         report.inserted += int(len(next(iter(merged_batch.values()))))
 

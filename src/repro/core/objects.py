@@ -22,6 +22,13 @@ OBJECT_CAPACITY = 1 << 18  # max rows per sealed object (256Ki)
 _OFF_MASK = np.uint64(0xFFFFFFFF)
 
 
+def _ts_minmax(commit_ts: np.ndarray) -> Tuple[int, int]:
+    """(min, max) commit_ts of an object's rows ((0, 0) when empty)."""
+    if commit_ts.shape[0] == 0:
+        return (0, 0)
+    return (int(commit_ts.min()), int(commit_ts.max()))
+
+
 def pack_rowid(oid: int, offsets: np.ndarray) -> np.ndarray:
     return (np.uint64(oid) << np.uint64(32)) | offsets.astype(np.uint64)
 
@@ -66,11 +73,7 @@ class DataObject:
         Visibility uses this to skip the per-row horizon compare when the
         whole object is within (or beyond) a directory's ts."""
         if self._ts_zone is None:
-            if self.nrows == 0:
-                self._ts_zone = (0, 0)
-            else:
-                self._ts_zone = (int(self.commit_ts.min()),
-                                 int(self.commit_ts.max()))
+            self._ts_zone = _ts_minmax(self.commit_ts)
         return self._ts_zone
 
     def rowids(self) -> np.ndarray:
@@ -94,33 +97,53 @@ class TombstoneObject:
     # oids of the data objects this tombstone batch targets (for the
     # compaction invariant: tombstones die with their target objects)
     target_oids: Tuple[int, ...] = ()
+    _ts_zone: Optional[Tuple[int, int]] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def nbytes(self) -> int:
         return int(self.target.nbytes + self.key_lo.nbytes
                    + self.key_hi.nbytes + self.commit_ts.nbytes)
 
+    @property
+    def ts_zone(self) -> Tuple[int, int]:
+        """(min, max) commit_ts — computed once; objects are immutable.
+        A horizon at or past the max sees every target of this object."""
+        if self._ts_zone is None:
+            self._ts_zone = _ts_minmax(self.commit_ts)
+        return self._ts_zone
+
 
 def seal_data_object(oid: int, schema: Schema, batch: Dict[str, np.ndarray],
                      commit_ts: np.ndarray, row_lo, row_hi, key_lo, key_hi,
-                     lob_sigs: Dict[str, np.ndarray]) -> DataObject:
-    """Sort rows by key signature and freeze them as an immutable object."""
-    order = np.lexsort((key_hi, key_lo))
-    batch = take_batch(batch, order)
-    row_lo_s, row_hi_s = row_lo[order], row_hi[order]
-    # NoPK tables: the key signature IS the row signature — keep the array
-    # identity through the gather so Δ emission can tag streams key==row
-    # (and halve the signature memory per object)
-    key_lo_s = row_lo_s if key_lo is row_lo else key_lo[order]
-    key_hi_s = row_hi_s if key_hi is row_hi else key_hi[order]
+                     lob_sigs: Dict[str, np.ndarray], *,
+                     presorted: bool = False) -> DataObject:
+    """Freeze a batch as an immutable key-sorted object.
+
+    ``presorted=True``: the caller guarantees the rows already arrive in
+    (key_lo, key_hi) order — the zero-rehash apply path and compaction both
+    key-sort globally before slicing capacity-sized objects, so re-sorting
+    each slice here would be a second (identity) lexsort per seal."""
+    if not presorted:
+        order = np.lexsort((key_hi, key_lo))
+        batch = take_batch(batch, order)
+        commit_ts = commit_ts[order]
+        row_lo_s, row_hi_s = row_lo[order], row_hi[order]
+        # NoPK tables: the key signature IS the row signature — keep the
+        # array identity through the gather so Δ emission can tag streams
+        # key==row (and halve the signature memory per object)
+        key_lo = row_lo_s if key_lo is row_lo else key_lo[order]
+        key_hi = row_hi_s if key_hi is row_hi else key_hi[order]
+        row_lo, row_hi = row_lo_s, row_hi_s
+        lob_sigs = {k: v[order] for k, v in lob_sigs.items()}
     return DataObject(
         oid=oid,
-        nrows=int(order.shape[0]),
+        nrows=int(row_lo.shape[0]),
         cols=batch,
-        commit_ts=commit_ts[order],
-        row_lo=row_lo_s, row_hi=row_hi_s,
-        key_lo=key_lo_s, key_hi=key_hi_s,
-        lob_sigs={k: v[order] for k, v in lob_sigs.items()},
+        commit_ts=commit_ts,
+        row_lo=row_lo, row_hi=row_hi,
+        key_lo=key_lo, key_hi=key_hi,
+        lob_sigs=lob_sigs,
         nbytes=batch_nbytes(schema, batch),
     )
 

@@ -18,7 +18,8 @@ set: exactly the paper's memory-saving trick.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,6 +28,104 @@ from .schema import CType, Schema
 
 _F64_NAN = np.uint64(0x7FF8000000000000)
 _F32_NAN = np.uint32(0x7FC00000)
+
+# When True, every carried ``runs`` claim is verified (per-run key
+# monotonicity) before sealing — a producer falsely declaring sortedness
+# is caught at the commit boundary instead of corrupting object order.
+# Off by default: the check is O(n) per seal and the invariant is held by
+# construction (Δ streams are emitted key-sorted). Tests flip it on.
+DEBUG_VALIDATE_CARRY = False
+
+_RUN1 = np.zeros((1,), np.int64)
+_RUN1.setflags(write=False)
+
+
+@dataclass
+class SigBatch:
+    """Signature sidecar carried alongside a row batch into the seal path.
+
+    Signatures are write-once per sealed object, so a producer whose rows
+    are *gathered from existing objects* (merge, revert, publish, clone
+    materialization, compaction) can hand them to ``Engine._seal_inserts``
+    verbatim — the apply path then never rehashes a row it did not create.
+
+    ``None`` lanes mean "recompute": ``row_lo/hi is None`` ⇒ row value
+    signatures must be rebuilt from the canonical lanes (e.g. after a
+    schema change added a column), while carried ``key_lo/hi`` and
+    ``lob_sigs`` still skip the per-key hashing and the per-LOB blake2b.
+    ``lob_sigs`` may be partial — missing LOB columns are hashed.
+
+    ``runs`` (int64 run-start offsets, ``runs[0] == 0``) is the PR 2
+    sortedness invariant transplanted to the write side: every run
+    ``[runs[i], runs[i+1])`` is sorted by (key_lo, key_hi). A single run
+    means the batch is globally key-sorted and the seal-time sort is
+    skipped outright; k runs are k-way merged (stable, ≡ np.lexsort).
+    ``None`` means no ordering is known. Producers must NEVER claim
+    sortedness that isn't real — mirror of the Δ-emission ``runs`` rule.
+    """
+    row_lo: Optional[np.ndarray]
+    row_hi: Optional[np.ndarray]
+    key_lo: Optional[np.ndarray]
+    key_hi: Optional[np.ndarray]
+    lob_sigs: Dict[str, np.ndarray] = field(default_factory=dict)
+    runs: Optional[np.ndarray] = None
+
+    @property
+    def complete(self) -> bool:
+        return self.row_lo is not None and self.key_lo is not None
+
+    @property
+    def sorted_by_key(self) -> bool:
+        return self.runs is not None and self.runs.shape[0] <= 1
+
+    @staticmethod
+    def sorted_run() -> np.ndarray:
+        """The single-run ``runs`` value: "this whole batch is key-sorted"."""
+        return _RUN1
+
+
+def validate_runs(key_lo: np.ndarray, key_hi: np.ndarray,
+                  runs: np.ndarray) -> None:
+    """Raise if any declared run is not (key_lo, key_hi)-monotone."""
+    n = key_lo.shape[0]
+    if n <= 1:
+        return
+    lo_desc = key_lo[1:] < key_lo[:-1]
+    bad = lo_desc | ((key_lo[1:] == key_lo[:-1]) & (key_hi[1:] < key_hi[:-1]))
+    if bad.any():
+        allowed = np.zeros((n - 1,), bool)
+        starts = runs[(runs > 0) & (runs < n)]
+        allowed[starts - 1] = True          # run boundaries may descend
+        if (bad & ~allowed).any():
+            raise ValueError(
+                "SigBatch claims key-sortedness that isn't real: "
+                f"{int((bad & ~allowed).sum())} descending pair(s) inside "
+                "declared runs")
+
+
+def concat_sigs(parts: Sequence[SigBatch]) -> SigBatch:
+    """Concatenate complete SigBatches, preserving NoPK key==row aliasing
+    and the per-part run structure (``None`` anywhere poisons ``runs``)."""
+    if len(parts) == 1:
+        return parts[0]
+    alias = all(p.key_lo is p.row_lo and p.key_hi is p.row_hi for p in parts)
+    row_lo = np.concatenate([p.row_lo for p in parts])
+    row_hi = np.concatenate([p.row_hi for p in parts])
+    if alias:
+        key_lo, key_hi = row_lo, row_hi
+    else:
+        key_lo = np.concatenate([p.key_lo for p in parts])
+        key_hi = np.concatenate([p.key_hi for p in parts])
+    lob = {c: np.concatenate([p.lob_sigs[c] for p in parts])
+           for c in (parts[0].lob_sigs or {})}
+    runs = None
+    if all(p.runs is not None for p in parts):
+        offs, off = [], 0
+        for p in parts:
+            offs.append((p.runs if p.runs.shape[0] else _RUN1) + off)
+            off += p.row_lo.shape[0]
+        runs = np.concatenate(offs)
+    return SigBatch(row_lo, row_hi, key_lo, key_hi, lob, runs)
 
 
 def lob_sig64(arr: np.ndarray) -> np.ndarray:
@@ -99,6 +198,70 @@ def compute_sigs(schema: Schema, batch: Dict[str, np.ndarray]
         # NoPK: identity is the full value (paper §3)
         key_lo, key_hi = row_lo, row_hi
     return row_lo, row_hi, key_lo, key_hi, lob_sigs
+
+
+def resolve_sigs(schema: Schema, batch: Dict[str, np.ndarray],
+                 sigs: Optional[SigBatch], stats=None) -> SigBatch:
+    """Return a complete SigBatch for ``batch``, hashing only what was not
+    carried. ``stats`` (an ``engine.CommitStats``) counts the split:
+    ``rows_carried`` rode through on write-once signatures, ``rows_rehashed``
+    paid the rowhash kernel, ``lob_rows_hashed`` paid per-row blake2b."""
+    n = batch[schema.names[0]].shape[0] if schema.names else 0
+    if sigs is not None:
+        # a mismatched sidecar would seal a silently corrupt object
+        # (nrows from the lanes, cols from the batch) — refuse up front
+        for name, arr in (("row", sigs.row_lo), ("key", sigs.key_lo),
+                          *((f"lob:{c}", a)
+                            for c, a in sigs.lob_sigs.items())):
+            if arr is not None and arr.shape[0] != n:
+                raise ValueError(
+                    f"SigBatch {name} lane has {arr.shape[0]} rows, "
+                    f"batch has {n}")
+        r = sigs.runs
+        if r is not None and r.shape[0] and n and (
+                r[0] != 0 or (r[1:] <= r[:-1]).any() or r[-1] >= n):
+            raise ValueError(
+                "SigBatch runs offsets malformed: need runs[0]==0, "
+                f"strictly ascending, all < {n} rows")
+    if (sigs is not None and sigs.complete
+            and all(c.name in sigs.lob_sigs for c in schema.columns
+                    if c.ctype is CType.LOB)):
+        if stats is not None:
+            stats.rows_carried += n
+        if not schema.has_pk and sigs.key_lo is not sigs.row_lo:
+            # NoPK: key IS the row signature — restore the alias so seal
+            # and Δ emission keep recognizing it
+            sigs = SigBatch(sigs.row_lo, sigs.row_hi, sigs.row_lo,
+                            sigs.row_hi, sigs.lob_sigs, sigs.runs)
+        return sigs
+    carried_lob = dict(sigs.lob_sigs) if sigs is not None else {}
+    lob_sigs = {}
+    for c in schema.columns:
+        if c.ctype is not CType.LOB:
+            continue
+        got = carried_lob.get(c.name)
+        if got is None:
+            got = lob_sig64(batch[c.name])
+            if stats is not None:
+                stats.lob_rows_hashed += n
+        lob_sigs[c.name] = got
+    row_lanes = column_lanes(schema, batch, schema.names, lob_sigs)
+    row_lo, row_hi = ops.signatures_from_lanes(row_lanes)
+    if stats is not None:
+        stats.rows_rehashed += n
+    if not schema.has_pk:
+        key_lo, key_hi = row_lo, row_hi
+        # the carried key order (if any) was the OLD row signature order —
+        # meaningless for the recomputed signatures
+        runs = None
+    elif sigs is not None and sigs.key_lo is not None:
+        key_lo, key_hi = sigs.key_lo, sigs.key_hi
+        runs = sigs.runs
+    else:
+        key_lanes = column_lanes(schema, batch, schema.primary_key, lob_sigs)
+        key_lo, key_hi = ops.signatures_from_lanes(key_lanes)
+        runs = sigs.runs if sigs is not None else None
+    return SigBatch(row_lo, row_hi, key_lo, key_hi, lob_sigs, runs)
 
 
 def key_sigs_for_lookup(schema: Schema, key_batch: Dict[str, np.ndarray]

@@ -9,7 +9,8 @@ import numpy as np
 from ..kernels import ops
 from .directory import Directory
 from .objects import DataObject, pack_rowid
-from .schema import Schema, concat_batches, take_batch
+from .schema import CType, Schema, concat_batches, take_batch
+from .sigs import SigBatch
 from .visibility import visibility_index
 
 
@@ -85,36 +86,81 @@ class Table:
     def scan(self, directory: Optional[Directory] = None,
              with_sigs: bool = False):
         """Materialize all visible rows: (batch, rowids[, row_lo, row_hi])."""
+        if with_sigs:
+            batch, rid, sigs = self._scan_walk(directory, carry=True)
+            return batch, rid, sigs.row_lo, sigs.row_hi
+        batch, rid, _ = self._scan_walk(directory, carry=False)
+        return batch, rid
+
+    def scan_carry(self, directory: Optional[Directory] = None):
+        """Materialize all visible rows WITH their signature sidecar.
+
+        Returns (batch, rowids, SigBatch): row/key signature lanes and LOB
+        content signatures gathered straight from the sealed objects (zero
+        hashing), plus ``runs`` offsets — every object's visible subset is
+        an ascending slice of a key-sorted object, i.e. one presorted run.
+        Feeding the result into ``Txn.insert(..., sigs=...)`` re-seals the
+        rows without rehashing (clone materialization, ALTER rewrites)."""
+        return self._scan_walk(directory, carry=True)
+
+    def _scan_walk(self, directory: Optional[Directory], carry: bool):
+        """The one visibility walk behind every scan variant. ``carry``
+        additionally collects the signature sidecar (returned third slot
+        is a SigBatch; None otherwise)."""
         d = directory or self.directory
         vi = visibility_index(self._store, d)
-        batches, rowids, rlo, rhi = [], [], [], []
+        alias = not self.schema.has_pk
+        lob_names = ([c.name for c in self.schema.columns
+                      if c.ctype is CType.LOB] if carry else [])
+        batches, rowids, rlo, rhi, klo, khi = [], [], [], [], [], []
+        lob = {c: [] for c in lob_names}
+        runs, off = [], 0
         for oid in d.data_oids:
             obj: DataObject = self._store.get(oid)
-            if obj.nrows and vi.fully_visible(obj):
+            if obj.nrows == 0:
+                continue
+            if vi.fully_visible(obj):
                 # zone-pruned objects contribute their immutable arrays
                 # directly — no mask, no gather (concat copies once below)
-                batches.append(obj.cols)
-                rowids.append(obj.rowids())
-                if with_sigs:
-                    rlo.append(obj.row_lo)
-                    rhi.append(obj.row_hi)
+                idx = None
+            else:
+                m = vi.visible_mask(obj)
+                if not m.any():
+                    continue
+                idx = np.flatnonzero(m)
+            take = (lambda a: a) if idx is None else (lambda a: a[idx])
+            batches.append(obj.cols if idx is None
+                           else take_batch(obj.cols, idx))
+            rowids.append(obj.rowids() if idx is None
+                          else pack_rowid(oid, idx.astype(np.uint64)))
+            if not carry:
                 continue
-            m = vi.visible_mask(obj)
-            if not m.any():
-                continue
-            idx = np.flatnonzero(m)
-            batches.append(take_batch(obj.cols, idx))
-            rowids.append(pack_rowid(oid, idx.astype(np.uint64)))
-            if with_sigs:
-                rlo.append(obj.row_lo[idx])
-                rhi.append(obj.row_hi[idx])
+            rlo.append(take(obj.row_lo))
+            rhi.append(take(obj.row_hi))
+            if not alias:
+                klo.append(take(obj.key_lo))
+                khi.append(take(obj.key_hi))
+            for c in lob_names:
+                lob[c].append(take(obj.lob_sigs[c]))
+            runs.append(off)
+            off += rlo[-1].shape[0]
         batch = concat_batches(self.schema, batches)
-        rid = (np.concatenate(rowids) if rowids else np.zeros((0,), np.uint64))
-        if with_sigs:
-            lo = np.concatenate(rlo) if rlo else np.zeros((0,), np.uint64)
-            hi = np.concatenate(rhi) if rhi else np.zeros((0,), np.uint64)
-            return batch, rid, lo, hi
-        return batch, rid
+        z64 = np.zeros((0,), np.uint64)
+        rid = np.concatenate(rowids) if rowids else z64
+        if not carry:
+            return batch, rid, None
+        row_lo = np.concatenate(rlo) if rlo else z64
+        row_hi = np.concatenate(rhi) if rhi else z64
+        if alias:
+            key_lo, key_hi = row_lo, row_hi
+        else:
+            key_lo = np.concatenate(klo) if klo else z64
+            key_hi = np.concatenate(khi) if khi else z64
+        sigs = SigBatch(
+            row_lo, row_hi, key_lo, key_hi,
+            {c: (np.concatenate(v) if v else z64) for c, v in lob.items()},
+            runs=np.asarray(runs, np.int64))
+        return batch, rid, sigs
 
     def count(self, directory: Optional[Directory] = None) -> int:
         d = directory or self.directory

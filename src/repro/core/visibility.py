@@ -39,15 +39,18 @@ class _Entry:
     """One cached directory version: the sorted target array, its lazy
     per-object partition, and whether the ts-horizon filter dropped rows
     while building (if it did not, the array can be extended to any later
-    horizon without rebuilding)."""
+    horizon without rebuilding). ``ts_arr`` (lazy) aligns each target's
+    tombstone commit_ts with the sorted array so historical PITR horizons
+    derive by masking on commit_ts instead of rebuilding from objects."""
 
-    __slots__ = ("targets", "slices", "complete")
+    __slots__ = ("targets", "slices", "complete", "ts_arr")
 
     def __init__(self, targets: np.ndarray, complete: bool):
         targets.setflags(write=False)
         self.targets = targets
         self.slices: Optional[Dict[int, Tuple[int, int]]] = None
         self.complete = complete
+        self.ts_arr: Optional[np.ndarray] = None
 
     def object_slices(self) -> Dict[int, Tuple[int, int]]:
         if self.slices is None:
@@ -140,24 +143,106 @@ class VisibilityCache(KeyedLRU):
         self.store = store
         self.builds = 0    # full target-array constructions
         self.extends = 0   # incremental parent -> child extensions
+        self.derives = 0   # PITR horizons derived by commit_ts truncation
         self.hits = 0
 
     @staticmethod
     def _key(d: Directory) -> Tuple:
         return (d.tomb_oids, d.ts)
 
-    def entry(self, d: Directory) -> _Entry:
-        key = self._key(d)
+    def _hmax(self, d: Directory) -> int:
+        """Largest tombstone commit_ts in ``d`` (0 with no tombstones).
+        Any horizon >= hmax sees every target — the array no longer
+        depends on ts, so all such horizons share ONE canonical entry."""
+        return max((self.store.get(o).ts_zone[1] for o in d.tomb_oids),
+                   default=0)
+
+    def _lookup_entry(self, key: Tuple) -> Optional[_Entry]:
         val = self.lookup(key)
         if isinstance(val, _Pending):
             val = self._materialize(key, val)
+        return val
+
+    def entry(self, d: Directory) -> _Entry:
+        key = self._key(d)
+        val = self._lookup_entry(key)
         if val is not None:
             self.hits += 1
             return val
-        val = _build_entry(self.store, d)
-        self.builds += 1
-        self.insert(key, val)
+        hmax = self._hmax(d)
+        # full-coverage horizon (every tombstone commit <= d.ts — ALL
+        # directories produced by commits and directory_at are): the array
+        # is independent of ts, so every such horizon shares one canonical
+        # entry instead of building its own (ROADMAP open item)
+        ckey = (d.tomb_oids, hmax) if d.ts >= hmax else key
+        hit = None
+        if ckey != key:
+            hit = self._lookup_entry(ckey)
+        if hit is not None:
+            self.hits += 1
+            val = hit
+        else:
+            val = self._derive(d, hmax, ckey)
+            if val is None:
+                val = _build_entry(self.store, d)
+                self.builds += 1
+                self.insert(ckey, val)
+        if ckey != key:
+            # alias the exact key to the shared entry: repeat lookups of
+            # this horizon must not re-pay the O(#tomb_oids) _hmax scan
+            self.insert(key, val)
         return val
+
+    def _derive(self, d: Directory, hmax: int, ckey: Tuple
+                ) -> Optional[_Entry]:
+        """Serve a historical horizon by truncating a cached HEAD array on
+        commit_ts instead of rebuilding from tombstone objects.
+
+        A cached complete entry whose tombstone set is a superset of
+        ``d``'s — with every extra object committed entirely after
+        ``d.ts`` (exactly what later commits of a linear history add) —
+        contains ``d``'s array as the commit_ts <= d.ts subset; masking a
+        sorted array preserves sortedness, so the derived array is
+        byte-identical to a fresh build. O(cache) key scan + one O(n)
+        mask vs. an O(n log n) rebuild."""
+        if not d.tomb_oids:
+            return None     # empty target array — building is O(1)
+        dset = set(d.tomb_oids)
+        dts = np.uint64(d.ts)
+        for key2 in reversed(list(self._cache.keys())):  # newest first
+            toids = key2[0]
+            if len(toids) < len(dset) or key2 == ckey:
+                continue
+            extras = set(toids) - dset
+            if len(extras) != len(toids) - len(dset):
+                continue                    # not a superset
+            if any(self.store.get(o).ts_zone[0] <= d.ts for o in extras):
+                continue                    # an extra straddles the horizon
+            head = self._lookup_entry(key2)
+            if head is None or not head.complete:
+                continue
+            self._ensure_ts(head, toids)
+            val = _Entry(head.targets[head.ts_arr <= dts],
+                         complete=d.ts >= hmax)
+            self.derives += 1
+            self.insert(ckey, val)
+            return val
+        return None
+
+    def _ensure_ts(self, entry: _Entry, tomb_oids) -> None:
+        """Align each target's tombstone commit_ts with the sorted array.
+        Valid only for complete entries (every target present exactly once
+        — a rowid is killed by at most one tombstone); paid once per head,
+        then every historical horizon is an O(n) mask."""
+        if entry.ts_arr is not None:
+            return
+        ts = np.empty(entry.targets.shape, np.uint64)
+        for oid in tomb_oids:
+            t = self.store.get(oid)
+            pos = np.searchsorted(entry.targets, t.target)
+            ts[pos] = t.commit_ts
+        ts.setflags(write=False)
+        entry.ts_arr = ts
 
     def _materialize(self, key: Tuple, p: _Pending) -> _Entry:
         """Pay the deferred merge: one sort of the accumulated batches and
@@ -193,10 +278,13 @@ class VisibilityCache(KeyedLRU):
         the newly added (already sorted at seal time) tombstone batches.
         No-op unless the parent is cached, the child only *adds*
         tombstones, and the parent array was horizon-complete."""
-        ckey = self._key(child)
-        if self._cache.get(ckey) is not None:
-            return
         pval = self._cache.get(self._key(parent))
+        ph = None
+        if pval is None:
+            # full-coverage entries live under their canonical key
+            ph = self._hmax(parent)
+            if parent.ts >= ph:
+                pval = self._cache.get((parent.tomb_oids, ph))
         if pval is None or not pval.complete:
             return
         p_set = set(parent.tomb_oids)
@@ -205,14 +293,22 @@ class VisibilityCache(KeyedLRU):
             return
         complete = True
         ts = np.uint64(child.ts)
+        hmax_child = ph if ph is not None else self._hmax(parent)
         batches = []
         for oid in child.tomb_oids:
             if oid in p_set:
                 continue
             t = self.store.get(oid)
+            hmax_child = max(hmax_child, t.ts_zone[1])
             m = t.commit_ts <= ts
             batches.append(t.target if m.all() else t.target[m])
             complete = complete and bool(m.all())
+        # complete children file under the canonical key so later PITR
+        # horizons of this version share the entry
+        ckey = ((child.tomb_oids, hmax_child) if complete
+                else self._key(child))
+        if self._cache.get(ckey) is not None:
+            return
         if isinstance(pval, _Pending):   # chain of unread commits: flatten
             base, batches = pval.base, pval.batches + batches
         else:

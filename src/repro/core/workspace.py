@@ -43,6 +43,7 @@ from .diff import DiffResult, gather_payload, gather_rowsigs, snapshot_diff
 from .directory import Snapshot
 from .merge import (OP_DEL, OP_INS, ConflictMode, MergeConflictError,
                     MergeReport, collapse_pk, plan_merge)
+from .sigs import SigBatch
 from .table import Table
 
 TRUNK = "main"
@@ -468,7 +469,12 @@ def plan_revert(engine, table: str, from_snap: Snapshot, to_snap: Snapshot,
             tx.delete_rowids(table, rid)
         ins_rowids = ch.plus_rowid[ch.op != OP_DEL]
         if ins_rowids.shape[0]:
-            tx.insert(table, gather_payload(store, t.schema, ins_rowids))
+            # ch is key-sorted and the mask preserves order: one run —
+            # the seal reuses the carried signatures and skips its sort
+            payload, sigs = gather_payload(store, t.schema, ins_rowids,
+                                           with_sigs=True,
+                                           runs=SigBatch.sorted_run())
+            tx.insert(table, payload, sigs=sigs)
         return bool(rid.shape[0] or ins_rowids.shape[0])
     # NoPK: per value group, net > 0 restores copies of the from-side
     # value, net < 0 deletes that many visible duplicates
@@ -493,7 +499,12 @@ def plan_revert(engine, table: str, from_snap: Snapshot, to_snap: Snapshot,
     if ins_g.shape[0]:
         rep = s.rowid[np.minimum(first_plus[ins_g], s.n - 1)]
         ins_rowids = np.repeat(rep, nets[ins_g])
-        tx.insert(table, gather_payload(store, t.schema, ins_rowids))
+        # groups ascend in value(=key) order and repeats are adjacent:
+        # the rowid sequence is one key-sorted run
+        payload, sigs = gather_payload(store, t.schema, ins_rowids,
+                                       with_sigs=True,
+                                       runs=SigBatch.sorted_run())
+        tx.insert(table, payload, sigs=sigs)
         staged = True
     return staged
 

@@ -1,0 +1,313 @@
+"""Zero-rehash apply path (ISSUE 4): SigBatch carry, sort skipping,
+CommitStats invariants, materialized clones, tombstone seal grouping, and
+PITR visibility derivation.
+
+The byte-identity of the carried path is pinned by
+tests/test_diff_digest.py (GOLDEN_APPLY); these tests pin the *mechanism*:
+the hot path literally never hashes, a false sortedness claim is caught,
+and the derived PITR arrays match the from-scratch oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.paper_vcs import gen_lineitem
+from repro.core import (CommitStats, ConflictMode, Engine, SigBatch,
+                        snapshot_diff, three_way_merge)
+from repro.core import sigs as sigs_mod
+from repro.core.visibility import VisibilityIndex, _build_entry
+
+
+def _engine(pk: bool, n=4000, seed=0):
+    from benchmarks.vcs_tables import _mk_engine
+    return _mk_engine(n, pk, seed=seed)
+
+
+def _update(engine, table, base, idx, pk, tag=1):
+    newvals = {k: v[idx].copy() for k, v in base.items()}
+    newvals["l_quantity"] = newvals["l_quantity"] + 1.0 + tag
+    newvals["l_comment"] = np.array(
+        [b"carry-%d-%d" % (tag, i) for i in range(idx.shape[0])], object)
+    tx = engine.begin()
+    if pk:
+        tx.update_by_keys(table, newvals)
+    else:
+        t = engine.table(table)
+        _, rowids = t.scan()
+        tx.delete_rowids(table, rowids[idx])
+        tx.insert(table, newvals)
+    tx.commit()
+
+
+def _branch_setup(pk, n=4000, csize=300):
+    engine, base = _engine(pk, n)
+    sn1 = engine.create_snapshot("sn1", "lineitem")
+    engine.clone_table("t", sn1)
+    rng = np.random.default_rng([7, int(pk)])
+    idx = np.sort(rng.choice(n, size=csize, replace=False))
+    _update(engine, "t", base, idx, pk, tag=2)
+    sn3 = engine.create_snapshot("sn3", "t")
+    return engine, sn1, sn3
+
+
+# ---------------------------------------------------------------- counters
+
+@pytest.mark.parametrize("pk", [True, False])
+def test_merge_apply_never_rehashes(pk):
+    engine, sn1, sn3 = _branch_setup(pk)
+    engine.commit_stats = CommitStats()
+    rep = three_way_merge(engine, "lineitem", sn3, base=sn1,
+                          mode=ConflictMode.ACCEPT)
+    assert rep.inserted > 0
+    st = engine.commit_stats
+    assert st.rows_rehashed == 0 and st.lob_rows_hashed == 0
+    assert st.rows_carried == rep.inserted
+    assert st.apply_sorts == 0
+    assert st.apply_sort_skipped + st.apply_sort_merged == 1
+
+
+@pytest.mark.parametrize("pk", [True, False])
+def test_revert_apply_never_rehashes(pk):
+    engine, sn1, sn3 = _branch_setup(pk)
+    pre = engine.create_snapshot("pre", "lineitem")
+    three_way_merge(engine, "lineitem", sn3, base=sn1,
+                    mode=ConflictMode.ACCEPT)
+    post = engine.create_snapshot("post", "lineitem")
+    engine.commit_stats = CommitStats()
+    assert engine.revert("lineitem", pre, post) is not None
+    st = engine.commit_stats
+    assert st.rows_rehashed == 0 and st.lob_rows_hashed == 0
+    assert st.rows_carried > 0 and st.apply_sorts == 0
+    # the revert landed the table back on the pre-merge state
+    assert snapshot_diff(engine.store, pre,
+                         engine.current_snapshot("lineitem")).is_empty()
+
+
+@pytest.mark.parametrize("pk", [True, False])
+def test_publish_and_revert_publish_never_rehash(pk):
+    engine, base = _engine(pk)
+    engine.create_branch("dev", ["lineitem"])
+    rng = np.random.default_rng([11, int(pk)])
+    idx = np.sort(rng.choice(4000, size=250, replace=False))
+    _update(engine, "dev/lineitem", base, idx, pk, tag=5)
+    pr = engine.open_pr("main", "dev")
+    pr.add_check(lambda ctx: ctx.count("lineitem") == 4000, "rows")
+    engine.commit_stats = CommitStats()
+    pr.publish()
+    st = engine.commit_stats
+    assert st.rows_rehashed == 0 and st.lob_rows_hashed == 0
+    assert st.rows_carried > 0
+    pr.revert_publish()
+    assert engine.commit_stats.rows_rehashed == 0
+    # the CI preview merge runs on a scratch engine with its OWN stats —
+    # the live engine's counters must not see preview work either way
+
+
+@pytest.mark.parametrize("pk", [True, False])
+def test_fresh_inserts_still_hash(pk):
+    engine, base = _engine(pk, n=500)
+    st = engine.commit_stats
+    assert st.rows_rehashed == 500 and st.rows_carried == 0
+    assert st.lob_rows_hashed == 500  # one LOB column (l_comment)
+    assert st.apply_sorts == 1
+
+
+# ----------------------------------------------------- sortedness contract
+
+def test_false_sorted_claim_caught_by_debug_check():
+    engine, base = _engine(True, n=200)
+    batch, rid, sigs = engine.table("lineitem").scan_carry()
+    # deliberately mis-claim: reverse the rows but keep "one sorted run"
+    rev = np.arange(rid.shape[0])[::-1]
+    bad = SigBatch(sigs.row_lo[rev].copy(), sigs.row_hi[rev].copy(),
+                   sigs.key_lo[rev].copy(), sigs.key_hi[rev].copy(),
+                   {c: v[rev].copy() for c, v in sigs.lob_sigs.items()},
+                   runs=SigBatch.sorted_run())
+    batch = {c: v[rev].copy() for c, v in batch.items()}
+    engine.create_table("t2", engine.table("lineitem").schema)
+    sigs_mod.DEBUG_VALIDATE_CARRY = True
+    try:
+        tx = engine.begin()
+        tx.insert("t2", batch, sigs=bad)
+        with pytest.raises(ValueError, match="sorted"):
+            tx.commit()
+    finally:
+        sigs_mod.DEBUG_VALIDATE_CARRY = False
+    # an honest claim (no runs -> seal sorts) passes
+    ok = SigBatch(bad.row_lo, bad.row_hi, bad.key_lo, bad.key_hi,
+                  bad.lob_sigs, runs=None)
+    tx = engine.begin()
+    tx.insert("t2", batch, sigs=ok)
+    tx.commit()
+    assert engine.table("t2").count() == 200
+
+
+def test_alter_add_lob_column_normalizes_str_default():
+    # the carry path skips normalize_batch: alter must normalize the LOB
+    # fill itself (str -> bytes), and carry keys/old lob sigs through
+    from repro.core.schema import Column, CType
+    engine, base = _engine(True, n=300)
+    engine.commit_stats = CommitStats()
+    engine.alter_table_add_column("lineitem", Column("note", CType.LOB),
+                                  "hello")
+    batch, _ = engine.table("lineitem").scan()
+    assert batch["note"][0] == b"hello" and isinstance(batch["note"][0],
+                                                      bytes)
+    st = engine.commit_stats
+    assert st.rows_rehashed == 300      # row sigs genuinely change
+    assert st.lob_rows_hashed == 300    # only the NEW column hashes
+    assert st.apply_sorts == 0          # PK runs carried through
+    with pytest.raises(TypeError):
+        engine.alter_table_add_column("lineitem",
+                                      Column("n2", CType.LOB), 7)
+
+
+def test_mismatched_sidecar_refused():
+    engine, base = _engine(True, n=100)
+    batch, rid, sigs = engine.table("lineitem").scan_carry()
+    engine.create_table("t2", engine.table("lineitem").schema)
+    bad = SigBatch(sigs.row_lo[:-1], sigs.row_hi[:-1], sigs.key_lo[:-1],
+                   sigs.key_hi[:-1],
+                   {c: v[:-1] for c, v in sigs.lob_sigs.items()},
+                   runs=sigs.runs)
+    tx = engine.begin()
+    tx.insert("t2", batch, sigs=bad)
+    with pytest.raises(ValueError, match="lane"):
+        tx.commit()
+    malformed = SigBatch(sigs.row_lo, sigs.row_hi, sigs.key_lo, sigs.key_hi,
+                         dict(sigs.lob_sigs),
+                         runs=np.array([0, 5000], np.int64))  # offset > n
+    tx = engine.begin()
+    tx.insert("t2", batch, sigs=malformed)
+    with pytest.raises(ValueError, match="runs"):
+        tx.commit()
+
+
+def test_validate_runs_accepts_run_boundaries():
+    lo = np.array([1, 5, 9, 2, 3], np.uint64)
+    hi = np.zeros(5, np.uint64)
+    sigs_mod.validate_runs(lo, hi, np.array([0, 3], np.int64))  # ok
+    with pytest.raises(ValueError):
+        sigs_mod.validate_runs(lo, hi, np.array([0], np.int64))
+
+
+# ------------------------------------------------------ materialized clone
+
+@pytest.mark.parametrize("pk", [True, False])
+def test_clone_materialize_zero_rehash_and_equal(pk):
+    engine, base = _engine(pk, n=3000)
+    rng = np.random.default_rng([3, int(pk)])
+    _update(engine, "lineitem", base, np.sort(rng.choice(3000, 200, False)),
+            pk)
+    snap = engine.create_snapshot("s", "lineitem")
+    engine.commit_stats = CommitStats()
+    engine.clone_table("mat", snap, materialize=True)
+    st = engine.commit_stats
+    assert st.rows_rehashed == 0 and st.lob_rows_hashed == 0
+    assert st.rows_carried == 3000
+    # fresh physical objects, same logical content
+    assert not (set(engine.table("mat").directory.data_oids)
+                & set(engine.table("lineitem").directory.data_oids))
+    d = snapshot_diff(engine.store, engine.current_snapshot("lineitem"),
+                      engine.current_snapshot("mat"))
+    assert d.is_empty()
+
+
+def test_clone_materialize_wal_replay():
+    engine, base = _engine(True, n=800)
+    snap = engine.create_snapshot("s", "lineitem")
+    engine.clone_table("mat", snap, materialize=True)
+    extra = {k: v[:5].copy() for k, v in gen_lineitem(900, seed=9).items()}
+    extra["l_orderkey"] = extra["l_orderkey"] + 10_000_000  # fresh keys
+    engine.insert("mat", extra)
+    replayed = Engine.replay(engine.wal)
+    a = engine.table("mat").scan(with_sigs=True)
+    b = replayed.table("mat").scan(with_sigs=True)
+    assert np.array_equal(a[1], b[1]) and np.array_equal(a[2], b[2])
+
+
+# --------------------------------------------------------- tombstone seal
+
+def test_tombstone_seal_multi_object_key_sigs():
+    # deletes spanning several data objects: the group-boundary gather must
+    # attach each target's key signature from ITS object
+    engine, base = _engine(True, n=2000)
+    _update(engine, "lineitem", base, np.arange(0, 1200, 3), True)  # obj 2
+    t = engine.table("lineitem")
+    batch, rowids = t.scan()
+    rng = np.random.default_rng(5)
+    pick = np.sort(rng.choice(rowids.shape[0], 300, replace=False))
+    tx = engine.begin()
+    tx.delete_rowids("lineitem", rowids[pick])
+    tx.commit()
+    tomb_oid = t.directory.tomb_oids[-1]
+    tomb = engine.store.get(tomb_oid)
+    assert len(tomb.target_oids) >= 2
+    from repro.core.objects import rowid_off, rowid_oid
+    for i in range(tomb.nrows):
+        obj = engine.store.get(int(rowid_oid(tomb.target[i:i+1])[0]))
+        off = int(rowid_off(tomb.target[i:i+1])[0])
+        assert tomb.key_lo[i] == obj.key_lo[off]
+        assert tomb.key_hi[i] == obj.key_hi[off]
+
+
+# ------------------------------------------------------- PITR derive cache
+
+def test_pitr_horizon_derives_instead_of_rebuilding():
+    engine, base = _engine(True, n=3000)
+    ts_marks = []
+    for tag in range(4):
+        _update(engine, "lineitem", base, np.arange(tag * 200, tag * 200
+                                                    + 150), True, tag=tag)
+        ts_marks.append(engine.ts)
+    t = engine.table("lineitem")
+    cache = engine.store.vis_cache
+    # historical versions were cached while live — drop them and prime
+    # only the HEAD so the horizons must be served by ts-truncation
+    cache.clear()
+    cache.get(t.directory)
+    b0, d0 = cache.builds, cache.derives
+    for ts in ts_marks[:-1]:
+        d = t.directory_at(ts)
+        got = cache.get(d)
+        oracle = VisibilityIndex(engine.store, d,
+                                 _entry=_build_entry(engine.store, d))
+        assert np.array_equal(got.targets, oracle.targets)
+    assert cache.builds == b0, "historical horizons must not rebuild"
+    assert cache.derives == d0 + len(ts_marks) - 1
+    # scans at the derived horizons agree with golden PITR behaviour
+    for ts in ts_marks[:-1]:
+        n = t.count(t.directory_at(ts))
+        assert n == 3000
+
+
+def test_pitr_full_coverage_horizons_share_canonical_entry():
+    engine, base = _engine(True, n=1000)
+    _update(engine, "lineitem", base, np.arange(100), True)
+    t = engine.table("lineitem")
+    cache = engine.store.vis_cache
+    cache.get(t.directory)
+    b0 = cache.builds
+    # any horizon at/after the last tombstone commit shares one entry
+    for ts in (engine.ts, engine.ts + 5, engine.ts + 100):
+        d = t.directory_at(min(ts, engine.ts)) if ts <= engine.ts else None
+        from repro.core.directory import Directory
+        d = Directory(t.directory.data_oids, t.directory.tomb_oids, ts)
+        cache.get(d)
+    assert cache.builds == b0
+
+
+def test_derived_horizon_diff_matches_oracle():
+    # a PITR diff across a derived horizon equals the same diff computed
+    # on a cold cache (full rebuild oracle)
+    engine, base = _engine(False, n=2500)
+    _update(engine, "lineitem", base, np.arange(0, 600, 2), False, tag=1)
+    mid = engine.ts
+    _update(engine, "lineitem", base, np.arange(1, 601, 2), False, tag=2)
+    cur = engine.current_snapshot("lineitem")
+    old = engine.snapshot_at("lineitem", mid)
+    d1 = snapshot_diff(engine.store, old, cur)
+    engine.store.vis_cache.clear()
+    engine.store.delta_cache.clear()
+    d2 = snapshot_diff(engine.store, old, cur)
+    for f in ("diff_cnt", "key_lo", "key_hi", "row_lo", "row_hi", "rowid"):
+        assert np.array_equal(getattr(d1, f), getattr(d2, f))
