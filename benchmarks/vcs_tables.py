@@ -131,35 +131,39 @@ def _random_update(engine: Engine, table: str, base, n: int, rng,
 
 def workflow_scenario(n_rows: int = 2_000_000, csizes=None) -> List[Dict]:
     """Branch -> mutate -> PR review -> CI-gated atomic publish -> Δ revert
-    (ISSUE 3). Branch/diff/revert are ∝ metadata/Δ; publish pays the CI
+    (ISSUE 3), driven through the ref-unified ``Repo`` facade (ISSUE 5) —
+    the bench doubles as the guard that the porcelain redesign stays off
+    the hot path. Branch/diff/revert are ∝ metadata/Δ; publish pays the CI
     preview merge plus the real one."""
-    from repro.core import PublishBlocked  # noqa: F401 (fails fast if absent)
+    from repro.core import Repo
     out = []
     for pk in (True, False):
         for cname, csize in (csizes or {"C3": 10_000, "C4": 100_000}).items():
             csize = min(csize, n_rows // 5)
             rng = np.random.default_rng([csize] + list(cname.encode()))
             engine, base = _mk_engine(n_rows, pk)
+            repo = Repo(engine)
 
             t0 = time.perf_counter()
-            engine.create_branch("dev", ["lineitem"])
+            repo.branch("dev", ["lineitem"])
             t_branch = time.perf_counter() - t0
 
             _random_update(engine, "dev/lineitem", base, csize, rng, pk)
-            pr = engine.open_pr("main", "dev")
+            pr = repo.open_pr("dev")
             pr.add_check(lambda ctx: ctx.count("lineitem") == n_rows,
                          "row-count")
 
             t0 = time.perf_counter()
-            d = pr.diff()["lineitem"]
+            d = repo.diff(f"pr:{pr.id}:base", f"pr:{pr.id}:head",
+                          table="lineitem")
             t_diff = time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            pr.publish()
+            repo.publish(pr.id)
             t_publish = time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            pr.revert_publish()
+            repo.revert_pr(pr.id)
             t_revert = time.perf_counter() - t0
 
             out.append({

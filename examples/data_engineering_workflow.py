@@ -1,36 +1,36 @@
 """Collaborative data-engineering workflow (paper §1, §6.3/§6.4) on the
-workflow porcelain: branch refs, data pull requests, CI-gated atomic
-publish, and Δ-based revert.
+ref-unified porcelain (ISSUE 5): one ref grammar, the ``Repo`` facade, and
+the paper-style statement surface driving the same verbs.
 
 Two engineers branch the production dataset, edit in isolation, open PRs,
 and CI checks gate what lands. A failing check blocks one publish until the
 data is fixed; a conflicting PR is reviewed and force-resolved; a bad
 release is rolled back with an inverse-delta revert — history-preserving,
-unlike the head-rewriting restore.
+unlike the head-rewriting restore. Every version is named by a REF
+(``snap:release-1``, ``lineitem@{ts}``, ``pr:2:merged``, ``lineitem~1``) —
+no Python object handles required.
 
   PYTHONPATH=src python examples/data_engineering_workflow.py
 """
 import numpy as np
 
 from repro.configs.paper_vcs import LINEITEM_SCHEMA, gen_lineitem
-from repro.core import (ConflictMode, Engine, MergeConflictError,
-                        PublishBlocked, snapshot_diff)
+from repro.core import (MergeConflictError, PublishBlocked, Repo, execute)
 
 N_ROWS = 100_000
-rng = np.random.default_rng(7)
-engine = Engine()
-engine.create_table("lineitem", LINEITEM_SCHEMA)
+repo = Repo()
+engine = repo.engine
+repo.create_table("lineitem", LINEITEM_SCHEMA)
 base = gen_lineitem(N_ROWS)
-engine.insert("lineitem", base)
-print(f"prod lineitem: {engine.table('lineitem').count():,} rows")
+repo.insert("lineitem", base)
+print(f"prod lineitem: {repo.table('lineitem').count():,} rows")
 
-# -- branches: isolated metadata-only forks of the production table -----
+# -- branches: isolated metadata-only forks, created by STATEMENT --------
 bytes_before = engine.store.bytes_written
-engine.create_branch("relabel", ["lineitem"])
-engine.create_branch("cleanup", ["lineitem"])
+print(execute(repo, "CREATE BRANCH relabel FOR (lineitem)").message)
+print(execute(repo, "CREATE BRANCH cleanup FOR (lineitem)").message)
 assert engine.store.bytes_written == bytes_before  # zero data copied
-print("branches:", [b.name for b in engine.list_branches()],
-      "(clones are metadata-only)")
+print(execute(repo, "SHOW BRANCHES").message)
 
 
 def edit(sl, flag_shift, discount=None):
@@ -45,14 +45,14 @@ def edit(sl, flag_shift, discount=None):
 
 
 # -- engineer 1 relabels a shard — but fat-fingers an illegal discount --
-engine.update_by_keys("relabel/lineitem", edit(slice(0, 2_000), 1,
-                                               discount=0.75))
+repo.update_by_keys("relabel/lineitem", edit(slice(0, 2_000), 1,
+                                             discount=0.75))
 # -- engineer 2 cleans an overlapping shard ------------------------------
-engine.update_by_keys("cleanup/lineitem", edit(slice(1_000, 3_000), 2))
+repo.update_by_keys("cleanup/lineitem", edit(slice(1_000, 3_000), 2))
 
 # -- pull requests: pinned-base review diffs + CI checks -----------------
-pr1 = engine.open_pr("main", "relabel")
-pr2 = engine.open_pr("main", "cleanup")
+pr1 = repo.open_pr("relabel")            # INTO main (the default)
+pr2 = repo.open_pr("cleanup")
 
 
 def discount_rule(ctx):
@@ -67,50 +67,52 @@ def row_count_stable(ctx):
 for pr in (pr1, pr2):
     pr.add_check(discount_rule)
     pr.add_check(row_count_stable)
-    d = pr.diff()["lineitem"]
+    # review diff by REF: the PR's pinned base against its head branch
+    d = repo.diff(f"pr:{pr.id}:base", f"pr:{pr.id}:head", table="lineitem")
     print(f"PR#{pr.id} {pr.head_name}: {d.n_groups:5d} changed groups, "
           f"rows scanned {d.stats.rows_scanned:,}")
 
 # -- publish #1: CI catches the bad discount and BLOCKS the publish ------
 try:
-    pr1.publish()
+    repo.publish(pr1.id)
 except PublishBlocked as e:
     print(f"PR#{pr1.id} blocked: {e}")
 # the engineer fixes the branch; the same PR then lands atomically
-engine.update_by_keys("relabel/lineitem", edit(slice(0, 2_000), 1))
-rep = pr1.publish()["lineitem"]
+repo.update_by_keys("relabel/lineitem", edit(slice(0, 2_000), 1))
+rep = repo.publish(pr1.id)["lineitem"]
 print(f"PR#{pr1.id} published: +{rep.inserted}/-{rep.deleted} "
       f"at ts={pr1.publish_ts}")
+print(execute(repo, "CREATE SNAPSHOT release-1 FOR TABLE lineitem").message)
 
 # -- publish #2 conflicts (overlapping shard): review, then force --------
 dry = pr2.dry_run_merge()["lineitem"]
 print(f"PR#{pr2.id} dry run: {dry.true_conflicts} true conflicts "
       f"(no mutation)")
 try:
-    pr2.publish()
+    repo.publish(pr2.id)
 except MergeConflictError as e:
     print(f"PR#{pr2.id}: {e.report.true_conflicts} true conflicts under "
           "FAIL -> reviewer ACCEPTs the cleanup branch's version")
-rep = pr2.publish(mode=ConflictMode.ACCEPT)["lineitem"]
+rep = repo.publish(pr2.id, mode="theirs")["lineitem"]   # ACCEPT alias
 print(f"PR#{pr2.id} published: +{rep.inserted}/-{rep.deleted} "
       f"at ts={pr2.publish_ts}")
 
 # -- oops: release 2 broke the dashboard — revert it ---------------------
-ts = pr2.revert_publish()
-cur = engine.current_snapshot("lineitem")
+ts = repo.revert_pr(pr2.id)
+d = repo.diff("HEAD", "snap:release-1", table="lineitem")
 print(f"reverted PR#{pr2.id} at ts={ts} (Δ-sized, history-preserving): "
-      f"{snapshot_diff(engine.store, cur, engine.snapshot_at('lineitem', pr1.publish_ts)).n_groups} "
-      "diff groups vs release 1 (0 = identical)")
-# the reverted release stays reachable through PITR — time travel intact
-published = engine.snapshot_at("lineitem", pr2.publish_ts)
+      f"{d.n_groups} diff groups vs snap:release-1 (0 = identical)")
+# the reverted release stays reachable through PITR — by REF, not handle
+d = repo.diff(f"pr:{pr2.id}:merged", "HEAD", table="lineitem")
 print("published state still visible at its horizon:",
-      snapshot_diff(engine.store, published, cur).n_groups, "groups differ")
+      d.n_groups, "groups differ")
+
+# -- the commit log names every porcelain op that touched the table ------
+print(execute(repo, "LOG TABLE lineitem LIMIT 6").message)
 
 # -- housekeeping: close the done PRs, drop branches, GC ----------------
-pr1.close()          # releases the published PR's revert pins
-engine.drop_branch("relabel")
-engine.drop_branch("cleanup")
-stats = engine.gc()
-print(f"gc: freed {stats.objects_freed} objects, pruned "
-      f"{stats.versions_pruned} history versions, "
-      f"{stats.pinned_horizons} pinned horizons honored")
+repo.close_pr(pr1.id)  # releases the published PR's revert pins
+from repro.core.statements import execute_script
+for res in execute_script(repo,
+                          "DROP BRANCH relabel; DROP BRANCH cleanup; GC"):
+    print(res.message)

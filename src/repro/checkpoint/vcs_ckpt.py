@@ -95,7 +95,10 @@ class VcsCheckpointer:
     # ---------------------------------------------------------- restore
     def restore(self, snapshot, like_state) -> Any:
         """Restore a pytree like ``like_state`` from a checkpoint snapshot."""
-        snap = self.engine.resolve_snapshot(snapshot)
+        # exact tag match wins before ref parsing (a branch/table sharing
+        # the name, or a pre-grammar tag from an old WAL, must not break
+        # or misdirect restore) — same rule clone/restore_table apply
+        snap = self.engine._snapshotish(snapshot, table=self.table)
         t = self.engine.table(self.table)
         batch, _ = t.scan(snap.directory)
         order = np.argsort(batch["shard_id"], kind="stable")

@@ -2,6 +2,9 @@
 engine over immutable columnar storage with MVCC (MatrixOne §§3-5).
 
 Public API:
+    Repo                 — THE porcelain facade: every VCS verb, on refs
+    parse_ref, resolve, UnknownRefError, AmbiguousRefError — one ref grammar
+    execute (statements) — the paper-style SQL statement front-end
     Engine, Txn          — tables, transactions, snapshots, clone/restore
     Schema, Column, CType
     snapshot_diff, sql_diff, DiffResult
@@ -10,8 +13,8 @@ Public API:
 """
 from .schema import CType, Column, Schema                      # noqa: F401
 from .directory import Directory, Snapshot                     # noqa: F401
-from .engine import (CommitStats, Engine, GCStats,             # noqa: F401
-                     PKViolation, Txn, TxnConflict)
+from .engine import (CommitRecord, CommitStats, Engine,        # noqa: F401
+                     GCStats, PKViolation, Txn, TxnConflict)
 from .sigs import SigBatch, compute_sigs, resolve_sigs         # noqa: F401
 from .diff import (DiffResult, gather_payload, gather_rowsigs,  # noqa: F401
                    snapshot_diff, sql_diff)
@@ -20,6 +23,12 @@ from .merge import (ConflictMode, MergeConflictError, MergeReport,  # noqa: F401
                     three_way_merge, two_way_merge)
 from .compaction import compact_objects, compact_table         # noqa: F401
 from .wal import WAL                                           # noqa: F401
+from .refs import (AmbiguousRefError, Ref, RefSyntaxError,     # noqa: F401
+                   ResolvedRef, UnknownRefError, as_branch,
+                   format_ref, parse_ref, resolve)
+from .repo import MODE_ALIASES, Repo, parse_mode               # noqa: F401
 from .workspace import (TRUNK, Branch, CheckContext,           # noqa: F401
                         CheckResult, PublishBlocked, PullRequest,
                         RevertConflict)
+from .statements import StatementError, StatementResult, execute  # noqa: F401,E501
+

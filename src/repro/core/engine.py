@@ -8,6 +8,7 @@ ops (the CN role).
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -18,6 +19,11 @@ from .directory import Directory, Snapshot
 from .objects import (OBJECT_CAPACITY, DataObject, ObjectStore,
                       TombstoneObject, pack_rowid, rowid_off, rowid_oid,
                       seal_data_object)
+# cycle-safe: refs only imports .directory at module level (its resolver
+# pulls .workspace lazily), unlike the engine<->workspace/indices cycles
+# that force the local imports elsewhere in this file
+from .refs import AtRef, BareRef, parse_ref, require, validate_name
+from .refs import RefSyntaxError, resolve as resolve_ref
 from .schema import Schema, concat_batches, take_batch
 from .sigs import (SigBatch, concat_sigs, key_sigs_for_lookup, resolve_sigs,
                    validate_runs)
@@ -130,6 +136,22 @@ class Engine:
         self.branches: Dict[str, "Branch"] = {}
         self.prs: Dict[int, "PullRequest"] = {}
         self._next_pr_id = 1
+        # commit log (ISSUE 5): one CommitRecord per table per applied
+        # operation, tagged with the porcelain op kind — the source of
+        # ``Repo.log``. Appended on the same code paths replay re-executes,
+        # so a replayed engine carries an identical log.
+        self.commit_log: List[CommitRecord] = []
+        self._op_kind = "commit"
+
+    @contextlib.contextmanager
+    def op_kind(self, kind: str):
+        """Tag commits applied inside the block with a porcelain op kind
+        (merge/publish/revert/...) for the commit log."""
+        prev, self._op_kind = self._op_kind, kind
+        try:
+            yield
+        finally:
+            self._op_kind = prev
 
     # ------------------------------------------------------------ basics
     def next_ts(self) -> int:
@@ -144,11 +166,13 @@ class Engine:
             raise ValueError(f"table {name} exists")
         t = Table(name, schema, self.store, self.ts)
         self.tables[name] = t
+        self.commit_log.append(CommitRecord(self.ts, name, "create", 0, 0))
         if _log:
             self.wal.append("create_table", name=name, schema=schema)
         return t
 
     def drop_table(self, name: str, *, _log=True) -> None:
+        require(self.tables, name, "table")
         # drop secondary-index specs and their auxiliary tables with the
         # base table — a dropped table must not leave dangling
         # ``engine.indices`` entries or live aux tables behind
@@ -297,7 +321,7 @@ class Engine:
         names = sorted(set(tx._ins) | set(tx._del))
         ts = self.next_ts()
         oid0 = self.store._next_oid
-        staged: List[Tuple[Table, object, list, np.ndarray]] = []
+        staged: List[Tuple[Table, object, list, np.ndarray, int]] = []
         sealed: List[int] = []
         try:
             for name in names:
@@ -335,8 +359,10 @@ class Engine:
                             raise PKViolation(f"{name}: key already exists")
                 tomb_oids = self._seal_tombstones(dels, ts)
                 sealed.extend(tomb_oids)
+                ins_n = (0 if key_sigs is None
+                         else int(key_sigs[0].shape[0]))
                 staged.append((t, t.directory.with_objects(
-                    data_oids, tomb_oids, ts=ts), ins, dels))
+                    data_oids, tomb_oids, ts=ts), ins, dels, ins_n))
         except Exception:
             # an aborted transaction must be INVISIBLE: unwind the sealed
             # objects and roll back the oid counter and the timestamp it
@@ -347,11 +373,16 @@ class Engine:
             self.store._next_oid = oid0
             self.ts = ts - 1
             raise
-        for t, directory, ins, dels in staged:
+        for t, directory, ins, dels, ins_n in staged:
             t.set_directory(directory)
+            self.commit_log.append(CommitRecord(
+                ts, t.name, self._op_kind, ins_n, int(dels.shape[0])))
             if _log:
+                # the record carries its porcelain op kind so replay
+                # rebuilds an identical commit log (merges are logged as
+                # plain commits — the kind is the only thing lost otherwise)
                 self.wal.append("commit", table=t.name, ts=ts,
-                                inserts=ins, deletes=dels)
+                                inserts=ins, deletes=dels, op=self._op_kind)
         return ts
 
     def _unwind(self, oids: Sequence[int]) -> None:
@@ -359,14 +390,54 @@ class Engine:
             self.store.delete(o)
 
     # --------------------------------------------------------- snapshots
+    def _snapshotish(self, ref: SnapshotRef,
+                     table: Optional[str] = None) -> Snapshot:
+        """Snapshot-position resolution for clone/restore: an EXACT named
+        snapshot wins before ref parsing. A pre-grammar tag literally
+        named ``step~1`` (old WALs carry such names; replay skips
+        validation) must restore THAT tag — parsing it as a RelRef would
+        silently restore different data. Everything else takes the one
+        resolver."""
+        if isinstance(ref, str) and ref in self.snapshots:
+            return self.snapshots[ref]
+        return resolve_ref(self, ref, table=table).snapshot
+
     def resolve_snapshot(self, ref: SnapshotRef) -> Snapshot:
-        return self.snapshots[ref] if isinstance(ref, str) else ref
+        """DEPRECATED shim — kept for old callers; use ``Repo.resolve``.
+
+        Legacy contract preserved exactly for BARE names: the old code was
+        a snapshots-only dict lookup, so a bare string resolves in the
+        snapshot namespace alone. Dict-first, unconditionally: a
+        pre-grammar legacy name may LOOK like a qualified ref form (a
+        snapshot literally named "orders~1" predating the grammar) and
+        must still return the named tag, never a reinterpretation. A
+        string absent from the dict that parses as a bare name (or not at
+        all) raises — a ``try/except KeyError`` "does snapshot X exist"
+        probe must not start matching tables or branches. Only qualified
+        forms (snap:x, table@{ts}, table~n, ...) of NON-legacy names take
+        the one resolver."""
+        if isinstance(ref, str):
+            if ref in self.snapshots:
+                return self.snapshots[ref]
+            try:
+                bare = isinstance(parse_ref(ref), BareRef)
+            except RefSyntaxError:
+                bare = True          # pre-grammar legacy name
+            if bare:
+                return require(self.snapshots, ref, "snapshot",
+                               f"snap:{ref}")
+        return resolve_ref(self, ref).snapshot
 
     def create_snapshot(self, name: str, table: str, *, _log=True) -> Snapshot:
         """CREATE SNAPSHOT name FOR TABLE table (a git tag)."""
+        if _log:
+            # user-facing creations only: replay (_log=False) must load
+            # any WAL that was ever legally written, including pre-grammar
+            # names this validation would now reject
+            validate_name(name, "snapshot name")
         if name in self.snapshots:
             raise ValueError(f"snapshot {name} exists")
-        t = self.table(table)
+        t: Table = require(self.tables, table, "table")
         snap = Snapshot(name=name, table=table, schema=t.schema,
                         directory=t.directory, created_ts=self.ts)
         self.snapshots[name] = snap
@@ -375,6 +446,7 @@ class Engine:
         return snap
 
     def drop_snapshot(self, name: str, *, _log=True) -> None:
+        require(self.snapshots, name, "snapshot", f"snap:{name}")
         del self.snapshots[name]
         # drop lineage entries pointing at the dropped snapshot (anonymous
         # bases have name=None and never match a named drop)
@@ -383,10 +455,9 @@ class Engine:
             self.wal.append("drop_snapshot", name=name)
 
     def snapshot_at(self, table: str, ts: int) -> Snapshot:
-        """T{mo_ts = ts} — PITR timestamp snapshot (a git commit)."""
-        t = self.table(table)
-        return Snapshot(name=None, table=table, schema=t.schema,
-                        directory=t.directory_at(ts), created_ts=ts)
+        """DEPRECATED shim — use the ``table@{ts}`` / ``ts:N`` ref forms
+        through ``Repo.resolve``. T{mo_ts = ts}, a git commit."""
+        return resolve_ref(self, AtRef(table, ts)).snapshot
 
     def current_snapshot(self, table: str) -> Snapshot:
         t = self.table(table)
@@ -412,7 +483,7 @@ class Engine:
         path: the scan carries every signature lane plus per-object sorted
         runs, so the rewrite never hashes a row and never re-sorts a
         single-object snapshot."""
-        snap = self.resolve_snapshot(src)
+        snap = self._snapshotish(src)
         if new_name in self.tables:
             raise ValueError(f"table {new_name} exists")
         if materialize:
@@ -425,7 +496,8 @@ class Engine:
             if sigs.row_lo.shape[0]:
                 tx = self.begin()
                 tx.insert(new_name, batch, sigs=sigs)
-                tx.commit(_log=False)
+                with self.op_kind("clone"):
+                    tx.commit(_log=False)
             self.set_common_base(new_name, snap.table, snap)
             if _log:
                 self.wal.append("clone", new=new_name, snap=snap,
@@ -435,6 +507,7 @@ class Engine:
         t.directory = snap.directory
         t.history = [(snap.ts, snap.directory)]
         self.tables[new_name] = t
+        self.commit_log.append(CommitRecord(self.ts, new_name, "clone", 0, 0))
         self.set_common_base(new_name, snap.table, snap)
         if with_indices:
             from .indices import IndexSpec, backfill_index
@@ -465,14 +538,18 @@ class Engine:
         return t
 
     def restore_table(self, table: str, src: SnapshotRef, *, _log=True) -> None:
-        """RESTORE TABLE table FROM SNAPSHOT src — git reset --hard."""
-        snap = self.resolve_snapshot(src)
-        t = self.table(table)
+        """RESTORE TABLE table FROM SNAPSHOT src — git reset --hard.
+
+        ``src`` may be any ref form; table-relative refs (ts:N, HEAD, ~n)
+        resolve against ``table``."""
+        t: Table = require(self.tables, table, "table")
+        snap = self._snapshotish(src, table=table)
         if snap.table != table and not t.schema.compatible_with(snap.schema):
             raise ValueError("restore: incompatible schema")
         t.schema = snap.schema  # PITR across schema change (paper §5.5.6)
         t.set_directory(Directory(snap.directory.data_oids,
                                   snap.directory.tomb_oids, snap.ts))
+        self.commit_log.append(CommitRecord(self.ts, table, "restore", 0, 0))
         if snap.table != table:
             self.set_common_base(table, snap.table, snap)
         if _log:
@@ -533,7 +610,8 @@ class Engine:
             # record: logging it as a plain commit too would replay it
             # twice, desynchronizing oid/ts allocation for every later
             # rowid-bearing record
-            tx.commit(_log=False)
+            with self.op_kind("alter"):
+                tx.commit(_log=False)
         if _log:
             self.wal.append("alter_add_column", table=table, column=column,
                             default=default)
@@ -609,6 +687,7 @@ class Engine:
                 # replay consumes one timestamp and allocates oids in the
                 # live order
                 tx = e.begin()
+                op = p.get("op", "commit")
                 while True:
                     for b in p["inserts"]:
                         tx._ins.setdefault(p["table"], []).append(b)
@@ -620,7 +699,8 @@ class Engine:
                         i += 1
                     else:
                         break
-                e._commit(tx, _log=False)
+                with e.op_kind(op):
+                    e._commit(tx, _log=False)
             elif k == "snapshot":
                 e.create_snapshot(p["name"], p["table"], _log=False)
             elif k == "drop_snapshot":
@@ -733,6 +813,21 @@ class Engine:
             self.store.delete(o)
         return GCStats(objects_freed=len(dead), versions_pruned=pruned,
                        pinned_horizons=sum(len(v) for v in pin_ts.values()))
+
+
+@dataclass
+class CommitRecord:
+    """One commit-log entry: what one applied operation did to one table.
+
+    ``kind`` is the porcelain op that drove the commit ("commit" for plain
+    DML; merge/publish/revert/revert-publish/clone/alter/restore/create
+    for porcelain) — set via ``Engine.op_kind`` on the SAME code paths WAL
+    replay re-executes, so replayed engines carry identical logs."""
+    ts: int
+    table: str
+    kind: str
+    inserted: int
+    deleted: int
 
 
 @dataclass

@@ -541,7 +541,8 @@ def three_way_merge(engine: Engine, target: str, source: Snapshot,
     tx = engine.begin()
     plan_merge(engine, target, source, base, mode, report, tx)
     if report.inserted or report.deleted:
-        report.commit_ts = tx.commit()
+        with engine.op_kind("merge"):
+            report.commit_ts = tx.commit()
     # lineage: the merged-in source snapshot becomes the new common base
     if source.table != target and source.table in engine.tables:
         engine.set_common_base(target, source.table, source)

@@ -43,6 +43,8 @@ from .diff import DiffResult, gather_payload, gather_rowsigs, snapshot_diff
 from .directory import Snapshot
 from .merge import (OP_DEL, OP_INS, ConflictMode, MergeConflictError,
                     MergeReport, collapse_pk, plan_merge)
+from .refs import (UnknownRefError, require, resolve as resolve_ref,
+                   suggest, validate_name)
 from .sigs import SigBatch
 from .table import Table
 
@@ -104,17 +106,26 @@ def branch_table_name(branch: str, logical: str) -> str:
 
 def resolve_branch(engine, name: Optional[str]) -> Branch:
     """A registered branch, or the synthesized trunk view (physical ==
-    logical over the engine's plain tables)."""
+    logical over the engine's plain tables). UnknownRefError otherwise."""
     if name in (None, TRUNK) and TRUNK not in engine.branches:
-        plain = {n: n for n in engine.tables if "/" not in n}
+        # index aux tables are internal: branching one as a first-class
+        # table would orphan it (never maintained, polluting diffs/status)
+        aux = {spec.aux_table for specs in engine.indices.values()
+               for spec in specs}
+        plain = {n: n for n in engine.tables
+                 if "/" not in n and n not in aux}
         return Branch(TRUNK, plain, {}, None, 0)
-    return engine.branches[name if name is not None else TRUNK]
+    name = name if name is not None else TRUNK
+    return require(engine.branches, name, "branch", f"branch:{name}")
 
 
 def create_branch(engine, name: str, tables: Sequence[str],
                   from_ref: Optional[str] = None, *, _log=True) -> Branch:
     """Clone ``tables`` under the ``name/`` namespace in one WAL-logged
     operation, recording the branch-point snapshot per table."""
+    if _log:
+        # user-facing creations only — replay must load pre-grammar names
+        validate_name(name, "branch name")
     if not name or name == TRUNK or "/" in name:
         raise ValueError(f"invalid branch name {name!r}")
     if name in engine.branches:
@@ -123,12 +134,17 @@ def create_branch(engine, name: str, tables: Sequence[str],
     if from_ref in (None, TRUNK):
         parent, src = None, {lg: lg for lg in tables}
     else:
-        parent_branch = engine.branches[from_ref]
+        parent_branch = resolve_branch(engine, from_ref)
         parent = from_ref
-        src = {lg: parent_branch.physical(lg) for lg in tables}
+        src = {}
+        for lg in tables:
+            if lg not in parent_branch.tables:
+                raise UnknownRefError(
+                    lg, f"branch {from_ref!r} has no table {lg!r}",
+                    suggest(lg, parent_branch.tables))
+            src[lg] = parent_branch.physical(lg)
     for lg in tables:
-        if src[lg] not in engine.tables:
-            raise KeyError(f"no table {src[lg]} to branch from")
+        require(engine.tables, src[lg], "table")
         if branch_table_name(name, lg) in engine.tables:
             raise ValueError(f"table {branch_table_name(name, lg)} exists")
     mapping, bases = {}, {}
@@ -147,7 +163,7 @@ def create_branch(engine, name: str, tables: Sequence[str],
 
 
 def drop_branch(engine, name: str, *, _log=True) -> None:
-    br = engine.branches[name]
+    br = require(engine.branches, name, "branch", f"branch:{name}")
     # open PRs still need the branch for review/publish; published-but-not
     # -closed PRs still need it for revert_publish (GC pins their pre/post
     # states for exactly that reason)
@@ -202,7 +218,9 @@ class PullRequest:
         base_branch = resolve_branch(engine, base_name)
         for lg in self.tables:
             if lg not in base_branch.tables:
-                raise KeyError(f"base branch {base_name} has no table {lg}")
+                raise UnknownRefError(
+                    lg, f"base branch {base_name!r} has no table {lg!r}",
+                    suggest(lg, base_branch.tables))
         # pinned base horizon: review is against the base AS OF open time
         self.base_pins: Dict[str, Snapshot] = {
             lg: engine.current_snapshot(self._base_physical(lg))
@@ -356,7 +374,8 @@ class PullRequest:
             plan_merge(engine, self._base_physical(lg), src, base, mode,
                        report, tx)
             planned[lg] = (report, src)
-        ts = tx.commit(_log=False) if tx.staged else None
+        with engine.op_kind("publish"):
+            ts = tx.commit(_log=False) if tx.staged else None
         for lg, (report, src) in planned.items():
             report.commit_ts = ts
             target = self._base_physical(lg)
@@ -386,7 +405,8 @@ class PullRequest:
         for lg in self.tables:
             plan_revert(engine, self._base_physical(lg),
                         self.pre_publish[lg], self.post_publish[lg], tx)
-        ts = tx.commit(_log=False) if tx.staged else None
+        with engine.op_kind("revert-publish"):
+            ts = tx.commit(_log=False) if tx.staged else None
         self.status = "reverted"
         if _log:
             engine.wal.append("publish_revert", pr=self.id, ts=ts)
@@ -405,11 +425,11 @@ def open_pr(engine, base: Optional[str], head: str, *,
             _log=True) -> PullRequest:
     """Open a pull request merging branch ``head`` into ``base`` (None or
     "main" = the trunk tables). Pins the base horizon."""
-    if head not in engine.branches:
-        raise KeyError(f"no branch {head}")
+    require(engine.branches, head, "branch", f"branch:{head}")
     base_name = base if base is not None else TRUNK
-    if base_name != TRUNK and base_name not in engine.branches:
-        raise KeyError(f"no branch {base_name}")
+    if base_name != TRUNK:
+        require(engine.branches, base_name, "branch",
+                f"branch:{base_name}")
     if base_name == head:
         raise ValueError("PR base and head are the same branch")
     pr = PullRequest(engine, engine._next_pr_id, base_name, head)
@@ -512,12 +532,15 @@ def plan_revert(engine, table: str, from_snap: Snapshot, to_snap: Snapshot,
 def revert(engine, table: str, from_ref, to_ref, *,
            _log=True) -> Optional[int]:
     """``engine.revert``: one-table inverse-Δ revert as a new commit.
-    Returns the commit ts (None when Δ(from -> to) is empty)."""
-    from_snap = engine.resolve_snapshot(from_ref)
-    to_snap = engine.resolve_snapshot(to_ref)
+    Refs resolve against ``table`` (so ts:/HEAD/~n forms work); returns
+    the commit ts (None when Δ(from -> to) is empty)."""
+    require(engine.tables, table, "table")
+    from_snap = resolve_ref(engine, from_ref, table=table).snapshot
+    to_snap = resolve_ref(engine, to_ref, table=table).snapshot
     tx = engine.begin()
     staged = plan_revert(engine, table, from_snap, to_snap, tx)
-    ts = tx.commit(_log=False) if staged else None
+    with engine.op_kind("revert"):
+        ts = tx.commit(_log=False) if staged else None
     if _log:
         engine.wal.append("revert", table=table, snap_from=from_snap,
                           snap_to=to_snap, ts=ts)

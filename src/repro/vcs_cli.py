@@ -1,0 +1,463 @@
+"""``datagit`` — git-style CLI over the VCS statement layer (ISSUE 5).
+
+Every subcommand compiles to a ``core.statements`` statement and executes
+it against a :class:`~repro.core.Repo`, so the CLI, the statement string,
+and the Python API are three doors into the SAME resolver and verb set
+(the golden parity test pins byte-identical results across all three).
+
+State persists as a serialized WAL: each invocation replays the store file
+into an engine, runs the command, and writes the appended WAL back — crash
+recovery and the CLI share one durability story.
+
+  PYTHONPATH=src python -m repro.vcs_cli --store /tmp/demo.wal init
+  ... seed orders --rows 10000
+  ... branch dev -t orders
+  ... mutate dev/orders --rows 200 --seed 1
+  ... diff 'branch:dev' HEAD --table orders
+  ... pr open dev
+  ... publish 1
+  ... log orders
+  ... revert-pr 1
+  ... gc
+
+``seed`` / ``mutate`` generate deterministic demo data (they are the only
+subcommands that do not map onto a statement — statements are the VCS
+surface, not a DML surface).
+
+Caveat on ``pr check``: user CI checks are in-process Python callables
+(``repo.pr(n).add_check(fn)``) and cannot survive the WAL round-trip, so
+a fresh ``dg`` invocation sees none of them — across processes the gate
+catches only the built-in merge-conflict preview (which is still exit-1
+gateable). Long-lived checks belong in the Python/embedding surface.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import sys
+from typing import List, Optional
+
+import numpy as np
+
+from .core import (AmbiguousRefError, Column, CType, MergeConflictError,
+                   PKViolation, PublishBlocked, Repo, RefSyntaxError,
+                   RevertConflict, Schema, TxnConflict, UnknownRefError,
+                   WAL, as_branch)
+from .core.engine import Engine
+from .core.statements import StatementError, execute, execute_script
+
+DEMO_SCHEMA = Schema((Column("k", CType.I64), Column("v", CType.F64),
+                      Column("doc", CType.LOB)), primary_key=("k",))
+DEMO_SCHEMA_NOPK = Schema(DEMO_SCHEMA.columns, primary_key=None)
+
+
+# --------------------------------------------------------------------------
+# store persistence — append-only WAL frames
+#
+# The store file is a sequence of pickle frames, each holding the records
+# one invocation appended. Load replays every frame; save appends ONLY the
+# records new since load — O(delta) I/O per command, not O(history), which
+# is also the WAL's own durability story (a log you append to, not a
+# snapshot you rewrite).
+# --------------------------------------------------------------------------
+
+def load_repo(store: str) -> Repo:
+    wal = WAL()
+    clean_end = 0
+    if os.path.exists(store):
+        with open(store, "rb") as f:
+            size = os.fstat(f.fileno()).st_size
+            while True:
+                try:
+                    recs = pickle.load(f)
+                except EOFError:
+                    break
+                except Exception:
+                    # the file is append-only with fsync per frame, so a
+                    # parse failure can only be the TORN tail of a crashed
+                    # append (tiny tears raise EOFError, bigger ones
+                    # UnpicklingError) — recover to the last clean frame
+                    break
+                wal.records.extend(recs)
+                clean_end = f.tell()
+        # bytes past the last clean frame were never acknowledged: warn,
+        # never parse past them, and let save_repo truncate before
+        # appending (appending after garbage would brick the store)
+        if size > clean_end:
+            print(f"warning: dropping {size - clean_end} byte(s) of "
+                  f"torn trailing frame in {store} (unacknowledged "
+                  "crashed write)", file=sys.stderr)
+    engine = Engine.replay(wal)
+    # replay re-executes with _log=False into a FRESH (empty) WAL —
+    # re-attach the loaded one so this session's records append to it
+    engine.wal = wal
+    repo = Repo(engine)
+    repo._persisted_records = len(wal.records)
+    repo._persisted_offset = clean_end
+    return repo
+
+
+def save_repo(store: str, repo: Repo) -> None:
+    done = getattr(repo, "_persisted_records", 0)
+    new = repo.engine.wal.records[done:]
+    exists = os.path.exists(store)
+    if not new and exists:
+        return
+    offset = getattr(repo, "_persisted_offset", 0)
+    with open(store, "r+b" if exists else "wb") as f:
+        f.truncate(offset)          # drop any torn tail before appending
+        f.seek(offset)
+        pickle.dump(new, f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+        os.fsync(f.fileno())
+        repo._persisted_offset = f.tell()
+    repo._persisted_records = done + len(new)
+
+
+# --------------------------------------------------------------------------
+# demo data (deterministic; the only non-statement subcommands)
+# --------------------------------------------------------------------------
+
+def _demo_batch(keys: np.ndarray, seed: int):
+    rng = np.random.default_rng(seed)
+    return {"k": keys.astype(np.int64),
+            "v": np.round(rng.random(keys.shape[0]) * 100.0, 6),
+            "doc": [b"doc-%d-%d" % (seed, int(k)) for k in keys]}
+
+
+def seed_table(repo: Repo, table: str, rows: int, seed: int,
+               nopk: bool = False) -> str:
+    if table not in repo.engine.tables:
+        repo.create_table(table, DEMO_SCHEMA_NOPK if nopk else DEMO_SCHEMA)
+    repo.insert(table, _demo_batch(np.arange(rows), seed))
+    return f"table {table} seeded with {rows} row(s) (seed={seed})"
+
+
+def mutate_table(repo: Repo, table: str, rows: int, seed: int) -> str:
+    batch, _ = repo.table(table).scan()
+    keys = np.sort(batch["k"])
+    rng = np.random.default_rng(seed)
+    pick = np.sort(rng.choice(keys, size=min(rows, keys.shape[0]),
+                              replace=False))
+    upd = _demo_batch(pick, seed)
+    upd["doc"] = [b"mut-%d-%d" % (seed, int(k)) for k in pick]
+    repo.update_by_keys(table, upd)
+    return f"table {table}: {pick.shape[0]} row(s) updated (seed={seed})"
+
+
+# --------------------------------------------------------------------------
+# subcommand -> statement compilation
+# --------------------------------------------------------------------------
+
+def _q(ref: str) -> str:
+    """Quote a ref-position arg into statement text. No legal ref contains
+    a quote — reject instead of letting it escape the quoting and be
+    reinterpreted as statement syntax (the _ident() rationale)."""
+    if "'" in ref:
+        raise ValueError(f"invalid ref {ref!r}: refs cannot contain \"'\"")
+    return "'" + ref + "'"
+
+
+def _ident(name: str, what: str) -> str:
+    """Name-position CLI args are interpolated into statement text
+    unquoted — validate them first so `dg branch "dev FOR (prod)"` is an
+    error, not silently reinterpreted as statement syntax."""
+    from .core.refs import validate_name
+    return validate_name(name, what)
+
+
+def _branch_ident(name: str) -> str:
+    """Branch-position arg: a `branch:` qualifier is legal, strip it."""
+    return _ident(name[len("branch:"):] if name.startswith("branch:")
+                  else name, "branch name")
+
+
+def _compile(args, repo: Repo) -> Optional[str]:
+    """The statement a subcommand compiles to (None = handled natively)."""
+    c = args.cmd
+    if c == "branch":
+        name = _ident(args.name, "branch name")
+        if args.delete:
+            return f"DROP BRANCH {name}"
+        stmt = f"CREATE BRANCH {name}"
+        if args.from_ref:
+            stmt += f" FROM {_q(args.from_ref)}"
+        if args.tables is not None:
+            if not args.tables:
+                raise ValueError("branch: -t/--tables needs at least one "
+                                 "table (omit it to branch every table)")
+            stmt += " FOR (" + ", ".join(
+                _ident(t, "table name") for t in args.tables) + ")"
+        return stmt
+    if c == "snapshot":
+        name = _ident(args.name, "snapshot name")
+        if args.delete:
+            return f"DROP SNAPSHOT {name}"
+        if not args.table:
+            raise ValueError("snapshot: a table is required "
+                             "(snapshot NAME TABLE)")
+        return (f"CREATE SNAPSHOT {name} FOR TABLE "
+                f"{_ident(args.table, 'table name')}")
+    if c == "clone":
+        return (f"CLONE TABLE {_ident(args.new, 'table name')} "
+                f"FROM {_q(args.ref)}"
+                + (" MATERIALIZE" if args.materialize else ""))
+    if c == "diff":
+        stmt = f"DIFF {_q(args.a)} AGAINST {_q(args.b)}"
+        if args.table:
+            stmt += f" FOR TABLE {_ident(args.table, 'table name')}"
+        return stmt
+    if c == "merge":
+        # both sides branches -> whole-branch atomic merge; else table
+        # form. The into-position prefers an exact table name (same rule
+        # as Repo.merge / MERGE ... INTO TABLE): a branch sharing the
+        # name must not make the table unreachable from the CLI.
+        dst_is_table = args.dst in repo.engine.tables
+        if (not dst_is_table
+                and as_branch(repo.engine, args.src) is not None
+                and as_branch(repo.engine, args.dst) is not None):
+            # MERGE BRANCH takes bare names: strip a branch: qualifier the
+            # user (legitimately) wrote, instead of double-prefixing it
+            src, dst = _branch_ident(args.src), _branch_ident(args.dst)
+            stmt = f"MERGE BRANCH {src} INTO {dst}"
+            if args.mode:
+                stmt += f" MODE {_ident(args.mode, 'mode')}"
+            if args.tables is not None:
+                if not args.tables:
+                    raise ValueError("merge: -t/--tables needs at least "
+                                     "one table (omit it to merge every "
+                                     "shared table)")
+                stmt += " FOR (" + ", ".join(
+                    _ident(t, "table name") for t in args.tables) + ")"
+            return stmt
+        if args.tables is not None:
+            raise ValueError("merge: -t/--tables only applies to "
+                             "branch-to-branch merges")
+        stmt = (f"MERGE {_q(args.src)} INTO TABLE "
+                f"{_ident(args.dst, 'table name')}")
+        if args.mode:
+            stmt += f" MODE {_ident(args.mode, 'mode')}"
+        return stmt
+    if c == "pr":
+        if args.pr_cmd == "open":
+            stmt = f"OPEN PR FROM {_branch_ident(args.head)}"
+            if args.into:
+                stmt += f" INTO {_branch_ident(args.into)}"
+            return stmt
+        if args.pr_cmd == "check":
+            return f"CHECK PR {args.id}"
+        return f"CLOSE PR {args.id}"
+    if c == "publish":
+        return (f"PUBLISH PR {args.id}"
+                + (f" MODE {_ident(args.mode, 'mode')}"
+                   if args.mode else ""))
+    if c == "revert-pr":
+        return f"REVERT PR {args.id}"
+    if c == "revert":
+        return (f"REVERT TABLE {_ident(args.table, 'table name')} "
+                f"FROM {_q(args.from_ref)} TO {_q(args.to_ref)}")
+    if c == "restore":
+        return (f"RESTORE TABLE {_ident(args.table, 'table name')} "
+                f"TO {_q(args.ref)}")
+    if c == "log":
+        return (f"LOG TABLE {_ident(args.table, 'table name')}"
+                + (f" LIMIT {args.limit}" if args.limit is not None else ""))
+    if c == "branches":
+        return "SHOW BRANCHES"
+    if c == "snapshots":
+        return "SHOW SNAPSHOTS"
+    if c == "prs":
+        return "SHOW PRS"
+    if c == "tables":
+        return "SHOW TABLES"
+    if c == "status":
+        return "STATUS"
+    if c == "gc":
+        return "GC"
+    return None
+
+
+#: subcommands that only read — skipped on store write-back. ``sql`` is
+#: NOT here: raw statements may mutate, so their WAL must persist. ``gc``
+#: IS here: it is deliberately un-WAL-logged, so the write-back would be
+#: byte-identical wasted I/O.
+_READ_ONLY = {"diff", "log", "branches", "snapshots", "prs", "tables",
+              "status", "gc"}
+
+#: error types with a deliberate user-facing shape (ref/statement/VCS
+#: semantics); anything else caught below gets its class name surfaced
+_TYPED_ERRORS = (UnknownRefError, AmbiguousRefError, RefSyntaxError,
+                 StatementError, MergeConflictError, PublishBlocked,
+                 RevertConflict, PKViolation, TxnConflict)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="datagit", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--store", default=os.environ.get("VCS_STORE",
+                                                      ".vcs_store.wal"),
+                    help="WAL store file (default $VCS_STORE or "
+                         ".vcs_store.wal)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("init", help="create an empty store")
+
+    p = sub.add_parser("seed", help="create + fill a demo table")
+    p.add_argument("table")
+    p.add_argument("--rows", type=int, default=1000)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--nopk", action="store_true")
+
+    p = sub.add_parser("mutate", help="deterministically update demo rows")
+    p.add_argument("table")
+    p.add_argument("--rows", type=int, default=100)
+    p.add_argument("--seed", type=int, default=1)
+
+    p = sub.add_parser("sql", help="run raw VCS statements (';'-separated)")
+    p.add_argument("statements")
+
+    p = sub.add_parser("branch", help="create (or -d delete) a branch")
+    p.add_argument("name")
+    p.add_argument("-d", "--delete", action="store_true")
+    p.add_argument("-t", "--tables", nargs="*", default=None)
+    p.add_argument("--from", dest="from_ref", default=None,
+                   metavar="REF")
+
+    p = sub.add_parser("snapshot", help="tag (or -d drop) a named snapshot")
+    p.add_argument("name")
+    p.add_argument("table", nargs="?", default=None)
+    p.add_argument("-d", "--delete", action="store_true")
+
+    p = sub.add_parser("clone", help="clone a table from any ref")
+    p.add_argument("new")
+    p.add_argument("ref")
+    p.add_argument("--materialize", action="store_true")
+
+    p = sub.add_parser("diff", help="diff two refs")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--table", default=None)
+
+    p = sub.add_parser("merge", help="merge a ref/branch into a "
+                                     "table/branch")
+    p.add_argument("src")
+    p.add_argument("dst")
+    p.add_argument("--mode", default=None)
+    p.add_argument("-t", "--tables", nargs="*", default=None)
+
+    p = sub.add_parser("pr", help="pull requests")
+    prs = p.add_subparsers(dest="pr_cmd", required=True)
+    pp = prs.add_parser("open")
+    pp.add_argument("head")
+    pp.add_argument("--into", default=None)
+    for name in ("check", "close"):
+        pp = prs.add_parser(name)
+        pp.add_argument("id", type=int)
+
+    p = sub.add_parser("publish", help="publish a PR atomically")
+    p.add_argument("id", type=int)
+    p.add_argument("--mode", default=None)
+
+    p = sub.add_parser("revert-pr", help="inverse-Δ revert of a publish")
+    p.add_argument("id", type=int)
+
+    p = sub.add_parser("revert", help="apply inverse Δ(from -> to)")
+    p.add_argument("table")
+    p.add_argument("from_ref")
+    p.add_argument("to_ref")
+
+    p = sub.add_parser("restore", help="git reset --hard to a ref")
+    p.add_argument("table")
+    p.add_argument("ref")
+
+    p = sub.add_parser("log", help="commit history of a table")
+    p.add_argument("table")
+    p.add_argument("-n", "--limit", type=int, default=None)
+
+    for name, help_ in (("branches", "list branches"),
+                        ("snapshots", "list snapshots"),
+                        ("prs", "list pull requests"),
+                        ("tables", "list tables"),
+                        ("status", "full repo summary"),
+                        ("gc", "mark-sweep garbage collection")):
+        sub.add_parser(name, help=help_)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        if args.cmd == "init":
+            if os.path.exists(args.store):
+                print(f"error: store {args.store} already exists "
+                      "(delete it to start fresh)", file=sys.stderr)
+                return 2
+            save_repo(args.store, Repo())
+            print(f"initialized empty store at {args.store}")
+            return 0
+        if not os.path.exists(args.store):
+            # a typo'd --store must not silently create a store elsewhere
+            print(f"error: no store at {args.store} — run `init` first "
+                  "(or point --store/$VCS_STORE at the right file)",
+                  file=sys.stderr)
+            return 2
+        repo = load_repo(args.store)
+        if args.cmd == "seed":
+            print(seed_table(repo, args.table, args.rows, args.seed,
+                             args.nopk))
+        elif args.cmd == "mutate":
+            print(mutate_table(repo, args.table, args.rows, args.seed))
+        elif args.cmd == "sql":
+            checks_failed = False
+            for res in execute_script(repo, args.statements):
+                print(res.message)
+                if res.kind == "check_pr" and any(not c.ok
+                                                  for c in res.data):
+                    checks_failed = True
+            save_repo(args.store, repo)
+            # same shell-gateable contract as `dg pr check`: a failing
+            # check run exits 1 (after persisting the script's mutations)
+            return 1 if checks_failed else 0
+        else:
+            stmt = _compile(args, repo)
+            res = execute(repo, stmt)
+            print(res.message)
+            if res.kind == "check_pr" and any(not c.ok for c in res.data):
+                # a failing CI check must be shell-gateable:
+                # `dg pr check N && deploy` has only the exit code
+                return 1
+            if args.cmd == "gc":
+                # GC is deliberately un-WAL-logged (replay keeps more
+                # garbage but identical logical state) — for a WAL-backed
+                # store that makes freeing per-process, so say so
+                print("note: the store is a replayed WAL — freed objects "
+                      "re-materialize on the next load; gc reclaims "
+                      "memory for this process only")
+        # pr check is read-only too: the preview rolls its oids back and
+        # logs nothing, so rewriting the store would be pure wasted I/O
+        if args.cmd not in _READ_ONLY and not (
+                args.cmd == "pr" and args.pr_cmd == "check"):
+            save_repo(args.store, repo)
+        return 0
+    except (*_TYPED_ERRORS, ValueError, KeyError) as exc:
+        msg = exc.args[0] if exc.args else str(exc)
+        if isinstance(exc, _TYPED_ERRORS):
+            print(f"error: {msg}", file=sys.stderr)
+        else:
+            # a bare ValueError/KeyError may be a legitimate user error
+            # ("branch exists", "PR is closed") OR an internal bug —
+            # surface the class so the two are distinguishable
+            print(f"error [{type(exc).__name__}]: {msg}", file=sys.stderr)
+            if os.environ.get("VCS_DEBUG"):
+                raise
+        suggestions = getattr(exc, "suggestions", ())
+        if suggestions:
+            print("hint: " + " | ".join(map(str, suggestions)),
+                  file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,311 @@
+"""Ref grammar + resolver (ISSUE 5): round-trip property, one-resolver
+semantics, unified typed errors, and the no-legacy-resolver source gate."""
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conftest import VCS_SCHEMA as SCH
+from conftest import kv_batch as _batch
+from repro.core import (AmbiguousRefError, Repo, RefSyntaxError,
+                        UnknownRefError, parse_ref)
+from repro.core.refs import (AtRef, BareRef, BranchRef, HeadRef, PrRef,
+                             RelRef, SnapRef, TsRef, format_ref, resolve)
+
+
+def mk_repo():
+    r = Repo()
+    r.create_table("t", SCH)
+    r.create_table("u", SCH)
+    r.insert("t", _batch([1, 2, 3]))
+    r.insert("u", _batch([10]))
+    r.tag("night", "t")
+    r.branch("dev", ["t"])
+    return r
+
+
+# ------------------------------------------------------ round-trip property
+
+_NAMES = ["t", "dev", "night", "a_b", "x.y", "ns/tab", "T-2", "z9"]
+
+
+def _every_ref_form(names, ints):
+    """One instance of every AST form per (name, int) pair."""
+    for name, n in zip(names, ints):
+        yield HeadRef()
+        yield BranchRef(name)
+        yield SnapRef(name)
+        yield TsRef(n)
+        yield AtRef(name, n)
+        yield RelRef(name, n)
+        yield PrRef(n, ("base", "head", "merged")[n % 3])
+        yield BareRef(name)
+
+
+def test_parse_format_parse_roundtrips_every_form():
+    """parse(format(r)) == r for every AST form (the format is canonical),
+    and format is a fixed point: format(parse(format(r))) == format(r)."""
+    rng = np.random.default_rng(5)
+    names = list(_NAMES) * 4
+    ints = rng.integers(0, 10_000, size=len(names)).tolist()
+    seen = 0
+    for ref in _every_ref_form(names, ints):
+        text = format_ref(ref)
+        again = parse_ref(text)
+        assert again == ref, (text, ref, again)
+        assert format_ref(again) == text
+        seen += 1
+    assert seen >= 8 * len(names)
+
+
+def test_parse_text_forms():
+    assert parse_ref("HEAD") == HeadRef()
+    assert parse_ref("branch:dev") == BranchRef("dev")
+    assert parse_ref("snap:nightly") == SnapRef("nightly")
+    assert parse_ref("ts:12345") == TsRef(12345)
+    assert parse_ref("orders@{42}") == AtRef("orders", 42)
+    assert parse_ref("orders~2") == RelRef("orders", 2)
+    assert parse_ref("pr:3:base") == PrRef(3, "base")
+    assert parse_ref("pr:3") == PrRef(3, "head")     # role defaults to head
+    assert parse_ref("main") == BareRef("main")
+    for bad in ("", "ts:abc", "pr:x", "pr:3:sideways", "a b", "@{5}",
+                "orders~", "orders@{}", 42):
+        with pytest.raises(RefSyntaxError):
+            parse_ref(bad)
+
+
+def test_roundtrip_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    name = st.from_regex(r"[A-Za-z_][A-Za-z0-9_.\-/]{0,12}", fullmatch=True)
+
+    @hyp.given(name=name, n=st.integers(0, 10**9),
+               form=st.integers(0, 7))
+    @hyp.settings(max_examples=200, deadline=None)
+    def prop(name, n, form):
+        ref = list(_every_ref_form([name], [n]))[form]
+        assert parse_ref(format_ref(ref)) == ref
+
+    prop()
+
+
+# ------------------------------------------------------- resolver semantics
+
+def test_resolver_every_form_resolves():
+    r = mk_repo()
+    e = r.engine
+    # HEAD with table context
+    assert r.resolve("HEAD", table="t").snapshot.directory is \
+        e.table("t").directory
+    # branch ref maps logical -> physical
+    rr = r.resolve("branch:dev", table="t")
+    assert rr.table == "dev/t"
+    # bare branch / bare snapshot / bare table
+    assert r.resolve("dev", table="t").table == "dev/t"
+    assert r.resolve("night").snapshot is e.snapshots["night"]
+    assert r.resolve("u").table == "u"
+    # ts: and @-form agree with the PITR index
+    s1 = r.resolve("ts:1", table="t").snapshot
+    s2 = r.resolve("t@{1}").snapshot
+    assert s1.directory.data_oids == s2.directory.data_oids
+    # relative history: ~0 is head, ~1 one version back
+    assert r.resolve("t~0").snapshot.directory is e.table("t").directory
+    r.insert("t", _batch([4]))
+    assert r.resolve("t~1").snapshot.directory.data_oids != \
+        r.resolve("t~0").snapshot.directory.data_oids
+
+
+def test_resolver_pr_roles():
+    r = mk_repo()
+    r.update_by_keys("dev/t", _batch([2], vals=[9.0]))
+    pr = r.open_pr("dev")
+    base = r.resolve(f"pr:{pr.id}:base").snapshot
+    assert base.directory.data_oids == pr.base_pins["t"].directory.data_oids
+    head = r.resolve(f"pr:{pr.id}:head")
+    assert head.table == "dev/t"
+    with pytest.raises(UnknownRefError):      # not published yet
+        r.resolve(f"pr:{pr.id}:merged")
+    r.publish(pr.id)
+    merged = r.resolve(f"pr:{pr.id}:merged").snapshot
+    assert merged.directory.data_oids == \
+        pr.post_publish["t"].directory.data_oids
+
+
+def test_bare_name_ambiguity_and_suggestions():
+    r = mk_repo()
+    # a branch and a snapshot sharing one name must not resolve silently
+    r.tag("dev", "u")
+    with pytest.raises(AmbiguousRefError) as exc:
+        r.resolve("dev", table="t")
+        pytest.fail("ambiguous bare name resolved")
+    assert "branch:dev" in str(exc.value) and "snap:dev" in str(exc.value)
+    # unknown names carry did-you-mean candidates
+    with pytest.raises(UnknownRefError) as exc:
+        r.resolve("nigth")
+    assert "night" in exc.value.suggestions
+    with pytest.raises(UnknownRefError) as exc:
+        r.resolve("snap:nigth")
+    assert "night" in exc.value.suggestions
+
+
+def test_context_required_forms():
+    r = mk_repo()
+    for ref in ("HEAD", "ts:1", "branch:dev"):
+        with pytest.raises(UnknownRefError):
+            r.resolve(ref)                     # no table context
+    with pytest.raises(UnknownRefError):
+        r.resolve("branch:dev", table="u")     # branch has no such table
+    with pytest.raises(UnknownRefError):
+        r.resolve("t~99")                      # history shorter than that
+
+
+# ------------------------------------------------- unified error behavior
+
+def test_all_resolution_errors_are_unknownref():
+    """The ISSUE 5 bugfix: engine.revert / workspace revert / clone_table /
+    drop_snapshot / branch ops raise UnknownRefError (a KeyError) carrying
+    the ref text — never a mixed bare KeyError/ValueError."""
+    r = mk_repo()
+    e = r.engine
+    cases = [
+        lambda: e.revert("missing", "night", "night"),
+        lambda: e.revert("t", "snap:missing", "night"),
+        lambda: e.clone_table("c1", "missing_snap"),
+        lambda: e.drop_snapshot("missing"),
+        lambda: e.create_branch("b2", ["missing_table"]),
+        lambda: e.create_branch("b2", ["t"], from_ref="missing_branch"),
+        lambda: e.drop_branch("missing"),
+        lambda: e.open_pr(None, "missing"),
+        lambda: e.restore_table("t", "snap:missing"),
+        lambda: e.restore_table("missing_table", "night"),
+        lambda: e.drop_table("missing_table"),
+        lambda: e.create_snapshot("s2", "missing_table"),
+        lambda: r.pr(99),
+        lambda: r.log("missing"),
+    ]
+    for fn in cases:
+        with pytest.raises(UnknownRefError) as exc:
+            fn()
+        assert isinstance(exc.value, KeyError)
+        assert exc.value.ref                      # carries the ref text
+
+
+def test_legacy_shims_still_resolve():
+    """resolve_snapshot/snapshot_at survive as deprecation shims over the
+    one resolver (old callers keep working, new errors are typed)."""
+    r = mk_repo()
+    e = r.engine
+    assert e.resolve_snapshot("night") is e.snapshots["night"]
+    snap = e.resolve_snapshot(e.snapshots["night"])
+    assert snap is e.snapshots["night"]
+    assert e.snapshot_at("t", 1).directory.data_oids == \
+        r.resolve("t@{1}").snapshot.directory.data_oids
+    with pytest.raises(KeyError):
+        e.resolve_snapshot("missing")
+
+
+def test_no_nonshim_code_calls_legacy_resolvers():
+    """CI gate (also enforced here): no non-shim code under src/, examples/
+    or benchmarks/ calls .resolve_snapshot( / .snapshot_at( — everything
+    routes through core.refs. The shim *definitions* in engine.py are the
+    single allowed site."""
+    root = Path(__file__).resolve().parent.parent
+    pat = re.compile(r"\.(resolve_snapshot|snapshot_at)\(")
+    offenders = []
+    for sub in ("src", "examples", "benchmarks"):
+        for p in sorted((root / sub).rglob("*.py")):
+            for i, line in enumerate(p.read_text().splitlines(), 1):
+                if pat.search(line) and not line.lstrip().startswith("#"):
+                    offenders.append(f"{p.relative_to(root)}:{i}: "
+                                     f"{line.strip()}")
+    assert not offenders, "\n".join(offenders)
+
+
+def test_creation_names_must_be_speakable_in_the_grammar():
+    """A snapshot/branch the ref grammar cannot parse would be unreachable
+    through every surface — creation rejects such names up front."""
+    r = mk_repo()
+    for bad in ("2024-nightly", "a b", "x@y", "x~1", ""):
+        with pytest.raises(ValueError):
+            r.engine.create_snapshot(bad, "t")
+        with pytest.raises(ValueError):
+            r.engine.create_branch(bad, ["t"])
+    # every accepted name round-trips through resolution
+    r.engine.create_snapshot("v1.2-rc/x", "t")
+    assert r.resolve("snap:v1.2-rc/x").table == "t"
+    # replay is exempt: a pre-grammar WAL with a now-illegal name (old
+    # code validated nothing) must still load
+    from repro.core import Engine, WAL
+    r.engine.wal.append("snapshot", name="2024-nightly", table="t")
+    e2 = Engine.replay(WAL.deserialize(r.engine.wal.serialize()))
+    assert "2024-nightly" in e2.snapshots
+
+
+def test_legacy_shim_keeps_snapshot_namespace_priority():
+    """engine.resolve_snapshot was a snapshots-only dict lookup — a bare
+    name that IS a snapshot must keep resolving even when a table/branch
+    shares it (new callers use Repo.resolve, where the same bare name is
+    a typed ambiguity)."""
+    r = mk_repo()
+    r.tag("t", "u")                  # snapshot named like table "t"
+    assert r.engine.resolve_snapshot("t") is r.engine.snapshots["t"]
+    with pytest.raises(AmbiguousRefError):
+        r.resolve("t")
+
+
+def test_trunk_synthesis_excludes_index_aux_tables():
+    """Default-tables branching must not clone internal index aux tables
+    as first-class user tables (the clone would never be maintained)."""
+    from repro.core.indices import create_index
+    r = mk_repo()
+    spec = create_index(r.engine, "t", "byv", ["v"])
+    br = r.branch("withidx")
+    assert spec.aux_table in r.engine.tables
+    assert spec.aux_table not in br.tables
+    assert "t" in br.tables and "u" in br.tables
+
+
+def test_repo_branch_default_tables_with_main_collision():
+    """repo.branch defaults its table set from the trunk even when a
+    table named 'main' exists (branch-only position skips bare-name
+    ambiguity)."""
+    r = mk_repo()
+    r.create_table("main", SCH)
+    br = r.branch("dev2")
+    assert "u" in br.tables and "main" in br.tables
+
+
+def test_as_branch_ambiguity_lists_every_reading():
+    from repro.core.refs import as_branch
+    r = mk_repo()
+    r.tag("x", "t")
+    r.create_table("x", SCH)
+    r.engine.create_branch("x", ["t"])
+    with pytest.raises(AmbiguousRefError) as exc:
+        as_branch(r.engine, "x")
+    assert set(exc.value.suggestions) == {"branch:x", "snap:x", "table 'x'"}
+
+
+# --------------------------------------------------------- log determinism
+
+def test_repo_log_and_listing_determinism():
+    r = mk_repo()
+    r.update_by_keys("dev/t", _batch([2], vals=[5.0]))
+    pr = r.open_pr("dev")
+    r.publish(pr.id)
+    log = r.log("t")
+    # newest first, kinds tagged, create at the tail
+    assert [rec.kind for rec in log] == ["publish", "commit", "create"]
+    assert log[0].inserted == 1 and log[0].deleted == 1
+    assert log[0].ts > log[1].ts
+    assert r.log("t", limit=2) == log[:2]
+    # branch-physical tables log too (clone entry from branch creation)
+    assert [rec.kind for rec in r.log("dev/t")][-1] == "clone"
+    # deterministic listings with created-at ts
+    assert r.branches() == [("dev", 2, ("t",))]
+    assert r.snapshots() == [("night", "t", 2)]
+    # a WAL-replayed engine carries the identical commit log
+    from repro.core import WAL, Engine
+    e2 = Engine.replay(WAL.deserialize(r.engine.wal.serialize()))
+    assert e2.commit_log == r.engine.commit_log

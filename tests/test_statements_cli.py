@@ -1,0 +1,439 @@
+"""Golden parity (ISSUE 5): one workflow, three surfaces.
+
+The SAME branch -> PR -> publish -> revert -> merge -> clone -> gc workflow
+is driven through (a) the ``Repo`` Python API, (b) the statement layer, and
+(c) the ``datagit`` CLI (each invocation replaying its WAL store file) —
+and must produce byte-identical table scans (GOLDEN_APPLY-style content
+digests), identical engine timestamps, and identical commit logs. A WAL
+replay of the statement-driven session must reproduce the same state.
+"""
+import numpy as np
+import pytest
+
+from conftest import content_digest as digest
+from repro import vcs_cli
+from repro.core import Engine, Repo, WAL
+from repro.core.statements import (StatementError, execute, execute_script)
+
+
+# --------------------------------------------------------------------------
+# one workflow, three drivers
+# --------------------------------------------------------------------------
+# Each step is (python_fn, statement, cli_argv). DML steps (seed/mutate)
+# share the CLI's deterministic helpers on every surface, so any divergence
+# is the porcelain's fault, not the data's.
+
+def _init_store(tmp_path) -> str:
+    store = str(tmp_path / "s.wal")
+    assert vcs_cli.main(["--store", store, "init"]) == 0
+    return store
+
+
+def _steps():
+    return [
+        (lambda r: vcs_cli.seed_table(r, "orders", 500, 0),
+         None, ["seed", "orders", "--rows", "500", "--seed", "0"]),
+        (lambda r: r.tag("night", "orders"),
+         "CREATE SNAPSHOT night FOR TABLE orders",
+         ["snapshot", "night", "orders"]),
+        (lambda r: r.branch("dev", ["orders"]),
+         "CREATE BRANCH dev FOR (orders)",
+         ["branch", "dev", "-t", "orders"]),
+        (lambda r: vcs_cli.mutate_table(r, "dev/orders", 40, 7),
+         None, ["mutate", "dev/orders", "--rows", "40", "--seed", "7"]),
+        (lambda r: r.diff("branch:dev", "HEAD", table="orders"),
+         "DIFF 'branch:dev' AGAINST 'HEAD' FOR TABLE orders",
+         ["diff", "branch:dev", "HEAD", "--table", "orders"]),
+        (lambda r: r.open_pr("dev"),
+         "OPEN PR FROM dev INTO main",
+         ["pr", "open", "dev", "--into", "main"]),
+        (lambda r: r.check(1),
+         "CHECK PR 1", ["pr", "check", "1"]),
+        (lambda r: r.publish(1),
+         "PUBLISH PR 1", ["publish", "1"]),
+        (lambda r: r.log("orders"),
+         "LOG TABLE orders", ["log", "orders"]),
+        (lambda r: r.revert_pr(1),
+         "REVERT PR 1", ["revert-pr", "1"]),
+        (lambda r: vcs_cli.mutate_table(r, "dev/orders", 10, 11),
+         None, ["mutate", "dev/orders", "--rows", "10", "--seed", "11"]),
+        (lambda r: r.merge("branch:dev", "branch:main", mode="theirs"),
+         "MERGE BRANCH dev INTO main MODE theirs",
+         ["merge", "dev", "main", "--mode", "theirs"]),
+        (lambda r: r.clone("orders_night", "snap:night"),
+         "CLONE TABLE orders_night FROM 'snap:night'",
+         ["clone", "orders_night", "snap:night"]),
+        (lambda r: r.revert("orders", "orders~1", "HEAD"),
+         "REVERT TABLE orders FROM 'orders~1' TO 'HEAD'",
+         ["revert", "orders", "orders~1", "HEAD"]),
+        (lambda r: r.gc(),
+         "GC", ["gc"]),
+        (lambda r: r.status(),
+         "STATUS", ["status"]),
+    ]
+
+
+def _drive_python() -> Repo:
+    r = Repo()
+    for py, _, _ in _steps():
+        py(r)
+    return r
+
+
+def _drive_statements() -> Repo:
+    r = Repo()
+    for py, stmt, _ in _steps():
+        if stmt is None:
+            py(r)                 # DML rides the same deterministic helper
+        else:
+            execute(r, stmt)
+    return r
+
+
+def _drive_cli(tmp_path) -> Repo:
+    store = str(tmp_path / "store.wal")
+    assert vcs_cli.main(["--store", store, "init"]) == 0
+    for _, _, argv in _steps():
+        assert vcs_cli.main(["--store", store] + argv) == 0, argv
+    return vcs_cli.load_repo(store)
+
+
+def _fingerprint(repo: Repo):
+    e = repo.engine
+    return {
+        "ts": e.ts,
+        "tables": {n: digest(e, n) for n in sorted(e.tables)},
+        "log": e.commit_log,
+        "branches": repo.branches(),
+        "snapshots": repo.snapshots(),
+        "prs": [(i, p.base_name, p.head_name, p.status)
+                for i, p in sorted(e.prs.items())],
+    }
+
+
+def test_golden_three_surface_parity(tmp_path):
+    fp_py = _fingerprint(_drive_python())
+    fp_stmt = _fingerprint(_drive_statements())
+    fp_cli = _fingerprint(_drive_cli(tmp_path))
+    assert fp_py == fp_stmt, "python vs statement surface diverged"
+    assert fp_py == fp_cli, "python vs CLI surface diverged"
+
+
+def test_statement_session_wal_replays_identically():
+    r = _drive_statements()
+    e2 = Engine.replay(WAL.deserialize(r.engine.wal.serialize()))
+    assert _fingerprint(Repo(e2)) == _fingerprint(r)
+
+
+# --------------------------------------------------------------------------
+# statement layer details
+# --------------------------------------------------------------------------
+
+def test_execute_script_and_messages():
+    r = Repo()
+    vcs_cli.seed_table(r, "t", 50, 0)
+    out = execute_script(
+        r, "CREATE SNAPSHOT s FOR TABLE t; CREATE BRANCH d FOR (t); "
+           "SHOW BRANCHES; STATUS")
+    assert [o.kind for o in out] == ["create_snapshot", "create_branch",
+                                    "show", "status"]
+    assert "branch d created" in out[1].message
+    assert all(o.message for o in out)
+
+
+def test_statement_errors_are_typed_with_suggestions():
+    r = Repo()
+    vcs_cli.seed_table(r, "t", 10, 0)
+    with pytest.raises(StatementError) as exc:
+        execute(r, "MERG BRANCH a INTO b")
+    assert "MERGE" in exc.value.suggestions
+    with pytest.raises(StatementError):
+        execute(r, "DIFF TABLE t")             # missing AGAINST
+    with pytest.raises(StatementError):
+        execute(r, "PUBLISH PR notanumber")
+    with pytest.raises(StatementError):
+        execute(r, "CREATE BRANCH b FOR (t) trailing")
+    from repro.core import UnknownRefError
+    with pytest.raises(UnknownRefError):       # ref errors pass through
+        execute(r, "DIFF TABLE t AGAINST 'snap:missing'")
+
+
+def test_diff_table_statement_direction():
+    """DIFF TABLE t AGAINST 'ref' reads like git diff ref..HEAD: positive
+    groups are rows added since the ref."""
+    r = Repo()
+    vcs_cli.seed_table(r, "t", 20, 0)
+    execute(r, "CREATE SNAPSHOT s FOR TABLE t")
+    r.insert("t", vcs_cli._demo_batch(np.arange(20, 25), 1))
+    d = execute(r, "DIFF TABLE t AGAINST 'snap:s'").data
+    assert int((d.diff_cnt > 0).sum()) == 5
+    assert int((d.diff_cnt < 0).sum()) == 0
+
+
+def test_statement_conflict_modes_alias():
+    """MODE ours keeps the target's rows, MODE theirs takes the source's —
+    aliases over ConflictMode.SKIP/ACCEPT."""
+    for mode, want in (("ours", 1.0), ("theirs", 2.0)):
+        r = Repo()
+        r.create_table("t", vcs_cli.DEMO_SCHEMA)
+        r.insert("t", {"k": np.asarray([1]), "v": np.asarray([0.0]),
+                       "doc": [b"x"]})
+        execute(r, "CREATE BRANCH d FOR (t)")
+        r.update_by_keys("t", {"k": np.asarray([1]),
+                               "v": np.asarray([1.0]), "doc": [b"x"]})
+        r.update_by_keys("d/t", {"k": np.asarray([1]),
+                                 "v": np.asarray([2.0]), "doc": [b"x"]})
+        execute(r, f"MERGE BRANCH d INTO main MODE {mode}")
+        batch, _ = r.table("t").scan()
+        assert batch["v"].tolist() == [want], mode
+
+
+def test_branch_merge_is_atomic_multi_table():
+    """MERGE BRANCH with several tables lands at ONE commit timestamp."""
+    r = Repo()
+    vcs_cli.seed_table(r, "a", 30, 0)
+    vcs_cli.seed_table(r, "b", 30, 1)
+    execute(r, "CREATE BRANCH d FOR (a, b)")
+    vcs_cli.mutate_table(r, "d/a", 5, 2)
+    vcs_cli.mutate_table(r, "d/b", 5, 3)
+    reports = execute(r, "MERGE BRANCH d INTO main").data
+    assert set(reports) == {"a", "b"}
+    assert reports["a"].commit_ts == reports["b"].commit_ts is not None
+    assert r.engine.table("a").directory.ts == \
+        r.engine.table("b").directory.ts == reports["a"].commit_ts
+
+
+# --------------------------------------------------------------------------
+# CLI details
+# --------------------------------------------------------------------------
+
+def test_cli_error_exit_code_and_hint(tmp_path, capsys):
+    store = _init_store(tmp_path)
+    assert vcs_cli.main(["--store", store, "seed", "orders",
+                         "--rows", "20"]) == 0
+    assert vcs_cli.main(["--store", store, "snapshot", "night",
+                         "orders"]) == 0
+    rc = vcs_cli.main(["--store", store, "diff", "snap:nigt", "HEAD",
+                       "--table", "orders"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert "no snapshot" in err and "night" in err
+
+
+def test_cli_sql_subcommand_persists_mutations(tmp_path):
+    """Mutating statements through the raw `sql` door must hit the store
+    exactly like their dedicated subcommands (regression: sql was treated
+    as read-only and its WAL silently dropped)."""
+    store = _init_store(tmp_path)
+    assert vcs_cli.main(["--store", store, "seed", "orders",
+                         "--rows", "20"]) == 0
+    assert vcs_cli.main(["--store", store, "sql",
+                         "CREATE BRANCH dev FOR (orders); "
+                         "CREATE SNAPSHOT night FOR TABLE orders"]) == 0
+    r = vcs_cli.load_repo(store)
+    assert [b[0] for b in r.branches()] == ["dev"]
+    assert [s[0] for s in r.snapshots()] == ["night"]
+
+
+def test_tag_refuses_non_head_with_clean_error():
+    """Tagging a historical ref raises the intended ValueError (regression:
+    the error path str.format()'ed the ref text and blew up in IndexError
+    on @{ts} refs)."""
+    r = Repo()
+    vcs_cli.seed_table(r, "t", 10, 0)
+    r.insert("t", vcs_cli._demo_batch(np.arange(10, 12), 1))
+    with pytest.raises(ValueError, match="not the current head"):
+        r.tag("old", "t~1")
+    with pytest.raises(ValueError, match="not the current head"):
+        r.tag("old", "t@{1}")
+    # plain table name and statement form still tag the head
+    assert r.tag("head1", "t").table == "t"
+    execute(r, "CREATE SNAPSHOT head2 FOR TABLE t")
+    # head-ness is by content: after restore, the restored-to snapshot's
+    # object set IS the head again even though the Directory was rebuilt
+    r.restore("t", "t~1")
+    r.tag("head3", "t~0")
+
+
+def test_cli_pr_check_exit_code_gates(tmp_path, capsys):
+    """`dg pr check N` must be shell-gateable: exit 1 when the check run
+    reports a failure (here the synthetic merge-conflict check)."""
+    store = _init_store(tmp_path)
+    vcs_cli.main(["--store", store, "seed", "t", "--rows", "30"])
+    vcs_cli.main(["--store", store, "branch", "dev", "-t", "t"])
+    vcs_cli.main(["--store", store, "mutate", "dev/t", "--rows", "5",
+                  "--seed", "1"])
+    vcs_cli.main(["--store", store, "pr", "open", "dev"])
+    assert vcs_cli.main(["--store", store, "pr", "check", "1"]) == 0
+    # conflicting base edit -> the merge preview fails the check run
+    vcs_cli.main(["--store", store, "mutate", "t", "--rows", "5",
+                  "--seed", "2"])
+    rc = vcs_cli.main(["--store", store, "pr", "check", "1"])
+    out = capsys.readouterr().out
+    assert rc == 1 and "FAILED" in out
+
+
+def test_cli_sql_check_exit_code_gates(tmp_path, capsys):
+    """CHECK PR through the raw sql door obeys the same shell-gateable
+    contract as `dg pr check` (regression: sql branch ignored check
+    outcomes)."""
+    store = _init_store(tmp_path)
+    vcs_cli.main(["--store", store, "seed", "t", "--rows", "30"])
+    vcs_cli.main(["--store", store, "branch", "dev", "-t", "t"])
+    vcs_cli.main(["--store", store, "mutate", "dev/t", "--rows", "5",
+                  "--seed", "1"])
+    vcs_cli.main(["--store", store, "mutate", "t", "--rows", "5",
+                  "--seed", "2"])
+    vcs_cli.main(["--store", store, "pr", "open", "dev"])
+    rc = vcs_cli.main(["--store", store, "sql",
+                       "CREATE SNAPSHOT pre FOR TABLE t; CHECK PR 1"])
+    assert rc == 1
+    # mutations before the failing check still persisted
+    assert [s[0] for s in vcs_cli.load_repo(store).snapshots()] == ["pre"]
+
+
+def test_cli_merge_accepts_qualified_branch_refs(tmp_path):
+    """`dg merge branch:dev branch:main` (the qualified spelling the diff
+    subcommand documents) must not double-prefix into branch:branch:dev."""
+    store = _init_store(tmp_path)
+    vcs_cli.main(["--store", store, "seed", "t", "--rows", "20"])
+    vcs_cli.main(["--store", store, "branch", "dev", "-t", "t"])
+    vcs_cli.main(["--store", store, "mutate", "dev/t", "--rows", "3",
+                  "--seed", "1"])
+    assert vcs_cli.main(["--store", store, "merge", "branch:dev",
+                         "branch:main", "--mode", "theirs"]) == 0
+    # -t on a non-branch merge is an error, not silently dropped
+    vcs_cli.main(["--store", store, "snapshot", "s", "t"])
+    assert vcs_cli.main(["--store", store, "merge", "snap:s", "t",
+                         "-t", "t"]) == 2
+
+
+def test_cli_rejects_keyword_injection_in_name_positions(tmp_path, capsys):
+    """Unquoted name args must not be reinterpretable as statement syntax
+    (regression: `dg branch "dev FOR (prod)"` silently branched prod)."""
+    store = _init_store(tmp_path)
+    vcs_cli.main(["--store", store, "seed", "prod", "--rows", "10"])
+    assert vcs_cli.main(["--store", store, "branch",
+                         "dev FOR (prod)"]) == 2
+    assert "invalid branch name" in capsys.readouterr().err
+    assert vcs_cli.load_repo(store).branches() == []
+    assert vcs_cli.main(["--store", store, "log", "prod LIMIT 1"]) == 2
+
+
+def test_legacy_shim_prefers_snapshots_and_survives_pregrammar_names():
+    """resolve_snapshot keeps the snapshots-only contract for bare names:
+    a bare table name raises (existence probes must not match tables),
+    and a pre-grammar name from an old WAL still resolves."""
+    r = Repo()
+    vcs_cli.seed_table(r, "t", 10, 0)
+    with pytest.raises(KeyError):
+        r.engine.resolve_snapshot("t")        # table, not a snapshot
+    # pre-grammar snapshot names smuggled in via replay-style creation:
+    # unparseable AND qualified-looking ones must hit the dict, never a
+    # grammar reinterpretation (a tag literally named "t~1" is the tag,
+    # not PITR one-version-back)
+    r.engine.create_snapshot("night ly", "t", _log=False)
+    assert r.engine.resolve_snapshot("night ly").table == "t"
+    r.engine.create_snapshot("t~1", "t", _log=False)
+    assert r.engine.resolve_snapshot("t~1") is r.engine.snapshots["t~1"]
+    # checkpoint restore: the exact tag wins over a branch sharing the
+    # name (dict-first rule in vcs_ckpt.restore, driven for real)
+    jax = pytest.importorskip("jax")
+    from repro.checkpoint.vcs_ckpt import VcsCheckpointer
+    ck = VcsCheckpointer(r.engine, table="ckpt")
+    state = {"w": np.arange(8, dtype=np.float32)}
+    ck.save(state, step=1)                    # tags snapshot "step-1"
+    r.engine.create_branch("step-1", ["t"])   # colliding branch name
+    out = ck.restore("step-1", state)
+    assert np.array_equal(out["w"], state["w"])
+
+
+def test_merge_into_table_wins_over_branch_name_collision():
+    """MERGE ... INTO TABLE x stays resolvable when a branch named x
+    exists — the explicit table position prefers the table reading."""
+    r = Repo()
+    vcs_cli.seed_table(r, "x", 10, 0)
+    r.tag("s", "x")
+    r.engine.create_branch("x", ["x"])     # branch sharing the name
+    rep = execute(r, "MERGE 'snap:s' INTO TABLE x MODE theirs").data
+    assert rep.inserted == 0 and rep.deleted == 0
+
+
+def test_branch_merge_disjoint_tables_is_an_error():
+    r = Repo()
+    vcs_cli.seed_table(r, "a", 10, 0)
+    vcs_cli.seed_table(r, "b", 10, 1)
+    execute(r, "CREATE BRANCH x FOR (a)")
+    execute(r, "CREATE BRANCH y FOR (b)")
+    with pytest.raises(ValueError, match="share no tables"):
+        execute(r, "MERGE BRANCH x INTO y")
+
+
+def test_cli_pkviolation_is_a_clean_error(tmp_path, capsys):
+    """Engine data errors (PKViolation/TxnConflict) follow the error:/exit-2
+    contract instead of crashing with a traceback."""
+    store = _init_store(tmp_path)
+    assert vcs_cli.main(["--store", store, "seed", "t", "--rows", "5"]) == 0
+    rc = vcs_cli.main(["--store", store, "seed", "t", "--rows", "5"])
+    assert rc == 2
+    assert "error:" in capsys.readouterr().err
+
+
+def test_table_position_wins_over_name_collision():
+    """LOG TABLE t / REVERT TABLE t / MERGE ... INTO TABLE t stay
+    unambiguous when a snapshot shares the table's name (regression:
+    table positions resolved as bare refs -> AmbiguousRefError)."""
+    r = Repo()
+    vcs_cli.seed_table(r, "orders", 30, 0)
+    r.tag("orders", "orders")          # snapshot named like the table
+    assert [e.kind for e in r.log("orders")][-1] == "create"
+    assert execute(r, "LOG TABLE orders").data
+    vcs_cli.mutate_table(r, "orders", 5, 1)
+    execute(r, "REVERT TABLE orders FROM 'orders~1' TO 'HEAD'")
+    execute(r, "MERGE 'snap:orders' INTO TABLE orders MODE theirs")
+
+
+def test_cli_torn_store_tail_is_dropped_not_appended_after(tmp_path,
+                                                           capsys):
+    """A crash-torn trailing frame (even a 1-2 byte tear, which pickle
+    reports as EOFError like clean EOF) must be truncated before the next
+    append — appending after garbage bricks the store permanently."""
+    store = _init_store(tmp_path)
+    assert vcs_cli.main(["--store", store, "seed", "t", "--rows", "10"]) == 0
+    with open(store, "ab") as f:
+        f.write(b"\x80")                      # torn frame: 1 stray byte
+    assert vcs_cli.main(["--store", store, "branch", "dev",
+                         "-t", "t"]) == 0
+    assert "torn trailing frame" in capsys.readouterr().err
+    # the store stays loadable and carries the new op
+    r = vcs_cli.load_repo(store)
+    assert [b[0] for b in r.branches()] == ["dev"]
+
+
+def test_cli_missing_store_is_an_error(tmp_path, capsys):
+    """Non-init commands refuse a nonexistent store (a typo'd --store must
+    not silently create a fresh store at the wrong path)."""
+    store = str(tmp_path / "strore.wal")      # deliberate typo
+    rc = vcs_cli.main(["--store", store, "seed", "orders", "--rows", "5"])
+    assert rc == 2
+    assert "no store at" in capsys.readouterr().err
+    import os
+    assert not os.path.exists(store)
+
+
+def test_cli_store_persists_and_replays(tmp_path):
+    store = _init_store(tmp_path)
+    vcs_cli.main(["--store", store, "seed", "t", "--rows", "30"])
+    vcs_cli.main(["--store", store, "branch", "dev", "-t", "t"])
+    vcs_cli.main(["--store", store, "mutate", "dev/t", "--rows", "5",
+                  "--seed", "3"])
+    r1 = vcs_cli.load_repo(store)
+    # read-only commands do not rewrite the store
+    import os
+    mtime = os.path.getmtime(store)
+    assert vcs_cli.main(["--store", store, "status"]) == 0
+    assert vcs_cli.main(["--store", store, "log", "t"]) == 0
+    assert os.path.getmtime(store) == mtime
+    r2 = vcs_cli.load_repo(store)
+    assert digest(r1.engine, "dev/t") == digest(r2.engine, "dev/t")
+    assert r1.engine.ts == r2.engine.ts
