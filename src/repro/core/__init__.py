@@ -10,6 +10,9 @@ Public API:
     snapshot_diff, sql_diff, DiffResult
     three_way_merge, two_way_merge, ConflictMode, MergeReport
     compact_table, compact_objects
+    fsck, FsckReport     — integrity verification and salvage
+    FaultPlan, inject, InjectedCrash — deterministic crash injection
+    TornFrame, CorruptFrame, StoreVersionError — typed durable-format errors
 """
 from .schema import CType, Column, Schema                      # noqa: F401
 from .directory import Directory, Snapshot                     # noqa: F401
@@ -22,7 +25,11 @@ from .merge import (ConflictMode, MergeConflictError, MergeReport,  # noqa: F401
                     ThreeWayDiff, plan_merge, three_way_diff,
                     three_way_merge, two_way_merge)
 from .compaction import compact_objects, compact_table         # noqa: F401
-from .wal import WAL                                           # noqa: F401
+from .wal import (WAL, CorruptFrame, StoreFormatError,         # noqa: F401
+                  StoreVersionError, TornFrame, TornTransaction)
+from .faults import (FaultPlan, InjectedCrash, crash_point,    # noqa: F401
+                     inject, register, registered)
+from .fsck import FsckIssue, FsckReport, fsck                  # noqa: F401
 from .refs import (AmbiguousRefError, Ref, RefSyntaxError,     # noqa: F401
                    ResolvedRef, UnknownRefError, as_branch,
                    format_ref, parse_ref, resolve)

@@ -18,9 +18,16 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from .faults import crash_point, register
 from .objects import OBJECT_CAPACITY, DataObject, seal_data_object
 from .schema import concat_batches, take_batch
 from .visibility import visibility_index
+
+CP_COMPACT_POST_SEAL = register(
+    "compaction.post_seal",
+    "after the rewritten objects are sealed but before the compact record "
+    "is logged or the directory swings — recovery must show the "
+    "pre-compaction layout (logically identical content)")
 
 
 def pick_compaction_sources(engine, table: str,
@@ -101,12 +108,15 @@ def compact_objects(engine, table: str, src_oids: Sequence[int],
             drop_tombs.append(toid)
 
     apply_ts = engine.next_ts()
-    t.set_directory(t.directory.replace(
-        drop_data=src, drop_tombs=drop_tombs, add_data=new_oids,
-        ts=apply_ts))
+    crash_point(CP_COMPACT_POST_SEAL)
+    # log-before-swing (like _commit phase 2): once the record is durable
+    # replay re-runs the whole compaction; before it, nothing happened
     if _log:
         engine.wal.append("compact", table=table, src_oids=tuple(src),
                           ts=apply_ts)
+    t.set_directory(t.directory.replace(
+        drop_data=src, drop_tombs=drop_tombs, add_data=new_oids,
+        ts=apply_ts))
     return len(new_oids)
 
 

@@ -27,9 +27,28 @@ from .refs import RefSyntaxError, resolve as resolve_ref
 from .schema import Schema, concat_batches, take_batch
 from .sigs import (SigBatch, concat_sigs, key_sigs_for_lookup, resolve_sigs,
                    validate_runs)
+from .faults import crash_point, register
 from .table import Table
 from .visibility import visibility_index
-from .wal import WAL
+from .wal import WAL, TornTransaction
+
+CP_COMMIT_PRE_SEAL = register(
+    "engine.commit.pre_seal",
+    "top of _commit, before the timestamp or any object is allocated — "
+    "the transaction must be fully absent")
+CP_COMMIT_POST_SEAL = register(
+    "engine.commit.post_seal",
+    "after phase 1 sealed every table's objects but before any WAL record "
+    "or directory swing — nothing logged, so recovery must show nothing")
+CP_COMMIT_MID_SWING = register(
+    "engine.commit.mid_swing",
+    "between directory swings of a multi-table commit — the WAL already "
+    "holds the FULL group (log-before-swing), so recovery must show the "
+    "whole transaction")
+CP_GC_MID_SWEEP = register(
+    "engine.gc.mid_sweep",
+    "between object deletions of a GC sweep — GC is not WAL-logged, so "
+    "recovery replays to the same logical state with more garbage")
 
 
 class TxnConflict(Exception):
@@ -317,7 +336,15 @@ class Engine:
         phase 2 swings all directories. A conflict or PK violation in any
         table therefore unwinds every object sealed so far and leaves every
         table untouched — the workflow subsystem's atomic publish leans on
-        exactly this all-or-nothing property."""
+        exactly this all-or-nothing property.
+
+        Phase 2 is write-ahead in the strict sense: the FULL commit group
+        (one record per table, tagged ``ntab``) is logged before the first
+        directory swings. A crash during logging leaves an incomplete
+        trailing group that replay drops whole; a crash mid-swing leaves a
+        complete group that replay applies whole — either way the
+        transaction is all-or-nothing after recovery."""
+        crash_point(CP_COMMIT_PRE_SEAL)
         names = sorted(set(tx._ins) | set(tx._del))
         ts = self.next_ts()
         oid0 = self.store._next_oid
@@ -373,16 +400,23 @@ class Engine:
             self.store._next_oid = oid0
             self.ts = ts - 1
             raise
-        for t, directory, ins, dels, ins_n in staged:
+        crash_point(CP_COMMIT_POST_SEAL)
+        if _log:
+            for t, directory, ins, dels, ins_n in staged:
+                # the record carries its porcelain op kind so replay
+                # rebuilds an identical commit log (merges are logged as
+                # plain commits — the kind is the only thing lost
+                # otherwise) and ntab so replay can tell a torn group
+                # tail from a complete one
+                self.wal.append("commit", table=t.name, ts=ts,
+                                inserts=ins, deletes=dels,
+                                op=self._op_kind, ntab=len(staged))
+        for j, (t, directory, ins, dels, ins_n) in enumerate(staged):
+            if j:
+                crash_point(CP_COMMIT_MID_SWING)
             t.set_directory(directory)
             self.commit_log.append(CommitRecord(
                 ts, t.name, self._op_kind, ins_n, int(dels.shape[0])))
-            if _log:
-                # the record carries its porcelain op kind so replay
-                # rebuilds an identical commit log (merges are logged as
-                # plain commits — the kind is the only thing lost otherwise)
-                self.wal.append("commit", table=t.name, ts=ts,
-                                inserts=ins, deletes=dels, op=self._op_kind)
         return ts
 
     def _unwind(self, oids: Sequence[int]) -> None:
@@ -686,19 +720,32 @@ class Engine:
                 # _commit seals) — regroup the run into one transaction so
                 # replay consumes one timestamp and allocates oids in the
                 # live order
-                tx = e.begin()
-                op = p.get("op", "commit")
-                while True:
-                    for b in p["inserts"]:
-                        tx._ins.setdefault(p["table"], []).append(b)
-                    if p["deletes"].shape[0]:
-                        tx.delete_rowids(p["table"], p["deletes"])
-                    if (i < len(records) and records[i].kind == "commit"
-                            and records[i].payload["ts"] == p["ts"]):
-                        p = records[i].payload
-                        i += 1
-                    else:
+                group_start = i - 1
+                group = [p]
+                while (i < len(records) and records[i].kind == "commit"
+                        and records[i].payload["ts"] == p["ts"]):
+                    group.append(records[i].payload)
+                    i += 1
+                # _commit logs the whole group BEFORE swinging (ntab
+                # records); fewer means the logger died mid-group. At the
+                # tail that is a torn transaction — drop it whole (also
+                # from the log, so re-serializing the recovered engine
+                # does not resurrect half a txn). Mid-log it is damage
+                # no crash can produce: refuse.
+                want = group[0].get("ntab")
+                if want is not None and len(group) < want:
+                    if i >= len(records):
+                        del records[group_start:]
+                        wal.records = records
                         break
+                    raise TornTransaction(p["ts"], len(group), want)
+                tx = e.begin()
+                op = group[0].get("op", "commit")
+                for g in group:
+                    for b in g["inserts"]:
+                        tx._ins.setdefault(g["table"], []).append(b)
+                    if g["deletes"].shape[0]:
+                        tx.delete_rowids(g["table"], g["deletes"])
                 with e.op_kind(op):
                     e._commit(tx, _log=False)
             elif k == "snapshot":
@@ -759,9 +806,14 @@ class Engine:
             else:
                 raise ValueError(f"unknown WAL record {k}")
         # replay must land on the same timestamp (`or 0`: no-op publish /
-        # revert records carry ts=None)
-        e.ts = max(e.ts, max((r.payload.get("ts") or 0 for r in wal),
+        # revert records carry ts=None); scan `records`, not `wal`, so a
+        # dropped torn-tail group does not leak its timestamp
+        e.ts = max(e.ts, max((r.payload.get("ts") or 0 for r in records),
                              default=0))
+        # the recovered engine owns its history: adopt the source WAL
+        # (replay ran with _log=False, so e.wal is empty otherwise) so it
+        # can re-serialize and so fsck's replay check closes the loop
+        e.wal = wal
         return e
 
     # ------------------------------------------------------- GC (mark-sweep)
@@ -810,6 +862,9 @@ class Engine:
             marked.update(s.directory.tomb_oids)
         dead = [o for o in list(self.store.oids()) if o not in marked]
         for o in dead:
+            # GC is not WAL-logged: dying between deletions only leaves
+            # extra garbage for the next sweep, never a logical change
+            crash_point(CP_GC_MID_SWEEP)
             self.store.delete(o)
         return GCStats(objects_freed=len(dead), versions_pruned=pruned,
                        pinned_horizons=sum(len(v) for v in pin_ts.values()))

@@ -1,0 +1,170 @@
+"""Deterministic fault injection (ISSUE 6): crash points + corruption.
+
+The durability story of this repo — WAL append, the CLI's framed store
+writes, the two phases of ``Engine._commit``, publish/revert/GC/compaction
+— is only as good as its behavior when the process dies half way through.
+This module makes "half way through" a first-class, deterministic place:
+
+* every durability-critical seam calls :func:`crash_point` with a name
+  REGISTERED at import time (:func:`register`), so tests can enumerate
+  every seam (``registered()``) and kill the process at each one in turn;
+* a :class:`FaultPlan` arms the registry: ``FaultPlan.at(name, n)`` trips
+  the *n*-th hit of ``name``, raising :class:`InjectedCrash`;
+* :class:`InjectedCrash` subclasses ``BaseException`` (like
+  ``KeyboardInterrupt``) so no ``except Exception`` handler on the way out
+  can "gracefully recover" the simulated kill — recovery must come from
+  the durable state alone, which is exactly what the crash sweep asserts;
+* :func:`flip_bit` / :func:`truncate_file` inject storage corruption into
+  store files, and :func:`corrupt_object_bit` flips a bit inside a sealed
+  in-memory object — the integrity layer (CRC frames, ``core.fsck``) must
+  report each as a typed error, never a silent wrong answer.
+
+Cost when disarmed: ``crash_point`` is one global load + ``is None`` test
++ return — no registry lookup, no allocation. Hot paths stay at parity
+(the bench guard pins this); still, never put a crash point inside a
+per-row loop: seams are per *operation*, not per row.
+"""
+from __future__ import annotations
+
+import os
+from collections import Counter
+from contextlib import contextmanager
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = [
+    "InjectedCrash", "FaultPlan", "register", "registered", "crash_point",
+    "inject", "flip_bit", "truncate_file", "corrupt_object_bit",
+]
+
+
+class InjectedCrash(BaseException):
+    """The simulated ``kill -9``: raised by a tripped crash point.
+
+    A ``BaseException`` on purpose — generic ``except Exception`` cleanup
+    handlers must not swallow it, exactly as they would not run under a
+    real crash. Tests catch it by name."""
+
+    def __init__(self, point: str, hit: int):
+        super().__init__(f"injected crash at {point!r} (hit #{hit})")
+        self.point = point
+        self.hit = hit
+
+
+#: name -> human description of the seam. Populated at import time by the
+#: modules that own the seams; the crash sweep derives its coverage from it.
+_REGISTRY: Dict[str, str] = {}
+
+#: the armed plan (None = disarmed). One slot, module-global: arming is a
+#: test-harness operation, not a concurrency feature.
+_ACTIVE: Optional["FaultPlan"] = None
+
+
+def register(name: str, doc: str) -> str:
+    """Register a crash-point name at import time; returns the name so the
+    owning module can bind it to a constant. Re-registration with the same
+    doc is a no-op (module reimport); with a different doc it is a bug."""
+    if _REGISTRY.get(name, doc) != doc:
+        raise ValueError(f"crash point {name!r} registered twice "
+                         "with different docs")
+    _REGISTRY[name] = doc
+    return name
+
+
+def registered() -> Dict[str, str]:
+    """Every registered crash point (name -> doc), for sweep enumeration."""
+    return dict(_REGISTRY)
+
+
+def crash_point(name: str) -> None:
+    """Durability seam marker: no-op unless a FaultPlan is armed."""
+    if _ACTIVE is None:
+        return
+    _ACTIVE._hit(name)
+
+
+class FaultPlan:
+    """Trip-on-Nth-hit plan over registered crash points.
+
+    ``trips`` maps crash-point name -> 1-based hit count at which to raise.
+    ``hits`` counts every observation while armed (tripped or not), so a
+    sweep can assert its op script actually reached each seam."""
+
+    def __init__(self, trips: Optional[Dict[str, int]] = None):
+        self.trips: Dict[str, int] = dict(trips or {})
+        for name, n in self.trips.items():
+            if name not in _REGISTRY:
+                raise KeyError(f"unknown crash point {name!r} "
+                               f"(registered: {sorted(_REGISTRY)})")
+            if n < 1:
+                raise ValueError(f"trip count for {name!r} is 1-based")
+        self.hits: Counter = Counter()
+        self.tripped: Optional[str] = None
+
+    @classmethod
+    def at(cls, name: str, n: int = 1) -> "FaultPlan":
+        return cls({name: n})
+
+    def _hit(self, name: str) -> None:
+        if name not in _REGISTRY:
+            raise KeyError(f"crash_point({name!r}) is not registered")
+        self.hits[name] += 1
+        n = self.trips.get(name)
+        if n is not None and self.hits[name] == n and self.tripped is None:
+            self.tripped = name
+            raise InjectedCrash(name, n)
+
+
+@contextmanager
+def inject(plan: FaultPlan) -> Iterator[FaultPlan]:
+    """Arm ``plan`` for the duration of the block (no nesting)."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("a FaultPlan is already armed")
+    _ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = None
+
+
+# --------------------------------------------------------------------------
+# corruption injectors — storage-level bit rot, deterministically placed
+# --------------------------------------------------------------------------
+
+def flip_bit(path: str, byte_offset: int, bit: int = 0) -> None:
+    """Flip one bit of a file in place (single-bit storage corruption)."""
+    size = os.path.getsize(path)
+    if not 0 <= byte_offset < size:
+        raise ValueError(f"offset {byte_offset} outside file of {size} bytes")
+    with open(path, "r+b") as f:
+        f.seek(byte_offset)
+        b = f.read(1)[0]
+        f.seek(byte_offset)
+        f.write(bytes([b ^ (1 << (bit & 7))]))
+
+
+def truncate_file(path: str, size: int) -> None:
+    """Cut a file at ``size`` bytes (a torn write / lost tail)."""
+    with open(path, "r+b") as f:
+        f.truncate(size)
+
+
+def corrupt_object_bit(obj, column: Optional[str] = None, row: int = 0,
+                       bit: int = 0) -> None:
+    """Flip one bit inside a sealed object's payload (in-memory bit rot).
+
+    ``column=None`` corrupts the first fixed-width column; a LOB column
+    corrupts one byte of the row's value. The object's carried signatures
+    are left untouched — ``core.fsck`` must flag the mismatch."""
+    if column is None:
+        column = next(c for c, a in obj.cols.items() if a.dtype != object)
+    arr = obj.cols[column]
+    if arr.dtype == object:                      # LOB: mutate one byte
+        v = bytearray(arr[row])
+        v[0] ^= 1 << (bit & 7)
+        arr[row] = bytes(v)
+        return
+    flat = arr.view(np.uint8).reshape(-1)
+    flat[row * arr.dtype.itemsize] ^= np.uint8(1 << (bit & 7))

@@ -1,0 +1,362 @@
+"""Integrity verification and salvage (`datagit fsck`, ISSUE 6).
+
+The write-once signature substrate (ISSUE 4) makes verification nearly
+free in the ForkBase sense: every sealed object *carries* the 128-bit
+row/key signatures of its rows, so recomputing them from the stored
+column values and comparing is a complete, self-contained integrity
+check — no external checksum database needed.
+
+``fsck(engine)`` verifies four layers:
+
+1. **objects** — structural shape (every lane the same length), key-lane
+   sortedness (the seal invariant readers bisect on), tombstone targets
+   inside their declared object set, and carried signatures vs recomputed
+   hashes (full or sampled);
+2. **reachability** — every object referenced by any directory reachable
+   from a ref root (table current+history, named snapshots, branch bases,
+   PR pins, lineage bases) exists in the store;
+3. **refs** — branch physical tables resolve;
+4. **replay** — serialize -> deserialize -> ``Engine.replay`` reproduces
+   identical content digests, timestamps, and porcelain registries.
+
+``repair=True`` is salvage, not undo: corrupt/missing objects are
+quarantined (dropped from the store and from *current* table directories
+so the table scans again), the report lists every ref the quarantine
+makes unreachable (PITR history at those horizons is damaged), and
+derivable state is rebuilt — visibility/delta caches are reset for lazy
+re-attach and secondary-index aux tables are re-backfilled from their
+repaired base tables. Repair is NOT WAL-logged (the WAL describes the
+un-corrupted history); a repaired engine no longer replay-matches its
+log, and the report says so.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .directory import Directory
+from .objects import DataObject, TombstoneObject, rowid_oid
+from .sigs import compute_sigs
+
+__all__ = ["FsckIssue", "FsckReport", "fsck"]
+
+
+@dataclass
+class FsckIssue:
+    kind: str               # signature_mismatch | bad_structure |
+    #                         unsorted_keys | bad_tombstone |
+    #                         missing_object | dangling_ref |
+    #                         replay_divergence | replay_failure
+    where: str              # ref context, e.g. "table:t@current"
+    detail: str
+    oid: Optional[int] = None
+
+    def __str__(self):
+        o = f" oid={self.oid}" if self.oid is not None else ""
+        return f"[{self.kind}]{o} {self.where}: {self.detail}"
+
+
+@dataclass
+class FsckReport:
+    issues: List[FsckIssue] = field(default_factory=list)
+    objects_checked: int = 0
+    rows_verified: int = 0
+    directories_checked: int = 0
+    refs_checked: int = 0
+    replay_checked: bool = False
+    # repair results
+    repaired: bool = False
+    quarantined: List[int] = field(default_factory=list)
+    refs_unreachable: List[str] = field(default_factory=list)
+    indices_rebuilt: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.issues
+
+    def summary(self) -> str:
+        head = ("clean" if self.ok
+                else f"{len(self.issues)} issue(s)")
+        s = (f"fsck: {head} — {self.objects_checked} object(s), "
+             f"{self.rows_verified} row(s) verified, "
+             f"{self.directories_checked} directories, "
+             f"{self.refs_checked} refs"
+             + (", replay checked" if self.replay_checked else ""))
+        if self.repaired:
+            s += (f"; repaired: {len(self.quarantined)} quarantined, "
+                  f"{len(self.refs_unreachable)} ref(s) now unreachable, "
+                  f"{len(self.indices_rebuilt)} index(es) rebuilt "
+                  "(WAL no longer replays this state)")
+        return s
+
+
+def _digest(engine, table: str) -> str:
+    """Order-independent content digest over full-row signatures."""
+    _, _, lo, hi = engine.table(table).scan(with_sigs=True)
+    order = np.lexsort((hi, lo))
+    h = hashlib.sha256(lo[order].tobytes())
+    h.update(hi[order].tobytes())
+    return h.hexdigest()
+
+
+def _state(engine) -> dict:
+    out = {"__ts__": engine.ts,
+           "__tables__": tuple(sorted(engine.tables)),
+           "__snapshots__": tuple(sorted(engine.snapshots)),
+           "__branches__": tuple(sorted(engine.branches)),
+           "__prs__": tuple(sorted((i, p.status)
+                                   for i, p in engine.prs.items()))}
+    for name in engine.tables:
+        out[name] = _digest(engine, name)
+    return out
+
+
+def _ref_roots(engine) -> List[Tuple[str, object, Directory]]:
+    """Every (ref label, schema, directory) fsck must walk: table current
+    state and PITR history, named snapshots, lineage bases, branch points,
+    and live PR pins — the same roots ``Engine.gc`` marks from."""
+    roots: List[Tuple[str, object, Directory]] = []
+    for name, t in engine.tables.items():
+        roots.append((f"table:{name}@current", t.schema, t.directory))
+        for ts_, d in t.history:
+            roots.append((f"table:{name}@ts:{ts_}", t.schema, d))
+    for s in engine.snapshots.values():
+        roots.append((f"snapshot:{s.name}", s.schema, s.directory))
+    for (a, b), s in engine._base.items():
+        roots.append((f"base:{a}~{b}", s.schema, s.directory))
+    for bname, br in engine.branches.items():
+        for lg, s in br.base.items():
+            roots.append((f"branch:{bname} base {lg}", s.schema,
+                          s.directory))
+    for pid, pr in engine.prs.items():
+        pins: Dict[str, object] = {}
+        if pr.status == "open":
+            pins = pr.base_pins
+        elif pr.status == "published":
+            pins = {**pr.pre_publish,
+                    **{f"{k}(post)": v for k, v in pr.post_publish.items()}}
+        for lg, s in pins.items():
+            roots.append((f"pr:{pid} pin {lg}", s.schema, s.directory))
+    return roots
+
+
+def _check_data_object(obj: DataObject, schema, where: str,
+                       verify_sigs: bool, report: FsckReport) -> None:
+    n = obj.nrows
+    lanes = {"commit_ts": obj.commit_ts, "row_lo": obj.row_lo,
+             "row_hi": obj.row_hi, "key_lo": obj.key_lo,
+             "key_hi": obj.key_hi}
+    for cname, arr in obj.cols.items():
+        lanes[f"col:{cname}"] = arr
+    for lname, sig in obj.lob_sigs.items():
+        lanes[f"lob_sig:{lname}"] = sig
+    bad = [ln for ln, a in lanes.items() if len(a) != n]
+    if bad:
+        report.issues.append(FsckIssue(
+            "bad_structure", where, f"lane length != nrows={n}: {bad}",
+            obj.oid))
+        return                      # shape is broken; nothing else is safe
+    if n > 1:
+        lo, hi = obj.key_lo, obj.key_hi
+        ordered = (lo[1:] > lo[:-1]) | ((lo[1:] == lo[:-1])
+                                        & (hi[1:] >= hi[:-1]))
+        if not ordered.all():
+            at = int(np.flatnonzero(~ordered)[0])
+            report.issues.append(FsckIssue(
+                "unsorted_keys", where,
+                f"key lanes not lexsorted at row {at + 1}", obj.oid))
+            return                  # bisecting readers would misbehave
+    # signature verification needs the sealing-era schema: an object sealed
+    # before an ALTER has fewer columns than the table's current schema —
+    # verify only when the context schema matches the stored columns
+    if (not verify_sigs or schema is None
+            or tuple(schema.names) != tuple(obj.cols)):
+        return
+    rlo, rhi, klo, khi, lob = compute_sigs(schema, obj.cols)
+    mism = (rlo != obj.row_lo) | (rhi != obj.row_hi)
+    if schema.has_pk:
+        mism |= (klo != obj.key_lo) | (khi != obj.key_hi)
+    for cname, sig in lob.items():
+        mism |= sig != obj.lob_sigs[cname]
+    if mism.any():
+        rows = np.flatnonzero(mism)
+        report.issues.append(FsckIssue(
+            "signature_mismatch", where,
+            f"{rows.shape[0]} row(s) disagree with carried signatures "
+            f"(first at row {int(rows[0])})", obj.oid))
+    else:
+        report.rows_verified += n
+
+
+def _check_tombstone(obj: TombstoneObject, where: str,
+                     report: FsckReport) -> None:
+    n = obj.nrows
+    lanes = {"target": obj.target, "key_lo": obj.key_lo,
+             "key_hi": obj.key_hi, "commit_ts": obj.commit_ts}
+    bad = [ln for ln, a in lanes.items() if len(a) != n]
+    if bad:
+        report.issues.append(FsckIssue(
+            "bad_structure", where, f"lane length != nrows={n}: {bad}",
+            obj.oid))
+        return
+    if n:
+        declared = set(int(x) for x in np.asarray(obj.target_oids).ravel())
+        actual = set(int(x) for x in np.unique(rowid_oid(obj.target)))
+        stray = actual - declared
+        if stray:
+            report.issues.append(FsckIssue(
+                "bad_tombstone", where,
+                f"targets hit undeclared object(s) {sorted(stray)}",
+                obj.oid))
+    if n > 1 and not (obj.target[1:] >= obj.target[:-1]).all():
+        report.issues.append(FsckIssue(
+            "bad_tombstone", where, "target rowids not sorted", obj.oid))
+
+
+def fsck(engine, *, sample: float = 1.0, check_replay: bool = True,
+         repair: bool = False, seed: int = 0) -> FsckReport:
+    """Verify the engine's integrity; optionally salvage (see module doc).
+
+    ``sample`` is the fraction of reachable data objects whose signatures
+    are recomputed (1.0 = every row of every object; structural and
+    sortedness checks always run on all of them). Deterministic under
+    ``seed``."""
+    report = FsckReport()
+    roots = _ref_roots(engine)
+    report.directories_checked = len(roots)
+
+    # ---- reachability + per-object context (first ref wins for schema)
+    ctx: Dict[int, Tuple[str, object]] = {}
+    missing: Dict[int, str] = {}
+    for where, schema, d in roots:
+        for oid in tuple(d.data_oids) + tuple(d.tomb_oids):
+            if not engine.store.has(oid):
+                missing.setdefault(oid, where)
+            elif oid not in ctx:
+                ctx[oid] = (where, schema)
+    for oid, where in sorted(missing.items()):
+        report.issues.append(FsckIssue(
+            "missing_object", where,
+            "directory references an object absent from the store", oid))
+
+    # ---- ref resolvability (branch physical tables can dangle if a table
+    # was force-dropped; snapshots/pins are self-contained by construction)
+    for bname, br in engine.branches.items():
+        for lg, phys in br.tables.items():
+            report.refs_checked += 1
+            if phys not in engine.tables:
+                report.issues.append(FsckIssue(
+                    "dangling_ref", f"branch:{bname}",
+                    f"table {lg!r} -> physical {phys!r} does not exist"))
+    report.refs_checked += len(roots)
+
+    # ---- object verification (sampled signature recompute)
+    oids = sorted(ctx)
+    verify = set(oids)
+    if sample < 1.0:
+        rng = np.random.default_rng(seed)
+        data_oids = [o for o in oids
+                     if isinstance(engine.store.get(o), DataObject)]
+        k = max(1, int(np.ceil(sample * len(data_oids)))) \
+            if data_oids else 0
+        verify = set(rng.choice(data_oids, size=k, replace=False).tolist()) \
+            if k else set()
+    for oid in oids:
+        obj = engine.store.get(oid)
+        where, schema = ctx[oid]
+        report.objects_checked += 1
+        if isinstance(obj, TombstoneObject):
+            _check_tombstone(obj, where, report)
+        else:
+            _check_data_object(obj, schema, where, oid in verify, report)
+
+    # ---- WAL replay equivalence (skipped when state is already damaged:
+    # the live digests would throw on missing objects)
+    if check_replay and not report.issues:
+        from .engine import Engine
+        from .wal import WAL
+        report.replay_checked = True
+        try:
+            replayed = Engine.replay(WAL.deserialize(engine.wal.serialize()))
+            live, redo = _state(engine), _state(replayed)
+            if live != redo:
+                keys = sorted(k for k in set(live) | set(redo)
+                              if live.get(k) != redo.get(k))
+                report.issues.append(FsckIssue(
+                    "replay_divergence", "wal",
+                    f"replayed state differs at {keys}"))
+        except Exception as exc:
+            report.issues.append(FsckIssue(
+                "replay_failure", "wal", f"{type(exc).__name__}: {exc}"))
+
+    if repair:
+        _repair(engine, report, roots)
+    return report
+
+
+def _repair(engine, report: FsckReport, roots) -> None:
+    """Salvage: quarantine bad objects and scrub them out of EVERY
+    reachable directory (current, history, snapshots, pins), reporting
+    each ref that loses state; then rebuild the derivable state. After
+    repair the engine is internally consistent again — a follow-up
+    ``fsck(check_replay=False)`` is clean — but the WAL still describes
+    the undamaged history, so the replay check reports divergence until
+    the store is re-created. See module doc."""
+    import dataclasses
+
+    bad_kinds = {"signature_mismatch", "bad_structure", "unsorted_keys",
+                 "bad_tombstone"}
+    bad = {i.oid for i in report.issues
+           if i.kind in bad_kinds and i.oid is not None}
+    gone = bad | {i.oid for i in report.issues
+                  if i.kind == "missing_object"}
+    if not gone:
+        return
+    report.repaired = True
+    # caches first: they index the pre-quarantine object set; None means
+    # lazy rebuild on the next visibility/delta read
+    engine.store.vis_cache = None
+    engine.store.delta_cache = None
+    for oid in sorted(bad):
+        if engine.store.has(oid):
+            engine.store.delete(oid)
+        report.quarantined.append(oid)
+    for where, _, d in roots:
+        if (set(d.data_oids) | set(d.tomb_oids)) & gone:
+            report.refs_unreachable.append(where)
+
+    def scrub(d: Directory) -> Directory:
+        return d.replace(drop_data=gone, drop_tombs=gone)
+
+    def scrub_snap(s):
+        return dataclasses.replace(s, directory=scrub(s.directory))
+
+    affected = []
+    for name, t in engine.tables.items():
+        if (set(t.directory.data_oids) | set(t.directory.tomb_oids)) & gone:
+            affected.append(name)
+        t.directory = scrub(t.directory)
+        t.history[:] = [(hts, scrub(d)) for hts, d in t.history]
+    for nm, s in list(engine.snapshots.items()):
+        engine.snapshots[nm] = scrub_snap(s)
+    for k, s in list(engine._base.items()):
+        engine._base[k] = scrub_snap(s)
+    for br in engine.branches.values():
+        for lg, s in list(br.base.items()):
+            br.base[lg] = scrub_snap(s)
+    for pr in engine.prs.values():
+        for pins in (pr.base_pins, getattr(pr, "pre_publish", None) or {},
+                     getattr(pr, "post_publish", None) or {}):
+            for lg, s in list(pins.items()):
+                pins[lg] = scrub_snap(s)
+    # derivable state: re-backfill secondary indices of repaired tables
+    from .indices import backfill_index
+    for name in affected:
+        for spec in engine.indices.get(name, ()):
+            if spec.aux_table in engine.tables:
+                engine.drop_table(spec.aux_table, _log=False)
+            backfill_index(engine, spec)
+            report.indices_rebuilt.append(spec.aux_table)

@@ -25,6 +25,7 @@ every verb maps 1:1 onto a statement and a CLI subcommand:
     log             LOG TABLE t [LIMIT n]         log t [-n N]
     status          STATUS                        status
     gc              GC                            gc
+    fsck            FSCK [REPAIR]                 fsck [--repair]
     ==============  ============================  =====================
 
 The facade is thin by design: verbs delegate to the engine/workspace layer
@@ -304,6 +305,15 @@ class Repo:
     # ----------------------------------------------------------------- gc
     def gc(self) -> GCStats:
         return self.engine.gc()
+
+    def fsck(self, *, sample: float = 1.0, check_replay: bool = True,
+             repair: bool = False):
+        """FSCK [REPAIR] — verify carried signatures, reachability, refs,
+        and WAL-replay equivalence; ``repair`` quarantines and rebuilds
+        (see :func:`core.fsck.fsck`). Returns an :class:`FsckReport`."""
+        from .fsck import fsck as _fsck
+        return _fsck(self.engine, sample=sample, check_replay=check_replay,
+                     repair=repair)
 
     # ------------------------------------------------------------ helpers
     def _table_name(self, ref: RefLike) -> str:

@@ -29,6 +29,7 @@ Supported statements (keywords case-insensitive; refs quoted or bare)::
     SHOW BRANCHES | SNAPSHOTS | PRS | TABLES
     STATUS
     GC
+    FSCK [REPAIR]
 
 ``execute(repo, text)`` runs one statement; ``execute_script`` splits on
 ``;``. Unknown verbs raise :class:`StatementError` with did-you-mean
@@ -435,11 +436,19 @@ def _gc(repo, p: _P) -> StatementResult:
         f"{stats.pinned_horizons} pinned horizon(s) honored")
 
 
+def _fsck(repo, p: _P) -> StatementResult:
+    repair = p.opt_kw("REPAIR") is not None
+    p.end()
+    report = repo.fsck(repair=repair)
+    lines = [report.summary()] + [str(i) for i in report.issues]
+    return StatementResult("fsck", report, "\n".join(lines))
+
+
 _HANDLERS = {
     "CREATE": _create, "DROP": _drop, "CLONE": _clone, "DIFF": _diff,
     "MERGE": _merge, "OPEN": _open, "CHECK": _check, "PUBLISH": _publish,
     "CLOSE": _close, "REVERT": _revert, "RESTORE": _restore, "LOG": _log,
-    "SHOW": _show, "STATUS": _status, "GC": _gc,
+    "SHOW": _show, "STATUS": _status, "GC": _gc, "FSCK": _fsck,
 }
 _VERBS = tuple(_HANDLERS)        # one source of truth for did-you-mean
 

@@ -4,12 +4,30 @@ Every logical state change appends a record; ``Engine.replay`` re-executes
 the log against a fresh engine and must reproduce identical logical table
 contents (tests assert this). Object ids are allocated deterministically, so
 replay also reproduces physical layout.
+
+Durable format (ISSUE 6). Serialized WALs and the CLI's append-only store
+share one framed byte format instead of raw pickle streams::
+
+    header   := MAGIC "DGWS" | version u8 | reserved u8*3      (8 bytes)
+    frame    := length u32le | crc32c(payload) u32le | payload
+    payload  := pickle of a list[WalRecord]
+
+so a flipped bit raises :class:`CorruptFrame` naming the frame, a
+crash-torn tail raises :class:`TornFrame` carrying the last clean offset
+(recoverable — the bytes were never acknowledged), and a store written by
+a different format version raises :class:`StoreVersionError` with an
+upgrade hint — never pickle garbage, never a silent wrong answer.
+Headerless legacy stores (pre-ISSUE 6 raw pickle) still load via a
+one-shot legacy path keyed off the pickle protocol-2 opcode.
 """
 from __future__ import annotations
 
 import pickle
+import struct
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Tuple
+
+from .faults import crash_point, register
 
 # Every record kind the engine may emit and ``Engine.replay`` understands.
 # The workflow porcelain (ISSUE 3) logs ONE record per logical operation —
@@ -25,11 +43,162 @@ KINDS = frozenset({
     "publish_revert", "revert",
 })
 
+CP_WAL_APPEND = register(
+    "wal.append",
+    "before a record is appended to the in-memory WAL — the Nth hit kills "
+    "the process at the Nth record boundary, so a sweep over N covers "
+    "every boundary of a history")
+
 
 @dataclass
 class WalRecord:
     kind: str                 # one of KINDS
     payload: Dict[str, Any] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# durable frame format
+# --------------------------------------------------------------------------
+
+MAGIC = b"DGWS"
+STORE_VERSION = 1
+STORE_HEADER = MAGIC + bytes([STORE_VERSION]) + b"\x00\x00\x00"
+_FRAME_HEAD = struct.Struct("<II")        # payload length, crc32c(payload)
+FRAME_OVERHEAD = _FRAME_HEAD.size
+
+
+class StoreFormatError(Exception):
+    """Base of the typed durable-format errors."""
+
+
+class TornFrame(StoreFormatError):
+    """A frame extends past end-of-file: the torn tail of a crashed append.
+
+    Recoverable by construction — appends are fsynced frame-at-a-time, so
+    bytes past ``clean_end`` were never acknowledged to any caller.
+    ``tail`` holds them so recovery can preserve, never silently drop."""
+
+    def __init__(self, clean_end: int, tail: bytes):
+        super().__init__(
+            f"torn frame: {len(tail)} trailing byte(s) past the last clean "
+            f"frame at offset {clean_end} (unacknowledged crashed write)")
+        self.clean_end = clean_end
+        self.tail = tail
+
+
+class CorruptFrame(StoreFormatError):
+    """A fully-present frame failed its CRC: mid-file storage corruption.
+
+    NOT auto-recoverable (the frame was acknowledged once): the caller
+    decides — ``datagit fsck --repair`` quarantines, a plain load refuses."""
+
+    def __init__(self, frame_index: int, offset: int, why: str):
+        super().__init__(
+            f"corrupt frame #{frame_index} at offset {offset}: {why}")
+        self.frame_index = frame_index
+        self.offset = offset
+
+
+class TornTransaction(StoreFormatError):
+    """A multi-table commit group is incomplete in the MIDDLE of the log.
+
+    A trailing incomplete group is normal crash recovery (the txn never
+    fully logged; replay drops it whole). Records *after* an incomplete
+    group mean the log itself is damaged — replay refuses to guess."""
+
+    def __init__(self, ts: int, have: int, want: int):
+        super().__init__(
+            f"commit group at ts={ts} has {have} of {want} table records "
+            "with later records following — WAL is damaged mid-log")
+        self.ts = ts
+
+
+class StoreVersionError(StoreFormatError):
+    """The store's magic/version does not match this build's format."""
+
+    def __init__(self, why: str):
+        super().__init__(
+            f"{why} — this build reads DGWS v{STORE_VERSION} stores and "
+            "legacy headerless pickle stores; re-create the store with "
+            "this build (or load it with the build that wrote it)")
+
+
+try:                                       # C implementation when present
+    from google_crc32c import value as _crc32c_impl
+
+    def crc32c(data: bytes) -> int:
+        return _crc32c_impl(data)
+except ImportError:                        # pure-python fallback (CI has
+    _CRC32C_TABLE: List[int] = []          # only numpy/jax/pytest)
+
+    def _crc32c_build_table() -> None:
+        poly = 0x82F63B78                  # Castagnoli, reflected
+        for i in range(256):
+            c = i
+            for _ in range(8):
+                c = (c >> 1) ^ poly if c & 1 else c >> 1
+            _CRC32C_TABLE.append(c)
+
+    def crc32c(data: bytes) -> int:
+        if not _CRC32C_TABLE:
+            _crc32c_build_table()
+        tab = _CRC32C_TABLE
+        c = 0xFFFFFFFF
+        for b in data:
+            c = tab[(c ^ b) & 0xFF] ^ (c >> 8)
+        return c ^ 0xFFFFFFFF
+
+
+def encode_frame(payload: bytes) -> bytes:
+    """One durable frame: length + crc32c + payload."""
+    return _FRAME_HEAD.pack(len(payload), crc32c(payload)) + payload
+
+
+def check_store_header(blob: bytes) -> int:
+    """Validate the store header; returns the offset where frames begin.
+
+    Returns ``-1`` for a recognized LEGACY headerless pickle store (the
+    pre-ISSUE 6 format — pickle protocol 2+ opcode ``\\x80``); raises
+    :class:`StoreVersionError` for anything else."""
+    if blob.startswith(MAGIC):
+        version = blob[4]
+        if version != STORE_VERSION:
+            raise StoreVersionError(
+                f"store format version {version} is not supported")
+        if len(blob) < len(STORE_HEADER):
+            raise StoreVersionError("store header truncated")
+        return len(STORE_HEADER)
+    if blob[:1] == b"\x80":
+        return -1
+    raise StoreVersionError(
+        f"bad magic {blob[:4]!r}: not a datagit WAL store")
+
+
+def iter_frames(blob: bytes, offset: int) -> Iterator[Tuple[bytes, int]]:
+    """Yield ``(payload, end_offset)`` per frame, verifying each CRC.
+
+    Raises :class:`TornFrame` when the trailing frame extends past EOF
+    (including a torn length/crc prefix) and :class:`CorruptFrame` on a
+    CRC mismatch. A corrupted length field either lands inside the file
+    (the CRC then fails -> CorruptFrame) or past it (-> TornFrame); there
+    is no silent resync."""
+    size = len(blob)
+    idx = 0
+    while offset < size:
+        if size - offset < FRAME_OVERHEAD:
+            raise TornFrame(offset, bytes(blob[offset:]))
+        length, crc = _FRAME_HEAD.unpack_from(blob, offset)
+        end = offset + FRAME_OVERHEAD + length
+        if end > size:
+            raise TornFrame(offset, bytes(blob[offset:]))
+        payload = blob[offset + FRAME_OVERHEAD:end]
+        if crc32c(payload) != crc:
+            raise CorruptFrame(
+                idx, offset,
+                f"crc mismatch over {length} payload byte(s)")
+        yield payload, end
+        offset = end
+        idx += 1
 
 
 class WAL:
@@ -41,6 +210,9 @@ class WAL:
         # explode at replay time, after the log is already corrupt
         if kind not in KINDS:
             raise ValueError(f"unknown WAL record kind {kind!r}")
+        # the crash fires BEFORE the record exists: a record is either
+        # fully appended or never was — there is no half-appended record
+        crash_point(CP_WAL_APPEND)
         self.records.append(WalRecord(kind, payload))
 
     def __iter__(self):
@@ -52,10 +224,17 @@ class WAL:
     # Durability stand-in: the paper's Raft LogService persists records; we
     # support byte-serialization round-trips for crash-recovery tests.
     def serialize(self) -> bytes:
-        return pickle.dumps(self.records, protocol=pickle.HIGHEST_PROTOCOL)
+        payload = pickle.dumps(self.records,
+                               protocol=pickle.HIGHEST_PROTOCOL)
+        return STORE_HEADER + encode_frame(payload)
 
     @staticmethod
     def deserialize(blob: bytes) -> "WAL":
         w = WAL()
-        w.records = pickle.loads(blob)
+        start = check_store_header(blob)
+        if start < 0:                       # legacy headerless pickle blob
+            w.records = pickle.loads(blob)
+            return w
+        for payload, _ in iter_frames(blob, start):
+            w.records.extend(pickle.loads(payload))
         return w

@@ -43,10 +43,29 @@ from .diff import DiffResult, gather_payload, gather_rowsigs, snapshot_diff
 from .directory import Snapshot
 from .merge import (OP_DEL, OP_INS, ConflictMode, MergeConflictError,
                     MergeReport, collapse_pk, plan_merge)
+from .faults import crash_point, register
 from .refs import (UnknownRefError, require, resolve as resolve_ref,
                    suggest, validate_name)
 from .sigs import SigBatch
 from .table import Table
+
+CP_PUBLISH_PLANNED = register(
+    "workspace.publish.planned",
+    "after every table's merge is planned but before the multi-table "
+    "commit — nothing durable yet, recovery must show no publish")
+CP_PUBLISH_PRE_LOG = register(
+    "workspace.publish.pre_log",
+    "after the publish commit swung the live directories but before the "
+    "single 'publish' WAL record — the record IS the commit point, so "
+    "recovery must show no publish at all")
+CP_REVERT_PUBLISH_PRE_LOG = register(
+    "workspace.revert_publish.pre_log",
+    "after the inverse-delta commit but before the 'publish_revert' "
+    "record — recovery must show the PR still published")
+CP_REVERT_PRE_LOG = register(
+    "workspace.revert.pre_log",
+    "after the inverse-delta commit but before the 'revert' record — "
+    "recovery must show the revert absent")
 
 TRUNK = "main"
 
@@ -374,6 +393,7 @@ class PullRequest:
             plan_merge(engine, self._base_physical(lg), src, base, mode,
                        report, tx)
             planned[lg] = (report, src)
+        crash_point(CP_PUBLISH_PLANNED)
         with engine.op_kind("publish"):
             ts = tx.commit(_log=False) if tx.staged else None
         for lg, (report, src) in planned.items():
@@ -389,6 +409,7 @@ class PullRequest:
             for lg in self.tables}
         self.publish_reports = {lg: r for lg, (r, _) in planned.items()}
         if _log:
+            crash_point(CP_PUBLISH_PRE_LOG)
             engine.wal.append("publish", pr=self.id, mode=mode.value, ts=ts)
         return self.publish_reports
 
@@ -409,6 +430,7 @@ class PullRequest:
             ts = tx.commit(_log=False) if tx.staged else None
         self.status = "reverted"
         if _log:
+            crash_point(CP_REVERT_PUBLISH_PRE_LOG)
             engine.wal.append("publish_revert", pr=self.id, ts=ts)
         return ts
 
@@ -542,6 +564,7 @@ def revert(engine, table: str, from_ref, to_ref, *,
     with engine.op_kind("revert"):
         ts = tx.commit(_log=False) if staged else None
     if _log:
+        crash_point(CP_REVERT_PRE_LOG)
         engine.wal.append("revert", table=table, snap_from=from_snap,
                           snap_to=to_snap, ts=ts)
     return ts

@@ -19,6 +19,7 @@ recovery and the CLI share one durability story.
   ... log orders
   ... revert-pr 1
   ... gc
+  ... fsck
 
 ``seed`` / ``mutate`` generate deterministic demo data (they are the only
 subcommands that do not map onto a statement — statements are the VCS
@@ -40,12 +41,16 @@ from typing import List, Optional
 
 import numpy as np
 
-from .core import (AmbiguousRefError, Column, CType, MergeConflictError,
-                   PKViolation, PublishBlocked, Repo, RefSyntaxError,
-                   RevertConflict, Schema, TxnConflict, UnknownRefError,
-                   WAL, as_branch)
+from .core import (AmbiguousRefError, Column, CorruptFrame, CType,
+                   MergeConflictError, PKViolation, PublishBlocked, Repo,
+                   RefSyntaxError, RevertConflict, Schema, StoreFormatError,
+                   StoreVersionError, TornFrame, TxnConflict,
+                   UnknownRefError, WAL, as_branch)
 from .core.engine import Engine
+from .core.faults import crash_point, register
 from .core.statements import StatementError, execute, execute_script
+from .core.wal import (STORE_HEADER, check_store_header, encode_frame,
+                       iter_frames)
 
 DEMO_SCHEMA = Schema((Column("k", CType.I64), Column("v", CType.F64),
                       Column("doc", CType.LOB)), primary_key=("k",))
@@ -53,48 +58,111 @@ DEMO_SCHEMA_NOPK = Schema(DEMO_SCHEMA.columns, primary_key=None)
 
 
 # --------------------------------------------------------------------------
-# store persistence — append-only WAL frames
+# store persistence — checksummed append-only WAL frames
 #
-# The store file is a sequence of pickle frames, each holding the records
-# one invocation appended. Load replays every frame; save appends ONLY the
-# records new since load — O(delta) I/O per command, not O(history), which
-# is also the WAL's own durability story (a log you append to, not a
-# snapshot you rewrite).
+# The store file is the DGWS framed format of ``core.wal``: an 8-byte
+# magic/version header, then one CRC32C frame per invocation holding the
+# records that invocation appended. Load verifies every frame and replays;
+# save appends ONLY the records new since load — O(delta) I/O per command,
+# not O(history), which is also the WAL's own durability story (a log you
+# append to, not a snapshot you rewrite).
+#
+# Failure surface (all typed, never pickle garbage):
+#   torn tail     -> recovered at load; bytes preserved to <store>.corrupt
+#                    and truncated at the NEXT save (never parsed past)
+#   flipped bit   -> CorruptFrame naming the frame; `fsck --repair` can
+#                    truncate to the last clean frame (tail preserved)
+#   wrong version -> StoreVersionError with an upgrade hint; legacy
+#                    headerless pickle stores load once and are rewritten
+#                    in the framed format on the next save
 # --------------------------------------------------------------------------
+
+CP_SAVE_MID_FRAME = register(
+    "cli.save.mid_frame",
+    "half of a store frame's bytes are on disk when the process dies — "
+    "load must recover to the previous clean frame and preserve the torn "
+    "tail to the .corrupt sidecar")
+CP_SAVE_PRE_FSYNC = register(
+    "cli.save.pre_fsync",
+    "the frame is fully written but not fsynced — the frame may or may "
+    "not survive; both recoveries are all-or-nothing")
+
+
+def _preserve_tail(store: str, tail: bytes) -> bool:
+    """Preserve dropped bytes to ``<store>.corrupt`` — NEVER silently
+    discard. Returns False when this exact tail is already preserved (so
+    the recovery hint prints once, not on every subsequent load)."""
+    if not tail:
+        return False
+    side = store + ".corrupt"
+    if os.path.exists(side):
+        with open(side, "rb") as f:
+            if f.read().endswith(tail):
+                return False
+    with open(side, "ab") as f:
+        f.write(tail)
+        f.flush()
+        os.fsync(f.fileno())
+    return True
+
 
 def load_repo(store: str) -> Repo:
     wal = WAL()
     clean_end = 0
+    rewrite = False                 # next save must rewrite the whole file
+    blob = b""
     if os.path.exists(store):
         with open(store, "rb") as f:
-            size = os.fstat(f.fileno()).st_size
+            blob = f.read()
+    if blob:
+        start = check_store_header(blob)
+        if start < 0:
+            # one-shot legacy path: pre-frame stores are a bare sequence
+            # of pickle frames with no checksums — load them once, then
+            # save_repo upgrades the file to the framed format
+            import io
+            bio = io.BytesIO(blob)
             while True:
                 try:
-                    recs = pickle.load(f)
-                except EOFError:
-                    break
-                except Exception:
-                    # the file is append-only with fsync per frame, so a
-                    # parse failure can only be the TORN tail of a crashed
-                    # append (tiny tears raise EOFError, bigger ones
-                    # UnpicklingError) — recover to the last clean frame
+                    recs = pickle.load(bio)
+                except Exception:   # EOF = done; anything else = torn tail
                     break
                 wal.records.extend(recs)
-                clean_end = f.tell()
-        # bytes past the last clean frame were never acknowledged: warn,
-        # never parse past them, and let save_repo truncate before
-        # appending (appending after garbage would brick the store)
-        if size > clean_end:
-            print(f"warning: dropping {size - clean_end} byte(s) of "
-                  f"torn trailing frame in {store} (unacknowledged "
-                  "crashed write)", file=sys.stderr)
-    engine = Engine.replay(wal)
-    # replay re-executes with _log=False into a FRESH (empty) WAL —
-    # re-attach the loaded one so this session's records append to it
-    engine.wal = wal
+                clean_end = bio.tell()
+            rewrite = True
+            if _preserve_tail(store, blob[clean_end:]):
+                print(f"warning: {len(blob) - clean_end} byte(s) of torn "
+                      f"trailing frame in {store} (unacknowledged crashed "
+                      f"write) preserved to {store}.corrupt",
+                      file=sys.stderr)
+        else:
+            clean_end = start
+            try:
+                for payload, end in iter_frames(blob, start):
+                    wal.records.extend(pickle.loads(payload))
+                    clean_end = end
+            except TornFrame as err:
+                # recoverable by construction: the tail was never
+                # acknowledged. Preserve it; the next save truncates.
+                if _preserve_tail(store, err.tail):
+                    print(f"warning: {len(err.tail)} byte(s) of torn "
+                          f"trailing frame in {store} (unacknowledged "
+                          f"crashed write) preserved to {store}.corrupt",
+                          file=sys.stderr)
+            # CorruptFrame / StoreVersionError propagate: mid-file damage
+            # is not self-healing — main() surfaces the typed error and
+            # points at `fsck --repair`
+    n_loaded = len(wal.records)
+    engine = Engine.replay(wal)     # adopts `wal`, so new records append
     repo = Repo(engine)
+    if len(wal.records) != n_loaded:
+        # replay dropped a torn trailing commit group: the on-disk frames
+        # still carry it, so appending after them would turn it into
+        # mid-log damage — rewrite the store whole on the next save
+        rewrite = True
     repo._persisted_records = len(wal.records)
     repo._persisted_offset = clean_end
+    repo._rewrite_store = rewrite
     return repo
 
 
@@ -102,14 +170,48 @@ def save_repo(store: str, repo: Repo) -> None:
     done = getattr(repo, "_persisted_records", 0)
     new = repo.engine.wal.records[done:]
     exists = os.path.exists(store)
+    if getattr(repo, "_rewrite_store", False):
+        # legacy upgrade (or a dropped torn txn group): rewrite the whole
+        # store in the framed format, atomically via rename
+        tmp = store + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(STORE_HEADER)
+            f.write(encode_frame(pickle.dumps(
+                repo.engine.wal.records, protocol=pickle.HIGHEST_PROTOCOL)))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, store)
+        repo._persisted_offset = os.path.getsize(store)
+        repo._persisted_records = len(repo.engine.wal.records)
+        repo._rewrite_store = False
+        return
     if not new and exists:
         return
     offset = getattr(repo, "_persisted_offset", 0)
     with open(store, "r+b" if exists else "wb") as f:
-        f.truncate(offset)          # drop any torn tail before appending
+        if offset < len(STORE_HEADER):
+            f.write(STORE_HEADER)
+            offset = len(STORE_HEADER)
+        f.seek(0, os.SEEK_END)
+        if f.tell() > offset:
+            # torn tail from a previous crash: already preserved by
+            # load_repo; truncate HERE, at save-time, so a purely
+            # read-only session never modifies the store file
+            f.seek(offset)
+            _preserve_tail(store, f.read())
+            f.truncate(offset)
         f.seek(offset)
-        pickle.dump(new, f, protocol=pickle.HIGHEST_PROTOCOL)
+        frame = encode_frame(pickle.dumps(new,
+                                          protocol=pickle.HIGHEST_PROTOCOL))
+        # two-part write around the crash point so an injected mid-frame
+        # kill leaves genuinely torn bytes on disk for load to recover
+        half = len(frame) // 2
+        f.write(frame[:half])
         f.flush()
+        crash_point(CP_SAVE_MID_FRAME)
+        f.write(frame[half:])
+        f.flush()
+        crash_point(CP_SAVE_PRE_FSYNC)
         os.fsync(f.fileno())
         repo._persisted_offset = f.tell()
     repo._persisted_records = done + len(new)
@@ -286,10 +388,79 @@ _READ_ONLY = {"diff", "log", "branches", "snapshots", "prs", "tables",
               "status", "gc"}
 
 #: error types with a deliberate user-facing shape (ref/statement/VCS
-#: semantics); anything else caught below gets its class name surfaced
+#: semantics, durable-format damage); anything else caught below gets its
+#: class name surfaced
 _TYPED_ERRORS = (UnknownRefError, AmbiguousRefError, RefSyntaxError,
                  StatementError, MergeConflictError, PublishBlocked,
-                 RevertConflict, PKViolation, TxnConflict)
+                 RevertConflict, PKViolation, TxnConflict,
+                 StoreFormatError)
+
+
+def _store_fsck(store: str, repair: bool) -> int:
+    """Byte-level pass of `dg fsck`: header + frame CRC verification.
+
+    Returns the count of UNREPAIRED store-level problems. With ``repair``,
+    a corrupt frame is handled git-style: everything from the bad frame
+    onward moves to ``<store>.corrupt`` and the store truncates to the
+    last clean prefix (acknowledged data is lost but preserved — the
+    report says exactly how many bytes)."""
+    with open(store, "rb") as f:
+        blob = f.read()
+    if not blob:
+        return 0
+    try:
+        clean = check_store_header(blob)
+        if clean < 0:
+            print(f"store: legacy headerless format (no checksums) — "
+                  "loads once; any write upgrades it to the framed format")
+            return 0
+        for _, end in iter_frames(blob, clean):
+            clean = end
+    except TornFrame as err:
+        preserved = _preserve_tail(store, err.tail)
+        print(f"store: torn tail — {len(err.tail)} unacknowledged byte(s) "
+              f"past offset {err.clean_end}"
+              + (f" (preserved to {store}.corrupt)" if preserved
+                 else " (already preserved)"))
+        return 0                    # recoverable: load handles this
+    except (CorruptFrame, StoreVersionError) as err:
+        print(f"store: {err}")
+        if repair and isinstance(err, CorruptFrame):
+            _preserve_tail(store, blob[err.offset:])
+            with open(store, "r+b") as f:
+                f.truncate(err.offset)
+                f.flush()
+                os.fsync(f.fileno())
+            print(f"store: truncated to last clean frame at offset "
+                  f"{err.offset}; {len(blob) - err.offset} byte(s) "
+                  f"preserved to {store}.corrupt")
+            return 0
+        if isinstance(err, CorruptFrame):
+            print("hint: `fsck --repair` truncates to the last clean "
+                  "frame (damaged bytes preserved to the .corrupt "
+                  "sidecar), or restore the store from a backup")
+        return 1
+    return 0
+
+
+def _cmd_fsck(args) -> int:
+    bad = _store_fsck(args.store, args.repair)
+    if bad:
+        return 1
+    repo = load_repo(args.store)
+    report = repo.fsck(sample=args.sample,
+                       check_replay=not args.no_replay,
+                       repair=args.repair)
+    print(report.summary())
+    for issue in report.issues:
+        print(str(issue))
+    if report.repaired:
+        # engine state derives from the WAL at every load; quarantine
+        # results live only in this process — the durable fix for a
+        # WAL-backed store is the byte-level truncation above
+        print("note: object-level repairs apply to this process; the "
+              "store re-derives state from its WAL on every load")
+    return 0 if report.ok else 1
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -383,6 +554,17 @@ def build_parser() -> argparse.ArgumentParser:
                         ("status", "full repo summary"),
                         ("gc", "mark-sweep garbage collection")):
         sub.add_parser(name, help=help_)
+
+    p = sub.add_parser("fsck", help="verify store frames, object "
+                                    "signatures, refs, replay equivalence")
+    p.add_argument("--repair", action="store_true",
+                   help="truncate past store corruption (bytes preserved "
+                        "to .corrupt) and quarantine bad objects")
+    p.add_argument("--sample", type=float, default=1.0,
+                   help="fraction of objects to signature-verify "
+                        "(default 1.0 = all)")
+    p.add_argument("--no-replay", action="store_true",
+                   help="skip the WAL replay-equivalence check")
     return ap
 
 
@@ -403,6 +585,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                   "(or point --store/$VCS_STORE at the right file)",
                   file=sys.stderr)
             return 2
+        if args.cmd == "fsck":
+            return _cmd_fsck(args)
         repo = load_repo(args.store)
         if args.cmd == "seed":
             print(seed_table(repo, args.table, args.rows, args.seed,
@@ -452,6 +636,11 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"error [{type(exc).__name__}]: {msg}", file=sys.stderr)
             if os.environ.get("VCS_DEBUG"):
                 raise
+        if isinstance(exc, CorruptFrame):
+            print("hint: the store has mid-file damage — run "
+                  "`datagit fsck --repair` to truncate to the last clean "
+                  "frame (damaged bytes preserved to the .corrupt "
+                  "sidecar), or restore from a backup", file=sys.stderr)
         suggestions = getattr(exc, "suggestions", ())
         if suggestions:
             print("hint: " + " | ".join(map(str, suggestions)),

@@ -196,3 +196,123 @@ def test_random_history_round_trips(seed):
     for _ in range(40):
         menu[int(rng.integers(0, len(menu)))]()
     assert_replay_equivalent(e)
+
+
+# --------------------------------------------------------------------------
+# crash at EVERY record boundary (ISSUE 6): a log cut anywhere must replay
+# deterministically to exactly one of the states a clean run passes through
+# --------------------------------------------------------------------------
+
+def _assert_every_boundary_is_all_or_nothing(e, states):
+    """Cut e's log after every record; each prefix must replay (twice,
+    byte-identically) to an op-boundary state — a cut inside a multi-table
+    commit group collapses to the pre-transaction state, never a partial
+    one."""
+    records = e.wal.records
+    for k in range(len(records) + 1):
+        w1, w2 = WAL(), WAL()
+        w1.records = list(records[:k])
+        w2.records = list(records[:k])
+        r1, r2 = Engine.replay(w1), Engine.replay(w2)
+        d1 = digests(r1)
+        assert d1 == digests(r2), f"replay at boundary {k} nondeterministic"
+        assert r1.commit_log == r2.commit_log
+        assert d1 in states, (
+            f"cut after record {k}: recovered state is not an op boundary "
+            "(a partial operation survived the crash)")
+
+
+def _stepper(e):
+    states = [digests(e)]
+
+    def step(fn):
+        fn()
+        states.append(digests(e))
+    return step, states
+
+
+def test_crash_at_every_record_boundary_is_all_or_nothing():
+    """Deterministic mixed history: storage ops, a multi-table transaction
+    (2 records, 1 boundary inside the group), and the porcelain cycle."""
+    e = Engine()
+    step, states = _stepper(e)
+    step(lambda: e.create_table("t", SCH))
+    step(lambda: e.create_table("u", SCH))
+    step(lambda: e.insert("t", _batch([1, 2, 3])))
+    step(lambda: e.insert("u", _batch([10, 11])))
+
+    def multi():
+        tx = e.begin()
+        tx.insert("t", _batch([4]))
+        tx.insert("u", _batch([12]))
+        tx.commit()
+    step(multi)
+    step(lambda: e.delete_by_keys("t", {"k": np.asarray([3])}))
+    step(lambda: e.create_snapshot("s1", "t"))
+    step(lambda: e.create_branch("dev", ["t", "u"]))
+    step(lambda: e.update_by_keys("dev/t", _batch([2], vals=[9.0])))
+    pr_box = []
+    step(lambda: pr_box.append(e.open_pr("main", "dev")))
+    step(lambda: pr_box[0].publish())
+    step(lambda: pr_box[0].revert_publish())
+    step(lambda: compact_objects(
+        e, "t", list(e.table("t").directory.data_oids)))
+    step(lambda: e.update_by_keys("t", _batch([1], vals=[5.0])))
+    _assert_every_boundary_is_all_or_nothing(e, states)
+
+
+@pytest.mark.parametrize("seed", [5, 6, 7])
+def test_random_history_every_boundary(seed):
+    """Seeded-random op sequences x a crash at every WAL record boundary:
+    the torn prefix always lands on (exactly) an op-boundary state."""
+    rng = np.random.default_rng(seed)
+    e = Engine()
+    step, states = _stepper(e)
+    step(lambda: e.create_table("t", SCH))
+    step(lambda: e.create_table("u", SCH))
+    next_key = [0]
+    live = []
+
+    def fresh(n):
+        ks = list(range(next_key[0], next_key[0] + n))
+        next_key[0] += n
+        live.extend(ks)
+        return ks
+
+    for _ in range(25):
+        r = rng.random()
+        if r < 0.35:
+            b = _batch(fresh(int(rng.integers(1, 6))))
+            step(lambda: e.insert("t", b))
+        elif r < 0.50:
+            bt, bu = _batch(fresh(2)), _batch([int(rng.integers(50, 99))])
+
+            def multi():
+                tx = e.begin()
+                tx.insert("t", bt)
+                tx.insert("u", bu)
+                tx.commit()
+            step(multi)
+        elif r < 0.65 and live:
+            ks = rng.choice(live, size=min(2, len(live)), replace=False)
+            b = _batch(ks, vals=rng.random(ks.shape[0]))
+            step(lambda: e.update_by_keys("t", b))
+        elif r < 0.75 and len(live) > 1:
+            k = live.pop(int(rng.integers(0, len(live))))
+            step(lambda: e.delete_by_keys("t", {"k": np.asarray([k])}))
+        elif r < 0.85:
+            name = f"s{len(e.snapshots)}"
+            step(lambda: e.create_snapshot(name, "t"))
+        elif "dev" not in e.branches and live:
+            step(lambda: e.create_branch("dev", ["t"]))
+            ks = rng.choice(live, size=1)
+            b = _batch(ks, vals=rng.random(1))
+            step(lambda: e.update_by_keys("dev/t", b))
+            box = []
+            step(lambda: box.append(e.open_pr("main", "dev")))
+            step(lambda: box[0].publish(mode=ConflictMode.ACCEPT))
+            step(lambda: box[0].revert_publish())
+        else:
+            step(lambda: compact_objects(
+                e, "t", list(e.table("t").directory.data_oids)))
+    _assert_every_boundary_is_all_or_nothing(e, states)
