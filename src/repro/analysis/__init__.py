@@ -1,0 +1,16 @@
+"""Static invariant analysis for the VCS engine (ISSUE 7).
+
+``python -m repro.analysis [paths...]`` lints the tree; ``datagit lint``
+is the CLI door onto the same runner. See :mod:`repro.analysis.runner`
+for the pass list, the pragma grammar, and the pinned JSON schema.
+"""
+from .base import Finding, LintModule, Rule
+from .runner import (ALL_RULES, KNOWN_TOKENS, SCHEMA_VERSION, default_paths,
+                     discover_count, load_baseline, main, render_text,
+                     repo_root, run_analysis, to_json)
+
+__all__ = [
+    "ALL_RULES", "Finding", "KNOWN_TOKENS", "LintModule", "Rule",
+    "SCHEMA_VERSION", "default_paths", "discover_count", "load_baseline",
+    "main", "render_text", "repo_root", "run_analysis", "to_json",
+]

@@ -1,0 +1,145 @@
+"""Sealed-object immutability pass (static half of the write sanitizer).
+
+Sealed objects (``DataObject``/``TombstoneObject``) are immutable by
+contract: zone maps, signature carries, the visibility/delta caches, and
+replay determinism all assume a sealed lane never changes. The runtime
+half (``REPRO_SANITIZE=1``) freezes every sealed numpy lane at
+``ObjectStore.put``; this pass catches the writes statically, including
+through local aliases::
+
+    arr = obj.cols["v"]          # alias of a sealed lane
+    arr[3] = 0.0                 # flagged (taint-tracked)
+    obj.key_lo[i] = sig          # flagged (direct)
+    lane.setflags(write=True)    # flagged (un-freezing)
+
+Alias tracking is intra-function and deliberately conservative: taint
+propagates through plain views (subscript/slice, ``.view``, ``.reshape``,
+``.ravel``) and dies at allocating calls (``.copy()``, ``np.concatenate``,
+arithmetic), so rebinding a lane into a fresh array stays clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .base import Finding, LintModule, Rule, call_chain
+
+#: attribute names that are sealed-object lanes
+SEALED_ATTRS = frozenset({
+    "cols", "commit_ts", "row_lo", "row_hi", "key_lo", "key_hi",
+    "lob_sigs", "target",
+})
+
+#: methods that return a VIEW of their receiver (taint flows through)
+_VIEW_METHODS = frozenset({"view", "reshape", "ravel", "squeeze",
+                           "transpose"})
+
+#: ndarray methods that mutate their receiver in place
+_MUTATORS = frozenset({"fill", "sort", "partition", "put", "itemset",
+                       "byteswap"})
+
+
+def _taints(expr: ast.AST, tainted: Set[str]) -> bool:
+    """Does ``expr`` evaluate to (a view of) a sealed lane?"""
+    if isinstance(expr, ast.Attribute):
+        return expr.attr in SEALED_ATTRS
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    if isinstance(expr, ast.Subscript):
+        return _taints(expr.value, tainted)
+    if isinstance(expr, ast.Call):
+        if (isinstance(expr.func, ast.Attribute)
+                and expr.func.attr in _VIEW_METHODS):
+            return _taints(expr.func.value, tainted)
+        return False
+    return False
+
+
+class SealedWriteRule(Rule):
+    id = "sealed-write"
+    pragma = "seal-ok"
+    doc = ("in-place writes to sealed-object lanes (cols/commit_ts/row_*/"
+           "key_*/lob_sigs/target), including through local aliases, and "
+           "setflags(write=True) un-freezing")
+
+    def check(self, mod: LintModule, project) -> List[Finding]:
+        if mod.tree is None:
+            return []
+        out: List[Finding] = []
+        scopes = [n for n in ast.walk(mod.tree)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        scopes.append(mod.tree)
+        seen: Set[int] = set()
+        for scope in scopes:
+            tainted: Set[str] = set()
+            body = scope.body if hasattr(scope, "body") else []
+            for stmt in body:
+                self._visit_stmt(mod, stmt, tainted, out, seen)
+        return out
+
+    def _visit_stmt(self, mod, stmt, tainted, out, seen) -> None:
+        # statement-order walk so aliases are bound before their writes
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                self._check_store(mod, t, stmt.value, tainted, out, seen)
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    if _taints(stmt.value, tainted):
+                        tainted.add(t.id)
+                    else:
+                        tainted.discard(t.id)
+        elif isinstance(stmt, ast.AugAssign):
+            self._check_store(mod, stmt.target, stmt.value, tainted, out,
+                              seen)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return                      # nested scope handled separately
+        for sub in ast.iter_child_nodes(stmt):
+            if isinstance(sub, ast.stmt):
+                self._visit_stmt(mod, sub, tainted, out, seen)
+            elif isinstance(sub, ast.ExceptHandler):
+                for s in sub.body:
+                    self._visit_stmt(mod, s, tainted, out, seen)
+            elif isinstance(sub, ast.expr):
+                self._check_expr(mod, sub, tainted, out, seen)
+
+    def _check_store(self, mod, target, value, tainted, out, seen) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._check_store(mod, elt, value, tainted, out, seen)
+            return
+        if isinstance(target, ast.Subscript) and id(target) not in seen \
+                and _taints(target.value, tainted):
+            seen.add(id(target))
+            out.append(self.finding(
+                mod, target,
+                "in-place write into a sealed-object lane "
+                "(REPRO_SANITIZE=1 raises here at runtime)",
+                "build a fresh array and seal a new object — sealed "
+                "lanes are immutable; or justify with "
+                "`# lint: seal-ok <reason>`"))
+
+    def _check_expr(self, mod, expr, tainted, out, seen) -> None:
+        for sub in ast.walk(expr):
+            if not isinstance(sub, ast.Call) or id(sub) in seen:
+                continue
+            chain = call_chain(sub)
+            if not chain:
+                continue
+            if chain[-1] == "setflags":
+                for kw in sub.keywords:
+                    if (kw.arg == "write"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True):
+                        seen.add(id(sub))
+                        out.append(self.finding(
+                            mod, sub,
+                            "setflags(write=True) re-arms writes on an "
+                            "array — defeats the sealed-lane sanitizer"))
+            elif (chain[-1] in _MUTATORS
+                    and isinstance(sub.func, ast.Attribute)
+                    and _taints(sub.func.value, tainted)):
+                seen.add(id(sub))
+                out.append(self.finding(
+                    mod, sub,
+                    f".{chain[-1]}() mutates a sealed-object lane in "
+                    "place"))

@@ -160,11 +160,18 @@ def corrupt_object_bit(obj, column: Optional[str] = None, row: int = 0,
     are left untouched — ``core.fsck`` must flag the mismatch."""
     if column is None:
         column = next(c for c, a in obj.cols.items() if a.dtype != object)
-    arr = obj.cols[column]
+    # mutate a writable COPY and swing the lane pointer: under
+    # REPRO_SANITIZE=1 the sealed arrays themselves are frozen, and the
+    # injector must plant bit rot without tripping the sanitizer it is
+    # there to exercise
+    arr = obj.cols[column].copy()
     if arr.dtype == object:                      # LOB: mutate one byte
         v = bytearray(arr[row])
         v[0] ^= 1 << (bit & 7)
         arr[row] = bytes(v)
-        return
-    flat = arr.view(np.uint8).reshape(-1)
-    flat[row * arr.dtype.itemsize] ^= np.uint8(1 << (bit & 7))
+    else:
+        flat = arr.view(np.uint8).reshape(-1)
+        flat[row * arr.dtype.itemsize] ^= np.uint8(1 << (bit & 7))
+    # lint: seal-ok deliberate corruption injector — swaps in a rotted
+    # copy so fsck/CRC layers can be tested against in-memory bit flips
+    obj.cols[column] = arr

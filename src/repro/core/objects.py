@@ -10,6 +10,7 @@ paper's (object name, position) rowids.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -18,6 +19,35 @@ import numpy as np
 from .schema import Schema, batch_nbytes, take_batch
 
 OBJECT_CAPACITY = 1 << 18  # max rows per sealed object (256Ki)
+
+#: the sealed-lane write sanitizer (ISSUE 7): when armed, every numpy lane
+#: of a sealed object is marked ``writeable=False`` at store time, so an
+#: in-place mutation raises ``ValueError`` AT the write instead of
+#: corrupting zone maps / carried signatures silently. Off by default —
+#: the only disarmed cost is one module-global truthiness test per seal.
+#: Tier-1 CI runs with REPRO_SANITIZE=1.
+SANITIZE = os.environ.get("REPRO_SANITIZE", "0") not in ("", "0")
+
+
+def set_sanitize(on: bool) -> bool:
+    """Arm/disarm the write sanitizer; returns the previous state (tests
+    restore it). Only objects sealed while armed are frozen — already-
+    sealed objects keep whatever flags they have."""
+    global SANITIZE
+    prev = SANITIZE
+    SANITIZE = bool(on)
+    return prev
+
+
+def _freeze_lanes(obj) -> None:
+    """Mark every numpy lane of a sealed object read-only (idempotent)."""
+    if isinstance(obj, DataObject):
+        lanes = [obj.commit_ts, obj.row_lo, obj.row_hi, obj.key_lo,
+                 obj.key_hi, *obj.cols.values(), *obj.lob_sigs.values()]
+    else:
+        lanes = [obj.commit_ts, obj.target, obj.key_lo, obj.key_hi]
+    for a in lanes:
+        a.setflags(write=False)
 
 _OFF_MASK = np.uint64(0xFFFFFFFF)
 
@@ -136,7 +166,7 @@ def seal_data_object(oid: int, schema: Schema, batch: Dict[str, np.ndarray],
         key_hi = row_hi_s if key_hi is row_hi else key_hi[order]
         row_lo, row_hi = row_lo_s, row_hi_s
         lob_sigs = {k: v[order] for k, v in lob_sigs.items()}
-    return DataObject(
+    obj = DataObject(
         oid=oid,
         nrows=int(row_lo.shape[0]),
         cols=batch,
@@ -146,6 +176,9 @@ def seal_data_object(oid: int, schema: Schema, batch: Dict[str, np.ndarray],
         lob_sigs=lob_sigs,
         nbytes=batch_nbytes(schema, batch),
     )
+    if SANITIZE:
+        _freeze_lanes(obj)
+    return obj
 
 
 class ObjectStore:
@@ -180,6 +213,8 @@ class ObjectStore:
 
     def put(self, obj) -> int:
         assert obj.oid not in self._objects, "objects are immutable/write-once"
+        if SANITIZE:
+            _freeze_lanes(obj)
         self._objects[obj.oid] = obj
         self.bytes_written += int(obj.nbytes)
         return obj.oid

@@ -30,6 +30,7 @@ Supported statements (keywords case-insensitive; refs quoted or bare)::
     STATUS
     GC
     FSCK [REPAIR]
+    LINT
 
 ``execute(repo, text)`` runs one statement; ``execute_script`` splits on
 ``;``. Unknown verbs raise :class:`StatementError` with did-you-mean
@@ -444,11 +445,27 @@ def _fsck(repo, p: _P) -> StatementResult:
     return StatementResult("fsck", report, "\n".join(lines))
 
 
+def _lint(repo, p: _P) -> StatementResult:
+    """Static invariant analysis of the SOURCE tree (not the repo data) —
+    the statement surface of ``datagit lint`` / ``python -m
+    repro.analysis``, so statement-driven sessions can gate on it too."""
+    p.end()
+    from ..analysis import (default_paths, discover_count, render_text,
+                            repo_root, run_analysis)
+    root = repo_root()
+    paths = default_paths(root)
+    findings = run_analysis(paths, root=root)
+    return StatementResult(
+        "lint", findings,
+        render_text(findings, discover_count(paths)))
+
+
 _HANDLERS = {
     "CREATE": _create, "DROP": _drop, "CLONE": _clone, "DIFF": _diff,
     "MERGE": _merge, "OPEN": _open, "CHECK": _check, "PUBLISH": _publish,
     "CLOSE": _close, "REVERT": _revert, "RESTORE": _restore, "LOG": _log,
     "SHOW": _show, "STATUS": _status, "GC": _gc, "FSCK": _fsck,
+    "LINT": _lint,
 }
 _VERBS = tuple(_HANDLERS)        # one source of truth for did-you-mean
 

@@ -20,10 +20,14 @@ recovery and the CLI share one durability story.
   ... revert-pr 1
   ... gc
   ... fsck
+  ... lint --format json
 
 ``seed`` / ``mutate`` generate deterministic demo data (they are the only
 subcommands that do not map onto a statement — statements are the VCS
-surface, not a DML surface).
+surface, not a DML surface). ``lint`` runs the static invariant analysis
+suite (``repro.analysis``) over the source tree; it needs no store at
+all and shares the runner with ``python -m repro.analysis`` and the
+``LINT`` statement.
 
 Caveat on ``pr check``: user CI checks are in-process Python callables
 (``repo.pr(n).add_check(fn)``) and cannot survive the WAL round-trip, so
@@ -102,6 +106,8 @@ def _preserve_tail(store: str, tail: bytes) -> bool:
     with open(side, "ab") as f:
         f.write(tail)
         f.flush()
+        # lint: crash-ok sidecar preservation is best-effort forensics —
+        # a crash here loses no acknowledged data (the store is untouched)
         os.fsync(f.fileno())
     return True
 
@@ -430,6 +436,8 @@ def _store_fsck(store: str, repair: bool) -> int:
             with open(store, "r+b") as f:
                 f.truncate(err.offset)
                 f.flush()
+                # lint: crash-ok repair truncation is idempotent — a
+                # crash here re-runs fsck --repair to the same offset
                 os.fsync(f.fileno())
             print(f"store: truncated to last clean frame at offset "
                   f"{err.offset}; {len(blob) - err.offset} byte(s) "
@@ -555,6 +563,48 @@ def build_parser() -> argparse.ArgumentParser:
                         ("gc", "mark-sweep garbage collection")):
         sub.add_parser(name, help=help_)
 
+    p = sub.add_parser(
+        "lint",
+        help="static invariant analysis of the source tree",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        description=(
+            "Run the invariant analysis suite (repro.analysis) over the "
+            "repo's src/, benchmarks/ and examples/ trees (or the given "
+            "paths).\n\n"
+            "Passes:\n"
+            "  sorted-claims   runs=/sigs=/presorted=True claims outside\n"
+            "                  the reviewed producer modules\n"
+            "  hidden-sort     np.sort/lexsort/unique/argsort on the\n"
+            "                  zero-rehash hot paths (delta/merge/ops/"
+            "engine)\n"
+            "  crash-coverage  core.faults registry vs crash_point sites;\n"
+            "                  unguarded fsync/directory swings; broad\n"
+            "                  excepts around seams\n"
+            "  deprecation     PR 5 deprecated resolvers, incl. aliasing\n"
+            "                  and getattr forms\n"
+            "  wal-hygiene     WAL kinds vs the replay dispatch; time/RNG\n"
+            "                  in logging functions\n"
+            "  sealed-write    in-place writes to sealed-object lanes\n"
+            "                  (static half of REPRO_SANITIZE=1)\n\n"
+            "Suppress a finding with a JUSTIFIED pragma on the finding\n"
+            "line or a comment line directly above:\n"
+            "  # lint: <token> <reason>\n"
+            "where <token> is the pass's token (runs-ok, sort-ok,\n"
+            "crash-ok, legacy-ok, wal-ok, seal-ok). A pragma without a\n"
+            "reason suppresses nothing and is itself a finding.\n\n"
+            "Exit codes: 0 clean, 1 unsuppressed findings, 2 usage "
+            "error."))
+    p.add_argument("paths", nargs="*",
+                   help="files/dirs to lint (default: the repo tree)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--baseline", metavar="FILE", default=None,
+                   help="only findings absent from this JSON snapshot "
+                        "fail the run")
+    p.add_argument("--write-baseline", metavar="FILE", default=None,
+                   help="write the findings snapshot and exit 0")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="also list suppressed findings")
+
     p = sub.add_parser("fsck", help="verify store frames, object "
                                     "signatures, refs, replay equivalence")
     p.add_argument("--repair", action="store_true",
@@ -571,6 +621,20 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
     try:
+        if args.cmd == "lint":
+            # pure source analysis: no store, no repo — same runner and
+            # exit-code contract as `python -m repro.analysis`
+            from .analysis.runner import main as lint_main
+            largv: List[str] = list(args.paths)
+            if args.format != "text":
+                largv += ["--format", args.format]
+            if args.baseline:
+                largv += ["--baseline", args.baseline]
+            if args.write_baseline:
+                largv += ["--write-baseline", args.write_baseline]
+            if args.verbose:
+                largv.append("-v")
+            return lint_main(largv)
         if args.cmd == "init":
             if os.path.exists(args.store):
                 print(f"error: store {args.store} already exists "

@@ -3,12 +3,38 @@
 One definition of the test schema, batch builder, and the content-digest
 idiom (order-independent hash over full-row signatures) — so every suite
 asserts the SAME notion of table equivalence.
+
+Also the global-state hygiene fixture (ISSUE 7): tests that flip
+``sigs.DEBUG_VALIDATE_CARRY``, arm ``faults.inject``, or toggle the
+sealed-write sanitizer are restored after EVERY test, so suite ordering
+can never mask a carry/crash/sanitizer bug.
 """
 import hashlib
 
 import numpy as np
+import pytest
 
 from repro.core import Column, CType, Schema
+from repro.core import faults as _faults
+from repro.core import objects as _objects
+from repro.core import sigs as _sigs
+
+
+@pytest.fixture(autouse=True)
+def _restore_invariant_globals():
+    """Snapshot/restore the three debug globals around each test.
+
+    ``faults._ACTIVE`` is always DISARMED on exit (an armed plan leaking
+    out of a test would crash unrelated suites at their first seam, far
+    from the leak); the carry-validation and sanitizer flags restore to
+    whatever the test found, since CI legitimately runs whole sessions
+    with REPRO_SANITIZE=1."""
+    carry = _sigs.DEBUG_VALIDATE_CARRY
+    sanitize = _objects.SANITIZE
+    yield
+    _sigs.DEBUG_VALIDATE_CARRY = carry
+    _objects.SANITIZE = sanitize
+    _faults._ACTIVE = None
 
 VCS_SCHEMA = Schema((Column("k", CType.I64), Column("v", CType.F64),
                      Column("doc", CType.LOB)), primary_key=("k",))

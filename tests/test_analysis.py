@@ -1,0 +1,330 @@
+"""Self-consistency suite for the invariant lint (ISSUE 7).
+
+Every pass gets a POSITIVE fixture (a known-bad snippet is flagged) and a
+NEGATIVE fixture (a justified pragma suppresses it); the repo itself must
+lint clean; the JSON schema and the baseline-diff contract are pinned; and
+the CI failure mode is demonstrated by running the real entry point on an
+injected bad snippet (exit 1) rather than by breaking CI.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import (ALL_RULES, SCHEMA_VERSION, default_paths,
+                            repo_root, run_analysis, to_json)
+from repro.analysis.runner import main as lint_main
+
+REPO = repo_root()
+
+
+def lint_tree(tmp_path, files, _seq=[0]):
+    """Write {relpath: source} under a fresh subtree and lint it."""
+    _seq[0] += 1
+    base = tmp_path / f"tree{_seq[0]}"
+    for rel, src in files.items():
+        f = base / rel
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(src)
+    return run_analysis([base], root=base)
+
+
+def flagged(findings, rule):
+    return [f for f in findings if f.rule == rule and not f.suppressed]
+
+
+def suppressed(findings, rule):
+    return [f for f in findings if f.rule == rule and f.suppressed]
+
+
+# --------------------------------------------------------------------------
+# per-rule positive + negative fixtures
+# --------------------------------------------------------------------------
+
+def test_sorted_claims_positive_and_negative(tmp_path):
+    fs = lint_tree(tmp_path, {"app.py": (
+        "s = SignedStream(d, runs=r)\n"
+        "b = SigBatch(a, b, c, d, e, runs=r)\n"
+        "o = seal_data_object(1, sch, batch, ts, rl, rh, kl, kh, {},\n"
+        "                     presorted=True)\n"
+        "tx.insert('t', batch, sigs=s)\n"
+        "r1 = SigBatch.sorted_run()\n"
+        "ok = SignedStream(d, runs=None)\n"          # no claim: clean
+        "tx2.insert('t', batch)\n"                   # no sigs: clean
+    )})
+    msgs = [f.message for f in flagged(fs, "sorted-claims")]
+    assert len(msgs) == 5, msgs
+    assert any("SignedStream" in m for m in msgs)
+    assert any("SigBatch constructed" in m for m in msgs)
+    assert any("presorted=True" in m for m in msgs)
+    assert any("sigs=" in m for m in msgs)
+    assert any("sorted_run" in m for m in msgs)
+
+    fs = lint_tree(tmp_path, {"app.py": (
+        "# lint: runs-ok fixture — runs come from a sealed object scan\n"
+        "s = SignedStream(d, runs=r)\n"
+        "tx.insert('t', batch, sigs=s)  "
+        "# lint: runs-ok fixture carry reason\n"
+    )})
+    assert not flagged(fs, "sorted-claims")
+    assert len(suppressed(fs, "sorted-claims")) == 2
+    assert all(f.reason for f in suppressed(fs, "sorted-claims"))
+
+
+def test_sorted_claims_allowlists_producer_modules(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/core/delta.py":
+                              "s = SignedStream(d, runs=r)\n"})
+    assert not flagged(fs, "sorted-claims")
+
+
+def test_hidden_sort_positive_and_negative(tmp_path):
+    bad = "import numpy as np\no = np.lexsort((hi, lo))\nu = np.unique(x)\n"
+    fs = lint_tree(tmp_path, {"src/repro/core/merge.py": bad})
+    assert len(flagged(fs, "hidden-sort")) == 2
+    # same code outside the hot modules: not a finding
+    fs = lint_tree(tmp_path, {"src/repro/core/fsck.py": bad})
+    assert not flagged(fs, "hidden-sort")
+    fs = lint_tree(tmp_path, {"src/repro/core/merge.py": (
+        "import numpy as np\n"
+        "# lint: sort-ok fixture — conflict-slice refinement\n"
+        "o = np.lexsort((hi, lo))\n"
+    )})
+    assert not flagged(fs, "hidden-sort")
+    assert suppressed(fs, "hidden-sort")
+
+
+def test_crash_coverage_positive_and_negative(tmp_path):
+    fs = lint_tree(tmp_path, {"seams.py": (
+        "import os\n"
+        "from repro.core.faults import crash_point, register\n"
+        "CP_DEAD = register('fixture.dead', 'never marked')\n"
+        "CP_LIVE = register('fixture.live', 'marked in swallow')\n"
+        "def save(f):\n"
+        "    os.fsync(f.fileno())\n"
+        "def swallow():\n"
+        "    try:\n"
+        "        crash_point(CP_LIVE)\n"
+        "    except Exception:\n"
+        "        pass\n"
+    )})
+    msgs = [f.message for f in flagged(fs, "crash-coverage")]
+    assert any("'fixture.dead' is registered but never" in m
+               for m in msgs), msgs
+    assert any("os.fsync" in m for m in msgs), msgs
+    assert any("except Exception" in m for m in msgs), msgs
+
+    fs = lint_tree(tmp_path, {"seams.py": (
+        "import os\n"
+        "from repro.core.faults import crash_point, register\n"
+        "CP_SAVE = register('fixture.save', 'pre-fsync seam')\n"
+        "def save(f):\n"
+        "    crash_point(CP_SAVE)\n"
+        "    os.fsync(f.fileno())\n"
+        "def forensic(f):\n"
+        "    # lint: crash-ok fixture — best-effort sidecar, no ack lost\n"
+        "    os.fsync(f.fileno())\n"
+    )})
+    assert not flagged(fs, "crash-coverage")
+    assert suppressed(fs, "crash-coverage")
+
+
+def test_deprecation_catches_aliasing_attr_and_getattr(tmp_path):
+    fs = lint_tree(tmp_path, {"app.py": (
+        "from repro.core.workspace import resolve_branch as rb\n"
+        "f = engine.resolve_snapshot\n"          # aliased, called later
+        "g = getattr(engine, 'snapshot_at')\n"
+        "snap = f(ref)\n"
+    )})
+    hows = [f.message for f in flagged(fs, "deprecation")]
+    assert len(hows) == 3, hows
+    assert any("import" in m for m in hows)
+    assert any("attribute access" in m for m in hows)
+    assert any("getattr" in m for m in hows)
+
+    fs = lint_tree(tmp_path, {"app.py": (
+        "# lint: legacy-ok fixture — migration shim for one release\n"
+        "f = engine.resolve_snapshot\n"
+    )})
+    assert not flagged(fs, "deprecation")
+    assert suppressed(fs, "deprecation")
+    # the shim module itself may define/use the names
+    fs = lint_tree(tmp_path, {"src/repro/core/engine.py": (
+        "def resolve_snapshot(self, ref):\n    return None\n"
+        "x = engine.resolve_snapshot\n"
+    )})
+    assert not flagged(fs, "deprecation")
+
+
+def test_wal_hygiene_positive_and_negative(tmp_path):
+    facts = {
+        "src/repro/core/wal.py": "KINDS = frozenset({'commit'})\n",
+        "src/repro/core/engine.py": (
+            "class Engine:\n"
+            "    @staticmethod\n"
+            "    def replay(wal):\n"
+            "        for rec in wal:\n"
+            "            k = rec.kind\n"
+            "            if k == 'commit':\n"
+            "                pass\n"
+        ),
+    }
+    fs = lint_tree(tmp_path, {**facts, "app.py": (
+        "import time\n"
+        "def log_bad(self):\n"
+        "    self.wal.append('bogus', ts=time.time())\n"
+    )})
+    msgs = [f.message for f in flagged(fs, "wal-hygiene")]
+    assert any("unknown WAL kind 'bogus'" in m for m in msgs), msgs
+    assert any("time.time" in m for m in msgs), msgs
+
+    fs = lint_tree(tmp_path, {**facts, "app.py": (
+        "def log_ok(self, ts):\n"
+        "    self.wal.append('commit', ts=ts)\n"
+    )})
+    assert not flagged(fs, "wal-hygiene")
+
+    # a kind in KINDS that replay never dispatches is flagged at wal.py
+    facts2 = dict(facts)
+    facts2["src/repro/core/wal.py"] = \
+        "KINDS = frozenset({'commit', 'orphan'})\n"
+    fs = lint_tree(tmp_path, {**facts2, "app.py": "x = 1\n"})
+    msgs = [f.message for f in flagged(fs, "wal-hygiene")]
+    assert any("'orphan'" in m and "never dispatches" in m for m in msgs)
+
+
+def test_sealed_write_positive_negative_and_taint(tmp_path):
+    fs = lint_tree(tmp_path, {"app.py": (
+        "def direct(obj):\n"
+        "    obj.key_lo[0] = 1\n"
+        "def aliased(obj):\n"
+        "    arr = obj.cols['v']\n"
+        "    arr[0] = 2.0\n"
+        "def viewed(obj):\n"
+        "    flat = obj.cols['v'].view('u1')\n"
+        "    flat[3] ^= 1\n"
+        "def unfreeze(a):\n"
+        "    a.setflags(write=True)\n"
+    )})
+    assert len(flagged(fs, "sealed-write")) == 4
+
+    fs = lint_tree(tmp_path, {"app.py": (
+        "def fresh(obj):\n"
+        "    arr = obj.cols['v'].copy()\n"      # copy kills the taint
+        "    arr[0] = 2.0\n"
+        "    out = np.concatenate([obj.key_lo, obj.key_lo])\n"
+        "    out[0] = 3\n"
+        "def injector(obj):\n"
+        "    # lint: seal-ok fixture — corruption injector swaps a copy\n"
+        "    obj.cols['v'] = rotted\n"
+    )})
+    assert not flagged(fs, "sealed-write")
+    assert suppressed(fs, "sealed-write")
+
+
+def test_pragma_meta_rule(tmp_path):
+    fs = lint_tree(tmp_path, {"app.py": (
+        "x = np.unique(y)  # lint: sort-ok\n"          # reasonless
+        "z = 1  # lint: sort-okay typo reason\n"       # unknown token
+    )})
+    msgs = [f.message for f in flagged(fs, "pragma")]
+    assert any("has no reason" in m for m in msgs), msgs
+    assert any("unknown lint pragma token" in m for m in msgs), msgs
+    # and the reasonless pragma did NOT suppress
+    fs2 = lint_tree(tmp_path, {"src/repro/core/merge.py":
+                               "import numpy as np\n"
+                               "x = np.unique(y)  # lint: sort-ok\n"})
+    assert flagged(fs2, "hidden-sort")
+
+
+# --------------------------------------------------------------------------
+# whole-tree gates
+# --------------------------------------------------------------------------
+
+def test_repo_lints_clean():
+    findings = run_analysis(default_paths(REPO), root=REPO)
+    bad = [f for f in findings if not f.suppressed]
+    assert not bad, "\n".join(f.render() for f in bad)
+    # every suppression in the tree carries a written reason
+    assert all(f.reason for f in findings if f.suppressed)
+
+
+def test_every_rule_has_distinct_pragma_token():
+    tokens = [r.pragma for r in ALL_RULES]
+    assert len(set(tokens)) == len(tokens) == len(ALL_RULES) >= 5
+
+
+def test_json_schema_pinned(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/core/merge.py":
+                              "import numpy as np\nx = np.unique(y)\n"})
+    doc = to_json(fs, nfiles=1)
+    assert set(doc) == {"schema", "rules", "counts", "findings"}
+    assert doc["schema"] == SCHEMA_VERSION == 1
+    assert set(doc["counts"]) == {"files", "findings", "suppressed"}
+    assert set(doc["rules"]) == {r.id for r in ALL_RULES}
+    for f in doc["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message",
+                          "hint", "suppressed", "reason"}
+    json.dumps(doc)                     # round-trippable
+
+
+def test_committed_baseline_matches_schema_and_is_clean():
+    base = json.loads((REPO / "LINT_baseline.json").read_text())
+    assert base["schema"] == SCHEMA_VERSION
+    assert base["counts"]["findings"] == 0
+    assert all(f["suppressed"] for f in base["findings"])
+
+
+def test_baseline_diff_lets_known_findings_through(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "core" / "merge.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import numpy as np\nx = np.unique(y)\n")
+    snap = tmp_path / "base.json"
+    assert lint_main([str(tmp_path), "--write-baseline", str(snap)]) == 0
+    capsys.readouterr()
+    # the known finding is covered by the baseline -> exit 0
+    assert lint_main([str(tmp_path), "--baseline", str(snap)]) == 0
+    # a NEW finding is not -> exit 1
+    bad.write_text("import numpy as np\nx = np.unique(y)\n"
+                   "o = np.lexsort((hi, lo))\n")
+    assert lint_main([str(tmp_path), "--baseline", str(snap)]) == 1
+
+
+def test_ci_gate_fails_on_injected_bad_snippet(tmp_path, capsys):
+    """The CI failure mode, demonstrated on the REAL entry points."""
+    bad = tmp_path / "src" / "repro" / "core" / "engine.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import numpy as np\n"
+                   "def apply(batch):\n"
+                   "    return np.lexsort((batch.hi, batch.lo))\n")
+    rc = lint_main([str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "hidden-sort" in out
+    # module entry point, as CI invokes it
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(tmp_path)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1, proc.stderr
+    assert "hidden-sort" in proc.stdout
+
+
+def test_datagit_lint_shares_the_runner(tmp_path, capsys):
+    from repro.vcs_cli import main as cli_main
+    bad = tmp_path / "app.py"
+    bad.write_text("tx.insert('t', b, sigs=s)\n")
+    assert cli_main(["lint", str(tmp_path), "--format", "json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["schema"] == SCHEMA_VERSION
+    assert doc["counts"]["findings"] == 1
+    assert doc["findings"][0]["rule"] == "sorted-claims"
+    # and the repo tree itself exits 0 through the CLI door
+    assert cli_main(["lint"]) == 0
+
+
+def test_lint_statement_surface():
+    from repro.core import Repo
+    from repro.core.statements import execute
+    res = execute(Repo(), "LINT")
+    assert res.kind == "lint"
+    assert "0 finding(s)" in res.message

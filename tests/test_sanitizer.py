@@ -1,0 +1,116 @@
+"""Runtime sealed-write sanitizer (ISSUE 7).
+
+With ``REPRO_SANITIZE=1`` (or ``objects.set_sanitize(True)``) every numpy
+lane of a sealed object is frozen ``writeable=False`` at seal time, so an
+in-place mutation of sealed state raises ``ValueError`` AT THE WRITE —
+instead of silently corrupting zone maps or carried signatures and
+surfacing commits later as an fsck mismatch. The static ``sealed-write``
+lint pass covers the same invariant at review time; this suite covers the
+runtime net, including a full branch → merge → publish → revert workflow
+run entirely with the sanitizer armed.
+"""
+import numpy as np
+import pytest
+
+from conftest import VCS_SCHEMA, content_digest, kv_batch
+from repro.core import Engine, Repo
+from repro.core import objects as objects_mod
+from repro.core.faults import corrupt_object_bit
+from repro.core.fsck import fsck
+from repro.core.objects import set_sanitize
+
+
+def sealed_objects(engine, table):
+    d = engine.table(table).directory
+    return [engine.store.get(oid) for oid in d.data_oids]
+
+
+def armed_engine():
+    set_sanitize(True)          # restored by the autouse conftest fixture
+    eng = Engine()
+    eng.create_table("t", VCS_SCHEMA)
+    eng.insert("t", kv_batch(range(100)))
+    return eng
+
+
+def test_sealed_lane_write_raises_when_armed():
+    eng = armed_engine()
+    (obj,) = sealed_objects(eng, "t")
+    with pytest.raises(ValueError):
+        obj.cols["v"][0] = 99.0
+    with pytest.raises(ValueError):
+        obj.key_lo[0] = 0
+    with pytest.raises(ValueError):
+        obj.commit_ts[:] = 0
+    # aliasing does not launder the freeze: views inherit read-only
+    view = obj.cols["v"].view()
+    with pytest.raises(ValueError):
+        view[0] = 1.0
+
+
+def test_set_sanitize_returns_previous_state():
+    prev = set_sanitize(True)
+    assert set_sanitize(prev) is True
+    assert objects_mod.SANITIZE == prev
+
+
+def test_disarmed_lanes_stay_writeable():
+    set_sanitize(False)
+    eng = Engine()
+    eng.create_table("t", VCS_SCHEMA)
+    eng.insert("t", kv_batch(range(10)))
+    (obj,) = sealed_objects(eng, "t")
+    obj.cols["v"][0] = 42.0     # legal (if ill-advised) when disarmed
+    assert obj.cols["v"][0] == 42.0
+
+
+def test_tombstone_lanes_frozen_too():
+    eng = armed_engine()
+    eng.delete_by_keys("t", {"k": np.arange(5, dtype=np.int64)})
+    d = eng.table("t").directory
+    (tomb,) = [eng.store.get(oid) for oid in d.tomb_oids]
+    with pytest.raises(ValueError):
+        tomb.target[0] = 0
+
+
+def test_corruption_injector_still_works_armed():
+    """faults.corrupt_object_bit is copy-on-write: it must keep working
+    under the sanitizer (it swaps a rotted copy in, never mutates the
+    frozen lane) so the fsck suites can run with REPRO_SANITIZE=1."""
+    eng = armed_engine()
+    (obj,) = sealed_objects(eng, "t")
+    before = obj.cols["v"].copy()
+    corrupt_object_bit(obj, column="v")
+    assert not np.array_equal(before, obj.cols["v"])
+    report = fsck(eng, check_replay=False)
+    assert not report.ok
+
+
+def test_e2e_workflow_green_with_sanitizer_armed():
+    """Seeded branch → mutate → PR → publish → revert, sanitizer on the
+    whole way: proves no hot path (insert, seal, carry-scan, merge apply,
+    Δ revert, GC, fsck) mutates sealed state in place."""
+    set_sanitize(True)
+    repo = Repo()
+    repo.create_table("orders", VCS_SCHEMA)
+    repo.insert("orders", kv_batch(range(1000)))
+    trunk0 = content_digest(repo.engine, "orders")
+
+    repo.branch("dev", tables=["orders"])
+    keys = np.arange(100, 200, dtype=np.int64)
+    repo.update_by_keys("dev/orders", kv_batch(keys, vals=keys * 3.0))
+    repo.delete_by_keys("dev/orders", {"k": np.arange(7, dtype=np.int64)})
+    dev_digest = content_digest(repo.engine, "dev/orders")
+    assert dev_digest != trunk0
+
+    pr = repo.open_pr("dev")
+    repo.publish(pr.id)
+    assert content_digest(repo.engine, "orders") == dev_digest
+
+    rv = repo.revert_pr(pr.id)
+    assert rv is not None
+    assert content_digest(repo.engine, "orders") == trunk0
+
+    repo.gc()
+    report = repo.fsck()
+    assert report.ok, report
