@@ -120,6 +120,10 @@ def _fold_hotpath_trajectory(prev_path, n_rows, rows, note):
                     entry[f"speedup_{m[:-2]}"] = round(before[m] / after[m], 2)
         else:
             entry.update(after)
+        if "counters" in r:
+            # per-case registry snapshot (ISSUE 8) — carried verbatim;
+            # _min_fold only folds the timing metrics above
+            entry["counters"] = r["counters"]
         results.append(entry)
     out = {"bench": "diff_merge_hotpath", "rows": n_rows,
            "change_sets": {r["change"]: r["changed_rows"] for r in rows},

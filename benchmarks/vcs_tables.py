@@ -19,6 +19,7 @@ from repro.configs.paper_vcs import (LINEITEM_SCHEMA, LINEITEM_SCHEMA_NOPK,
                                      gen_lineitem)
 from repro.core import (ConflictMode, Engine, Snapshot, snapshot_diff,
                         sql_diff, three_way_merge)
+from repro.core import telemetry
 from repro.core.diff import gather_payload
 
 CHANGE_SETS = {"C1": 100, "C2": 1_000, "C3": 10_000, "C4": 100_000}
@@ -94,6 +95,9 @@ def diff_merge_hotpath(n_rows: int = 2_000_000, csizes=None,
                     d_cold.stats, "visibility_builds", 0),
                 "merged_inserted": rep.inserted,
                 "merged_deleted": rep.deleted,
+                # full registry snapshot for the case's engine (ISSUE 8):
+                # counters accumulate over seed+diffs+merge of THIS case
+                "counters": telemetry.metrics_snapshot(engine),
             })
     return out
 
@@ -175,6 +179,7 @@ def workflow_scenario(n_rows: int = 2_000_000, csizes=None) -> List[Dict]:
                 "revert_s": t_revert,
                 "diff_groups": d.n_groups,
                 "publish_ts": pr.publish_ts,
+                "counters": telemetry.metrics_snapshot(engine),
             })
     return out
 

@@ -15,6 +15,9 @@ from .base import LintModule, attr_chain, const_str
 
 WAL_MODULE = "repro.core.wal"
 ENGINE_MODULE = "repro.core.engine"
+#: the one repro.core module allowed to read clocks (spans live here; the
+#: wal-hygiene clock check allowlists it)
+TELEMETRY_MODULE = "repro.core.telemetry"
 
 
 class Project:
@@ -114,16 +117,22 @@ class Project:
                     self.wal_kinds.add(s)
 
     def _collect_replay_kinds(self, mod: LintModule) -> None:
+        # the dispatch loop may live in ``replay`` itself or in a
+        # ``_replay*`` helper it delegates to (the public wrapper opens a
+        # telemetry span and resets metrics) — scan both, union the kinds
         for node in ast.walk(mod.tree):
-            if isinstance(node, ast.FunctionDef) and node.name == "replay":
+            if not (isinstance(node, ast.FunctionDef)
+                    and (node.name == "replay"
+                         or node.name.startswith("_replay"))):
+                continue
+            if node.name == "replay":
                 self.replay_line = node.lineno
-                for sub in ast.walk(node):
-                    if isinstance(sub, ast.Compare):
-                        # only DIRECT string operands: `k == "commit"`.
-                        # Walking deeper would pick up subscript keys
-                        # (p["ts"]) that are not dispatch kinds.
-                        for cand in [sub.left, *sub.comparators]:
-                            s = const_str(cand)
-                            if s is not None:
-                                self.replay_kinds.add(s)
-                return
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Compare):
+                    # only DIRECT string operands: `k == "commit"`.
+                    # Walking deeper would pick up subscript keys
+                    # (p["ts"]) that are not dispatch kinds.
+                    for cand in [sub.left, *sub.comparators]:
+                        s = const_str(cand)
+                        if s is not None:
+                            self.replay_kinds.add(s)

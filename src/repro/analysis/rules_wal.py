@@ -14,7 +14,12 @@ Checks:
   in one but not the other is reported once, at the owning module);
 * a function that appends WAL records must not call time/RNG sources
   (``time.*``, ``datetime.now``, ``random.*``, ``np.random.*``,
-  ``secrets``, ``uuid``).
+  ``secrets``, ``uuid``);
+* no ``repro.core`` module reads clocks at all, except
+  ``core.telemetry`` (ISSUE 8): the span tracer is the one sanctioned
+  home for ``perf_counter`` — timings that originate anywhere else in
+  the core can leak into WAL payloads or derived state and diverge
+  replay.
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ from typing import List, Optional
 
 from .base import Finding, LintModule, Rule, attr_chain, call_chain, \
     const_str
-from .project import ENGINE_MODULE, WAL_MODULE
+from .project import ENGINE_MODULE, TELEMETRY_MODULE, WAL_MODULE
 
 #: call chains whose presence in a WAL-appending function breaks replay
 #: determinism (matched on the first element + any tail)
@@ -62,6 +67,20 @@ def _nondet_call(node: ast.AST) -> Optional[ast.Call]:
     return None
 
 
+def _clock_calls(tree: ast.AST) -> List[ast.Call]:
+    """Every ``time.*``/``datetime.*`` clock read in the tree (the
+    module-wide check — RNG is left to the per-function WAL pass)."""
+    out = []
+    for sub in ast.walk(tree):
+        if not isinstance(sub, ast.Call):
+            continue
+        chain = call_chain(sub)
+        if len(chain) >= 2 and chain[0] in ("time", "datetime") \
+                and chain[-1] in _NONDET_TIME:
+            out.append(sub)
+    return out
+
+
 class WalHygieneRule(Rule):
     id = "wal-hygiene"
     pragma = "wal-ok"
@@ -93,6 +112,7 @@ class WalHygieneRule(Rule):
         funcs = [n for n in ast.walk(mod.tree)
                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
         seen_calls = set()
+        flagged_nondet = set()
         for fn in funcs:
             appends = [c for c in _wal_append_calls(fn)
                        if id(c) not in seen_calls]
@@ -123,6 +143,7 @@ class WalHygieneRule(Rule):
                         "at crash time"))
             nondet = _nondet_call(fn)
             if nondet is not None:
+                flagged_nondet.add(id(nondet))
                 src = ".".join(attr_chain(nondet.func)) or "<call>"
                 out.append(self.finding(
                     mod, nondet,
@@ -131,4 +152,21 @@ class WalHygieneRule(Rule):
                     "determinism",
                     "hoist the nondeterminism out (log its result as "
                     "payload) or justify with `# lint: wal-ok <reason>`"))
+        if mod.module.startswith("repro.core.") \
+                and mod.module != TELEMETRY_MODULE:
+            # the clock lives in core.telemetry and ONLY there — a core
+            # module that reads time can leak it into WAL payloads or
+            # derived state, diverging replay (skip calls the WAL pass
+            # above already reported)
+            for call in _clock_calls(mod.tree):
+                if id(call) in flagged_nondet:
+                    continue
+                src = ".".join(attr_chain(call.func)) or "<call>"
+                out.append(self.finding(
+                    mod, call,
+                    f"core module calls {src} — clocks belong to "
+                    f"{TELEMETRY_MODULE} (span timings), nowhere else "
+                    "in repro.core",
+                    "open a telemetry span instead, or justify with "
+                    "`# lint: wal-ok <reason>`"))
         return out

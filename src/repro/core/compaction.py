@@ -18,10 +18,15 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from . import telemetry
 from .faults import crash_point, register
 from .objects import OBJECT_CAPACITY, DataObject, seal_data_object
 from .schema import concat_batches, take_batch
 from .visibility import visibility_index
+
+SP_COMPACTION = telemetry.register_span(
+    "compaction", "rewrite the visible rows of a set of data objects "
+    "into fresh fully-sorted objects")
 
 CP_COMPACT_POST_SEAL = register(
     "compaction.post_seal",
@@ -53,6 +58,12 @@ def compact_objects(engine, table: str, src_oids: Sequence[int],
     """Rewrite the visible rows of ``src_oids`` into fresh objects.
 
     Returns the number of new data objects written."""
+    with telemetry.span(SP_COMPACTION):
+        return _compact_objects(engine, table, src_oids, _log=_log)
+
+
+def _compact_objects(engine, table: str, src_oids: Sequence[int],
+                     *, _log: bool) -> int:
     t = engine.table(table)
     src = [o for o in src_oids if o in set(t.directory.data_oids)]
     if not src:

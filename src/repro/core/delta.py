@@ -42,9 +42,13 @@ from typing import Optional
 import numpy as np
 
 from ..kernels import ops
+from . import telemetry
 from .directory import Directory
 from .objects import DataObject, ObjectStore, pack_rowid
 from .visibility import KeyedLRU, visibility_index
+
+SP_SIGNED_DELTA = telemetry.register_span(
+    "signed_delta", "build the signed Δ stream for one directory pair")
 
 
 _FIELDS = ("sign", "key_lo", "key_hi", "row_lo", "row_hi", "rowid")
@@ -242,6 +246,28 @@ class DeltaCache(KeyedLRU):
 def signed_delta(store: ObjectStore, a: Directory, b: Directory,
                  stats: DeltaStats | None = None) -> SignedStream:
     stats = stats if stats is not None else DeltaStats()
+    with telemetry.span(SP_SIGNED_DELTA):
+        o0 = stats.objects_scanned
+        s0 = stats.objects_skipped_shared
+        r0 = stats.rows_scanned
+        n0 = stats.bytes_scanned
+        try:
+            return _signed_delta(store, a, b, stats)
+        finally:
+            # fold this call's scan work into the store-level cumulatives
+            # (per-call DeltaStats are transient; the tracer and `datagit
+            # stats` read the running sums). In a finally so the
+            # delta-cache-hit early return is folded too.
+            m = store.metrics
+            m.add("delta.objects_scanned", stats.objects_scanned - o0)
+            m.add("delta.objects_skipped_shared",
+                  stats.objects_skipped_shared - s0)
+            m.add("delta.rows_scanned", stats.rows_scanned - r0)
+            m.add("delta.bytes_scanned", stats.bytes_scanned - n0)
+
+
+def _signed_delta(store: ObjectStore, a: Directory, b: Directory,
+                  stats: DeltaStats) -> SignedStream:
     cache = getattr(store, "delta_cache", None)
     if cache is None:
         cache = store.delta_cache = DeltaCache()

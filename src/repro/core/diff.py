@@ -22,7 +22,11 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..kernels import ops
+from . import telemetry
 from .delta import DeltaStats, SignedStream, full_scan_stream, signed_delta
+
+SP_DIFF = telemetry.register_span(
+    "diff", "SNAPSHOT DIFF: Δ-scan + diff aggregation")
 from .directory import Snapshot
 from .objects import ObjectStore, rowid_off, rowid_oid
 from .schema import CType, Schema, concat_batches, take_batch
@@ -221,9 +225,10 @@ def snapshot_diff(store: ObjectStore, a: Snapshot, b: Snapshot) -> DiffResult:
     """Built-in SNAPSHOT DIFF: Δ-scan + diff aggregation (paper §5.1)."""
     if not a.schema.compatible_with(b.schema):
         raise ValueError("SNAPSHOT DIFF: snapshots have incompatible schemas")
-    stats = DeltaStats()
-    stream = signed_delta(store, a.directory, b.directory, stats)
-    return _aggregate_stream(a.schema, stream, stats)
+    with telemetry.span(SP_DIFF):
+        stats = DeltaStats()
+        stream = signed_delta(store, a.directory, b.directory, stats)
+        return _aggregate_stream(a.schema, stream, stats)
 
 
 def sql_diff(store: ObjectStore, a: Snapshot, b: Snapshot) -> DiffResult:

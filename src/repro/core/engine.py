@@ -27,10 +27,24 @@ from .refs import RefSyntaxError, resolve as resolve_ref
 from .schema import Schema, concat_batches, take_batch
 from .sigs import (SigBatch, concat_sigs, key_sigs_for_lookup, resolve_sigs,
                    validate_runs)
+from . import telemetry
 from .faults import crash_point, register
 from .table import Table
 from .visibility import visibility_index
 from .wal import WAL, TornTransaction
+
+SP_COMMIT = telemetry.register_span(
+    "commit", "one atomic (possibly multi-table) transaction commit")
+SP_COMMIT_SEAL = telemetry.register_span(
+    "commit.seal", "commit phase 1: validate every table and seal its "
+    "objects (no directory touched)")
+SP_COMMIT_SWING = telemetry.register_span(
+    "commit.swing", "commit phase 2: swing every directory (the WAL "
+    "group is already logged)")
+SP_GC = telemetry.register_span(
+    "gc", "mark-sweep garbage collection over the object store")
+SP_REPLAY = telemetry.register_span(
+    "replay", "rebuild an engine from a WAL (recovery)")
 
 CP_COMMIT_PRE_SEAL = register(
     "engine.commit.pre_seal",
@@ -173,6 +187,23 @@ class Engine:
             yield
         finally:
             self._op_kind = prev
+
+    def reset_metrics(self) -> None:
+        """Zero every registered telemetry counter on this engine
+        (``telemetry.metrics_snapshot`` reads all zeros afterwards).
+        ``replay`` calls this last: replay re-executes commits with live
+        counters, but traces are derived state, never durable state — a
+        recovered engine must start clean."""
+        self.commit_stats = CommitStats()
+        store = self.store
+        if store.vis_cache is not None:
+            vc = store.vis_cache
+            vc.builds = vc.extends = vc.derives = vc.hits = 0
+        if store.delta_cache is not None:
+            store.delta_cache.hits = 0
+        store.metrics.reset()
+        w = self.wal
+        w.frames = w.bytes_written = w.fsyncs = 0
 
     # ------------------------------------------------------------ basics
     def next_ts(self) -> int:
@@ -350,66 +381,80 @@ class Engine:
         trailing group that replay drops whole; a crash mid-swing leaves a
         complete group that replay applies whole — either way the
         transaction is all-or-nothing after recovery."""
+        with telemetry.span(SP_COMMIT):
+            return self._commit_phases(tx, _log)
+
+    def _commit_phases(self, tx: Txn, _log: bool) -> int:
         crash_point(CP_COMMIT_PRE_SEAL)
         names = sorted(set(tx._ins) | set(tx._del))
         ts = self.next_ts()
         oid0 = self.store._next_oid
         staged: List[Tuple[Table, object, list, np.ndarray, int]] = []
         sealed: List[int] = []
-        try:
-            for name in names:
-                t = self.table(name)
-                # lint: sort-ok delete-target dedup at commit time —
-                # targets arrive from arbitrary staging order
-                dels = (np.unique(np.concatenate(tx._del[name]))
-                        if tx._del.get(name) else np.zeros((0,), np.uint64))
-                # write-write conflict: every target must still be visible
-                if dels.shape[0]:
-                    vi = visibility_index(self.store, t.directory)
-                    if vi.killed_rowids(dels).any():
-                        raise TxnConflict(
-                            f"{name}: delete target already deleted")
-                    live_oids = set(t.directory.data_oids)
-                    # lint: sort-ok per-object liveness check — unique
-                    # oids, not rows; a handful of values per commit
-                    for oid in np.unique(rowid_oid(dels)):
-                        if int(oid) not in live_oids:
-                            raise TxnConflict(f"{name}: target object gone")
-                ins = tx._ins.get(name, [])
-                data_oids, key_sigs = self._seal_inserts(
-                    t.schema, ins, tx._sigs.get(name, [None] * len(ins)), ts)
-                sealed.extend(data_oids)
-                # PK enforcement — the seal path returns the key lanes in
-                # sorted order, so in-batch dedup is one adjacent-equal
-                # scan (np.unique(pairs, axis=0) paid a hidden second sort)
-                if t.schema.has_pk and key_sigs is not None:
-                    klo, khi = key_sigs
-                    if klo.shape[0] > 1 and ((klo[1:] == klo[:-1])
-                                             & (khi[1:] == khi[:-1])).any():
-                        raise PKViolation(
-                            f"{name}: duplicate key in insert batch")
-                    existing = t.locate_keys(klo, khi)
-                    live = existing != 0
-                    if live.any():
-                        dset = set(dels.tolist())
-                        if any(int(r) not in dset for r in existing[live]):
-                            raise PKViolation(f"{name}: key already exists")
-                tomb_oids = self._seal_tombstones(dels, ts)
-                sealed.extend(tomb_oids)
-                ins_n = (0 if key_sigs is None
-                         else int(key_sigs[0].shape[0]))
-                staged.append((t, t.directory.with_objects(
-                    data_oids, tomb_oids, ts=ts), ins, dels, ins_n))
-        except Exception:
-            # an aborted transaction must be INVISIBLE: unwind the sealed
-            # objects and roll back the oid counter and the timestamp it
-            # consumed — a failed commit is not WAL-logged, so any leaked
-            # allocation would desynchronize every later rowid-bearing
-            # record at replay time
-            self._unwind(sealed)
-            self.store._next_oid = oid0
-            self.ts = ts - 1
-            raise
+        with telemetry.span(SP_COMMIT_SEAL):
+            try:
+                for name in names:
+                    t = self.table(name)
+                    # lint: sort-ok delete-target dedup at commit time —
+                    # targets arrive from arbitrary staging order
+                    dels = (np.unique(np.concatenate(tx._del[name]))
+                            if tx._del.get(name)
+                            else np.zeros((0,), np.uint64))
+                    # write-write conflict: every target must still be
+                    # visible
+                    if dels.shape[0]:
+                        vi = visibility_index(self.store, t.directory)
+                        if vi.killed_rowids(dels).any():
+                            raise TxnConflict(
+                                f"{name}: delete target already deleted")
+                        live_oids = set(t.directory.data_oids)
+                        # lint: sort-ok per-object liveness check — unique
+                        # oids, not rows; a handful of values per commit
+                        for oid in np.unique(rowid_oid(dels)):
+                            if int(oid) not in live_oids:
+                                raise TxnConflict(
+                                    f"{name}: target object gone")
+                    ins = tx._ins.get(name, [])
+                    data_oids, key_sigs = self._seal_inserts(
+                        t.schema, ins, tx._sigs.get(name, [None] * len(ins)),
+                        ts)
+                    sealed.extend(data_oids)
+                    # PK enforcement — the seal path returns the key lanes
+                    # in sorted order, so in-batch dedup is one
+                    # adjacent-equal scan (np.unique(pairs, axis=0) paid a
+                    # hidden second sort)
+                    if t.schema.has_pk and key_sigs is not None:
+                        klo, khi = key_sigs
+                        if klo.shape[0] > 1 and ((klo[1:] == klo[:-1])
+                                                 & (khi[1:] == khi[:-1])
+                                                 ).any():
+                            raise PKViolation(
+                                f"{name}: duplicate key in insert batch")
+                        existing = t.locate_keys(klo, khi)
+                        live = existing != 0
+                        if live.any():
+                            dset = set(dels.tolist())
+                            if any(int(r) not in dset
+                                   for r in existing[live]):
+                                raise PKViolation(
+                                    f"{name}: key already exists")
+                    tomb_oids = self._seal_tombstones(dels, ts)
+                    sealed.extend(tomb_oids)
+                    ins_n = (0 if key_sigs is None
+                             else int(key_sigs[0].shape[0]))
+                    staged.append((t, t.directory.with_objects(
+                        data_oids, tomb_oids, ts=ts), ins, dels, ins_n))
+            except Exception:
+                # an aborted transaction must be INVISIBLE: unwind the
+                # sealed objects and roll back the oid counter and the
+                # timestamp it consumed — a failed commit is not
+                # WAL-logged, so any leaked allocation would
+                # desynchronize every later rowid-bearing record at
+                # replay time
+                self._unwind(sealed)
+                self.store._next_oid = oid0
+                self.ts = ts - 1
+                raise
         crash_point(CP_COMMIT_POST_SEAL)
         if _log:
             for t, directory, ins, dels, ins_n in staged:
@@ -421,12 +466,13 @@ class Engine:
                 self.wal.append("commit", table=t.name, ts=ts,
                                 inserts=ins, deletes=dels,
                                 op=self._op_kind, ntab=len(staged))
-        for j, (t, directory, ins, dels, ins_n) in enumerate(staged):
-            if j:
-                crash_point(CP_COMMIT_MID_SWING)
-            t.set_directory(directory)
-            self.commit_log.append(CommitRecord(
-                ts, t.name, self._op_kind, ins_n, int(dels.shape[0])))
+        with telemetry.span(SP_COMMIT_SWING):
+            for j, (t, directory, ins, dels, ins_n) in enumerate(staged):
+                if j:
+                    crash_point(CP_COMMIT_MID_SWING)
+                t.set_directory(directory)
+                self.commit_log.append(CommitRecord(
+                    ts, t.name, self._op_kind, ins_n, int(dels.shape[0])))
         return ts
 
     def _unwind(self, oids: Sequence[int]) -> None:
@@ -715,6 +761,20 @@ class Engine:
     def replay(wal: WAL) -> "Engine":
         """Deterministically rebuild an engine from its WAL (crash recovery)."""
         from .compaction import compact_objects  # local import: cycle
+        _sp = telemetry.span(SP_REPLAY)
+        _sp.__enter__()
+        try:
+            e = Engine._replay_loop(wal, compact_objects)
+        finally:
+            _sp.__exit__(None, None, None)
+        # traces are derived state, never durable state: replay re-ran the
+        # commits with live counters, so wipe them — a recovered engine
+        # must report a clean registry and zero spans
+        e.reset_metrics()
+        return e
+
+    @staticmethod
+    def _replay_loop(wal: WAL, compact_objects) -> "Engine":
         e = Engine()
         records = list(wal)
         i = 0
@@ -853,6 +913,16 @@ class Engine:
         entry still backing a pinned horizon (open PR base, ``_base``
         lineage snapshot, branch point) survives the trim — a pin guarantees
         ``directory_at`` keeps resolving at that horizon."""
+        with telemetry.span(SP_GC):
+            st = self._gc_sweep()
+            m = self.store.metrics
+            m.add("gc.objects_freed", st.objects_freed)
+            m.add("gc.versions_pruned", st.versions_pruned)
+            # a gauge, not a running sum: "pinned at the LAST sweep"
+            m.counters["gc.pinned_horizons"] = st.pinned_horizons
+            return st
+
+    def _gc_sweep(self) -> "GCStats":
         pins = self._pinned_snapshots()
         pin_ts: Dict[str, set] = {}
         for s in list(self.snapshots.values()) + pins:

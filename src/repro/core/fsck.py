@@ -37,11 +37,16 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import telemetry
 from .directory import Directory
 from .objects import DataObject, TombstoneObject, rowid_oid
 from .sigs import compute_sigs
 
 __all__ = ["FsckIssue", "FsckReport", "fsck"]
+
+SP_FSCK = telemetry.register_span(
+    "fsck", "integrity verification: objects, reachability, refs, "
+    "replay round-trip")
 
 
 @dataclass
@@ -224,6 +229,13 @@ def fsck(engine, *, sample: float = 1.0, check_replay: bool = True,
     are recomputed (1.0 = every row of every object; structural and
     sortedness checks always run on all of them). Deterministic under
     ``seed``."""
+    with telemetry.span(SP_FSCK):
+        return _fsck(engine, sample=sample, check_replay=check_replay,
+                     repair=repair, seed=seed)
+
+
+def _fsck(engine, *, sample: float, check_replay: bool, repair: bool,
+          seed: int) -> FsckReport:
     report = FsckReport()
     roots = _ref_roots(engine)
     report.directories_checked = len(roots)

@@ -34,12 +34,19 @@ from typing import Optional, Tuple
 import numpy as np
 
 from ..kernels import ops
+from . import telemetry
 from .delta import DeltaStats, SignedStream, signed_delta
 from .diff import gather_payload
 from .directory import Snapshot
 from .engine import Engine
 from .schema import Schema
 from .sigs import SigBatch
+
+SP_PLAN_MERGE = telemetry.register_span(
+    "plan_merge", "plan one table's merge: Δ streams, classification, "
+    "staging edits on the transaction")
+SP_MERGE = telemetry.register_span(
+    "merge", "three-way merge of a source snapshot into a target table")
 
 
 def _piece_runs(pieces) -> np.ndarray:
@@ -473,6 +480,13 @@ def plan_merge(engine: Engine, target: str, source: Snapshot,
     batching several tables into one transaction (the workflow subsystem's
     atomic publish) aborts with nothing applied. Committing — or discarding
     the transaction for a dry run — is the caller's move."""
+    with telemetry.span(SP_PLAN_MERGE):
+        _plan_merge(engine, target, source, base, mode, report, tx)
+
+
+def _plan_merge(engine: Engine, target: str, source: Snapshot,
+                base: Optional[Snapshot], mode: ConflictMode,
+                report: MergeReport, tx) -> None:
     t_tab = engine.table(target)
     if not t_tab.schema.compatible_with(source.schema):
         raise ValueError("SNAPSHOT MERGE: incompatible schemas")
@@ -535,19 +549,22 @@ def three_way_merge(engine: Engine, target: str, source: Snapshot,
                     mode: ConflictMode = ConflictMode.FAIL) -> MergeReport:
     """SNAPSHOT MERGE TABLE target FROM source [BASED ON base]
     [WHEN CONFLICT FAIL|SKIP|ACCEPT]."""
-    if base is None:
-        base = engine.find_common_base(target, source.table)
-    report = MergeReport(used_base=base is not None)
-    tx = engine.begin()
-    plan_merge(engine, target, source, base, mode, report, tx)
-    if report.inserted or report.deleted:
-        with engine.op_kind("merge"):
-            report.commit_ts = tx.commit()
-    # lineage: the merged-in source snapshot becomes the new common base
-    if source.table != target and source.table in engine.tables:
-        engine.set_common_base(target, source.table, source)
-        engine.wal.append("set_base", a=target, b=source.table, snap=source)
-    return report
+    with telemetry.span(SP_MERGE):
+        if base is None:
+            base = engine.find_common_base(target, source.table)
+        report = MergeReport(used_base=base is not None)
+        tx = engine.begin()
+        plan_merge(engine, target, source, base, mode, report, tx)
+        if report.inserted or report.deleted:
+            with engine.op_kind("merge"):
+                report.commit_ts = tx.commit()
+        # lineage: the merged-in source snapshot becomes the new common
+        # base
+        if source.table != target and source.table in engine.tables:
+            engine.set_common_base(target, source.table, source)
+            engine.wal.append("set_base", a=target, b=source.table,
+                              snap=source)
+        return report
 
 
 def two_way_merge(engine: Engine, target: str, source: Snapshot,

@@ -17,6 +17,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from .schema import Schema, batch_nbytes, take_batch
+from .telemetry import Metrics
 
 OBJECT_CAPACITY = 1 << 18  # max rows per sealed object (256Ki)
 
@@ -205,6 +206,10 @@ class ObjectStore:
         # import objects)
         self.vis_cache = None
         self.delta_cache = None
+        # cumulative telemetry counters (delta.* / gc.* totals) — the
+        # per-call stats objects are transient, so the store keeps the
+        # running sums the tracer snapshots
+        self.metrics = Metrics()
 
     def new_oid(self) -> int:
         oid = self._next_oid

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Union
 
+from . import telemetry
 from .directory import Snapshot
 from .diff import DiffResult, snapshot_diff
 from .engine import CommitRecord, Engine, GCStats
@@ -289,7 +290,9 @@ class Repo:
     # ------------------------------------------------------------- status
     def status(self) -> dict:
         """One deterministic summary of the repo: tables (head ts, retained
-        versions), branches, snapshots, PRs."""
+        versions), branches, snapshots, PRs, and the full telemetry
+        registry snapshot (every registered counter, zeros included — the
+        zero-rehash invariant is inspectable without a debugger)."""
         e = self.engine
         return {
             "ts": e.ts,
@@ -300,7 +303,20 @@ class Repo:
             "snapshots": self.snapshots(),
             "prs": [(i, p.base_name, p.head_name, p.status)
                     for i, p in sorted(e.prs.items())],
+            "metrics": dict(sorted(self.stats().items())),
         }
+
+    # -------------------------------------------------------- telemetry
+    def trace(self):
+        """``with repo.trace() as t:`` — arm the span tracer for the block;
+        ``t.roots`` holds the span forest afterwards (see
+        :mod:`core.telemetry`)."""
+        return telemetry.trace(self.engine)
+
+    def stats(self) -> Dict[str, int]:
+        """Snapshot of every registered metric (stable key set — the
+        ``datagit stats`` schema)."""
+        return telemetry.metrics_snapshot(self.engine)
 
     # ----------------------------------------------------------------- gc
     def gc(self) -> GCStats:

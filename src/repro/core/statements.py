@@ -28,6 +28,8 @@ Supported statements (keywords case-insensitive; refs quoted or bare)::
     LOG TABLE orders [LIMIT 10]
     SHOW BRANCHES | SNAPSHOTS | PRS | TABLES
     STATUS
+    STATS
+    EXPLAIN <any statement above>
     GC
     FSCK [REPAIR]
     LINT
@@ -42,7 +44,12 @@ import re
 from dataclasses import dataclass
 from typing import Any, List, Optional
 
+from . import telemetry
 from .refs import did_you_mean, suggest
+
+SP_EXPLAIN = telemetry.register_span(
+    "explain", "EXPLAIN wrapper when a tracer is already armed — the "
+    "explained statement's spans nest under it")
 
 _TOKEN_RE = re.compile(r"\s*(?:'(?P<str>[^']*)'|(?P<punct>[(),])"
                        r"|(?P<word>[^\s(),;']+))")
@@ -219,6 +226,10 @@ def _fmt_status(st: dict) -> str:
     lines = [f"ts={st['ts']}"]
     for section, (label, fmt) in _SECTIONS.items():
         lines += [f"{label} {fmt(r)}" for r in st[section]]
+    # the full registry snapshot, zeros included: `datagit status` is how
+    # an operator checks the zero-rehash invariant without a debugger
+    for k, v in sorted(st.get("metrics", {}).items()):
+        lines.append(f"metric {k}={v}")
     return "\n".join(lines)
 
 
@@ -460,11 +471,50 @@ def _lint(repo, p: _P) -> StatementResult:
         render_text(findings, discover_count(paths)))
 
 
+def _stats(repo, p: _P) -> StatementResult:
+    p.end()
+    doc = telemetry.stats_json(repo.engine)
+    lines = [f"{k}={v}" for k, v in doc["metrics"].items()]
+    return StatementResult("stats", doc, "\n".join(lines))
+
+
+def _explain(repo, p: _P) -> StatementResult:
+    """EXPLAIN <statement>: run the wrapped statement under the tracer and
+    print its span tree + counter deltas. The span renderer shows the
+    zero-valued siblings of every touched counter group, so the pinned
+    invariants read directly off the output (``EXPLAIN MERGE ...`` shows
+    ``commit.rows_rehashed=0``)."""
+    t, v = p.take()
+    verb = v.upper() if t == "w" else v
+    handler = _HANDLERS.get(verb)
+    if handler is None or verb == "EXPLAIN":
+        raise StatementError(
+            p.text, f"EXPLAIN: unknown statement verb {v!r}",
+            suggest(verb, tuple(x for x in _VERBS if x != "EXPLAIN")))
+    if telemetry.current() is None:
+        with telemetry.trace(repo.engine) as tr:
+            inner = handler(repo, p)
+        spans = tr.roots
+    else:
+        # already armed (e.g. `datagit --trace` running an EXPLAIN): nest
+        # the statement's spans under one explain span instead of
+        # re-arming
+        with telemetry.span(SP_EXPLAIN) as sp:
+            inner = handler(repo, p)
+        spans = sp.children
+    tree = telemetry.render_spans(spans)
+    body = "\n".join(tree) if tree else "(no spans recorded)"
+    return StatementResult(
+        "explain", {"result": inner, "spans": spans},
+        (inner.message + "\n" if inner.message else "") + body)
+
+
 _HANDLERS = {
     "CREATE": _create, "DROP": _drop, "CLONE": _clone, "DIFF": _diff,
     "MERGE": _merge, "OPEN": _open, "CHECK": _check, "PUBLISH": _publish,
     "CLOSE": _close, "REVERT": _revert, "RESTORE": _restore, "LOG": _log,
-    "SHOW": _show, "STATUS": _status, "GC": _gc, "FSCK": _fsck,
+    "SHOW": _show, "STATUS": _status, "STATS": _stats,
+    "EXPLAIN": _explain, "GC": _gc, "FSCK": _fsck,
     "LINT": _lint,
 }
 _VERBS = tuple(_HANDLERS)        # one source of truth for did-you-mean

@@ -28,8 +28,13 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from ..kernels import ops
+from . import telemetry
 from .directory import Directory
 from .objects import DataObject, ObjectStore, pack_rowid, rowid_oid
+
+SP_VIS_BUILD = telemetry.register_span(
+    "visibility.build", "build a directory's sorted tombstone-target "
+    "array from scratch (the cache-miss path)")
 
 _EMPTY_U64 = np.zeros((0,), np.uint64)
 _EMPTY_U64.setflags(write=False)
@@ -184,8 +189,9 @@ class VisibilityCache(KeyedLRU):
         else:
             val = self._derive(d, hmax, ckey)
             if val is None:
-                val = _build_entry(self.store, d)
-                self.builds += 1
+                with telemetry.span(SP_VIS_BUILD):
+                    val = _build_entry(self.store, d)
+                    self.builds += 1
                 self.insert(ckey, val)
         if ckey != key:
             # alias the exact key to the shared entry: repeat lookups of

@@ -204,6 +204,13 @@ def iter_frames(blob: bytes, offset: int) -> Iterator[Tuple[bytes, int]]:
 class WAL:
     def __init__(self):
         self.records: List[WalRecord] = []
+        # telemetry counters (wal.frames / wal.bytes / wal.fsyncs) — live
+        # process state only, never pickled: ``serialize`` ships just the
+        # records, and ``deserialize`` fills ``records`` directly, so a
+        # replayed engine always starts these at zero
+        self.frames = 0
+        self.bytes_written = 0
+        self.fsyncs = 0
 
     def append(self, kind: str, **payload) -> None:
         # hard error, not assert: a typo'd kind persisted here would only
@@ -214,6 +221,7 @@ class WAL:
         # fully appended or never was — there is no half-appended record
         crash_point(CP_WAL_APPEND)
         self.records.append(WalRecord(kind, payload))
+        self.frames += 1
 
     def __iter__(self):
         return iter(self.records)

@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..kernels import ops
+from . import telemetry
 from .delta import signed_delta
 from .diff import DiffResult, gather_payload, gather_rowsigs, snapshot_diff
 from .directory import Snapshot
@@ -66,6 +67,15 @@ CP_REVERT_PRE_LOG = register(
     "workspace.revert.pre_log",
     "after the inverse-delta commit but before the 'revert' record — "
     "recovery must show the revert absent")
+
+SP_PUBLISH = telemetry.register_span(
+    "publish", "atomic publish of a PR: checks, per-table planning, one "
+    "multi-table commit")
+SP_REVERT_PUBLISH = telemetry.register_span(
+    "revert_publish", "undo a publish with inverse signed deltas at one "
+    "shared timestamp")
+SP_REVERT = telemetry.register_span(
+    "revert", "one-table inverse-Δ revert applied as a new commit")
 
 TRUNK = "main"
 
@@ -368,6 +378,11 @@ class PullRequest:
         planning (conflicts raise with nothing staged) -> ONE multi-table
         commit at ONE timestamp (two-phase, unwinds on seal-time failure).
         The WAL carries a single replayable ``publish`` record."""
+        with telemetry.span(SP_PUBLISH):
+            return self._publish(mode, _log, _skip_checks)
+
+    def _publish(self, mode: ConflictMode, _log: bool,
+                 _skip_checks: bool) -> Dict[str, MergeReport]:
         if self.status != "open":
             raise ValueError(f"PR #{self.id} is {self.status}, not open")
         engine = self.engine
@@ -418,21 +433,22 @@ class PullRequest:
         table gets the Δ(post -> pre) applied as a NEW commit at one shared
         timestamp. History-preserving — the published state stays reachable
         via PITR — and Δ-sized."""
-        if self.status != "published":
-            raise ValueError(f"PR #{self.id} is {self.status}, "
-                             "not published")
-        engine = self.engine
-        tx = engine.begin()
-        for lg in self.tables:
-            plan_revert(engine, self._base_physical(lg),
-                        self.pre_publish[lg], self.post_publish[lg], tx)
-        with engine.op_kind("revert-publish"):
-            ts = tx.commit(_log=False) if tx.staged else None
-        self.status = "reverted"
-        if _log:
-            crash_point(CP_REVERT_PUBLISH_PRE_LOG)
-            engine.wal.append("publish_revert", pr=self.id, ts=ts)
-        return ts
+        with telemetry.span(SP_REVERT_PUBLISH):
+            if self.status != "published":
+                raise ValueError(f"PR #{self.id} is {self.status}, "
+                                 "not published")
+            engine = self.engine
+            tx = engine.begin()
+            for lg in self.tables:
+                plan_revert(engine, self._base_physical(lg),
+                            self.pre_publish[lg], self.post_publish[lg], tx)
+            with engine.op_kind("revert-publish"):
+                ts = tx.commit(_log=False) if tx.staged else None
+            self.status = "reverted"
+            if _log:
+                crash_point(CP_REVERT_PUBLISH_PRE_LOG)
+                engine.wal.append("publish_revert", pr=self.id, ts=ts)
+            return ts
 
     def close(self, *, _log=True) -> None:
         """Abandon an open PR, or release a published PR's pins."""
@@ -556,15 +572,16 @@ def revert(engine, table: str, from_ref, to_ref, *,
     """``engine.revert``: one-table inverse-Δ revert as a new commit.
     Refs resolve against ``table`` (so ts:/HEAD/~n forms work); returns
     the commit ts (None when Δ(from -> to) is empty)."""
-    require(engine.tables, table, "table")
-    from_snap = resolve_ref(engine, from_ref, table=table).snapshot
-    to_snap = resolve_ref(engine, to_ref, table=table).snapshot
-    tx = engine.begin()
-    staged = plan_revert(engine, table, from_snap, to_snap, tx)
-    with engine.op_kind("revert"):
-        ts = tx.commit(_log=False) if staged else None
-    if _log:
-        crash_point(CP_REVERT_PRE_LOG)
-        engine.wal.append("revert", table=table, snap_from=from_snap,
-                          snap_to=to_snap, ts=ts)
-    return ts
+    with telemetry.span(SP_REVERT):
+        require(engine.tables, table, "table")
+        from_snap = resolve_ref(engine, from_ref, table=table).snapshot
+        to_snap = resolve_ref(engine, to_ref, table=table).snapshot
+        tx = engine.begin()
+        staged = plan_revert(engine, table, from_snap, to_snap, tx)
+        with engine.op_kind("revert"):
+            ts = tx.commit(_log=False) if staged else None
+        if _log:
+            crash_point(CP_REVERT_PRE_LOG)
+            engine.wal.append("revert", table=table, snap_from=from_snap,
+                              snap_to=to_snap, ts=ts)
+        return ts

@@ -79,7 +79,7 @@ def analyze_cell(arch: str, shape_name: str, *, multi_pod: bool,
     shape = LM_SHAPES[shape_name]
     mesh = mesh or make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: a wall-clock step breaks timings
     with _mesh_context(mesh):
         if shape.kind == "train":
             step, st_specs, in_sh = S.make_train_step(
@@ -109,9 +109,9 @@ def analyze_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 functools.partial(lm.init_params, cfg), jax.random.PRNGKey(0))
             lowered = step.lower(params_shape, abs_in["token"],
                                  abs_in["cache"])
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -71,7 +71,7 @@ class Server:
 
     def run(self, requests: List[Request], greedy: bool = True):
         queue = list(requests)
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: a wall-clock step breaks dt
         steps = 0
         while any(s is not None for s in self.slots) or queue:
             # fill empty slots (continuous batching)
@@ -99,7 +99,7 @@ class Server:
                 if self.slots[i] is not None and self.slots[i].done:
                     self.slots[i] = None
                     self.caches[i] = None
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         return requests, dt, steps
 
 

@@ -38,6 +38,7 @@ gateable). Long-lived checks belong in the Python/embedding surface.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import pickle
 import sys
@@ -50,6 +51,7 @@ from .core import (AmbiguousRefError, Column, CorruptFrame, CType,
                    RefSyntaxError, RevertConflict, Schema, StoreFormatError,
                    StoreVersionError, TornFrame, TxnConflict,
                    UnknownRefError, WAL, as_branch)
+from .core import telemetry
 from .core.engine import Engine
 from .core.faults import crash_point, register
 from .core.statements import StatementError, execute, execute_script
@@ -187,6 +189,8 @@ def save_repo(store: str, repo: Repo) -> None:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, store)
+        repo.engine.wal.bytes_written += os.path.getsize(store)
+        repo.engine.wal.fsyncs += 1
         repo._persisted_offset = os.path.getsize(store)
         repo._persisted_records = len(repo.engine.wal.records)
         repo._rewrite_store = False
@@ -219,6 +223,8 @@ def save_repo(store: str, repo: Repo) -> None:
         f.flush()
         crash_point(CP_SAVE_PRE_FSYNC)
         os.fsync(f.fileno())
+        repo.engine.wal.bytes_written += len(frame)
+        repo.engine.wal.fsyncs += 1
         repo._persisted_offset = f.tell()
     repo._persisted_records = done + len(new)
 
@@ -381,6 +387,8 @@ def _compile(args, repo: Repo) -> Optional[str]:
         return "SHOW TABLES"
     if c == "status":
         return "STATUS"
+    if c == "stats":
+        return "STATS"
     if c == "gc":
         return "GC"
     return None
@@ -391,7 +399,7 @@ def _compile(args, repo: Repo) -> Optional[str]:
 #: IS here: it is deliberately un-WAL-logged, so the write-back would be
 #: byte-identical wasted I/O.
 _READ_ONLY = {"diff", "log", "branches", "snapshots", "prs", "tables",
-              "status", "gc"}
+              "status", "stats", "gc"}
 
 #: error types with a deliberate user-facing shape (ref/statement/VCS
 #: semantics, durable-format damage); anything else caught below gets its
@@ -479,6 +487,10 @@ def build_parser() -> argparse.ArgumentParser:
                                                       ".vcs_store.wal"),
                     help="WAL store file (default $VCS_STORE or "
                          ".vcs_store.wal)")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="write this invocation's span tree as "
+                         "Chrome-tracing JSON (loads in Perfetto / "
+                         "chrome://tracing)")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     sub.add_parser("init", help="create an empty store")
@@ -563,6 +575,9 @@ def build_parser() -> argparse.ArgumentParser:
                         ("gc", "mark-sweep garbage collection")):
         sub.add_parser(name, help=help_)
 
+    p = sub.add_parser("stats", help="metrics registry snapshot")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+
     p = sub.add_parser(
         "lint",
         help="static invariant analysis of the source tree",
@@ -583,7 +598,8 @@ def build_parser() -> argparse.ArgumentParser:
             "  deprecation     PR 5 deprecated resolvers, incl. aliasing\n"
             "                  and getattr forms\n"
             "  wal-hygiene     WAL kinds vs the replay dispatch; time/RNG\n"
-            "                  in logging functions\n"
+            "                  in logging functions; clocks anywhere in\n"
+            "                  repro.core outside core.telemetry\n"
             "  sealed-write    in-place writes to sealed-object lanes\n"
             "                  (static half of REPRO_SANITIZE=1)\n\n"
             "Suppress a finding with a JUSTIFIED pragma on the finding\n"
@@ -620,6 +636,29 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
+    if args.trace:
+        # arm BEFORE the store loads so the replay span is captured (the
+        # engine binds in _cmd once it exists); the trace file is written
+        # on the way out, errors included — traces are derived state, so
+        # nothing here touches the durability story
+        with telemetry.trace(None) as tracer:
+            try:
+                return _run(args, tracer)
+            finally:
+                telemetry.write_chrome_trace(args.trace, tracer)
+    return _run(args, None)
+
+
+def _run(args, tracer: Optional[telemetry.Tracer]) -> int:
+    # every CLI invocation is itself a span, so an armed trace shows the
+    # command as the root with load/replay, the operation, and the store
+    # write-back attributed beneath it (registration is idempotent)
+    with telemetry.span(telemetry.register_span(
+            f"cli.{args.cmd}", "one datagit CLI invocation")):
+        return _cmd(args, tracer)
+
+
+def _cmd(args, tracer: Optional[telemetry.Tracer]) -> int:
     try:
         if args.cmd == "lint":
             # pure source analysis: no store, no repo — same runner and
@@ -652,6 +691,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         if args.cmd == "fsck":
             return _cmd_fsck(args)
         repo = load_repo(args.store)
+        if tracer is not None:
+            tracer.bind(repo.engine)
         if args.cmd == "seed":
             print(seed_table(repo, args.table, args.rows, args.seed,
                              args.nopk))
@@ -671,7 +712,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         else:
             stmt = _compile(args, repo)
             res = execute(repo, stmt)
-            print(res.message)
+            if args.cmd == "stats" and args.format == "json":
+                print(json.dumps(res.data, indent=2, sort_keys=True))
+            else:
+                print(res.message)
             if res.kind == "check_pr" and any(not c.ok for c in res.data):
                 # a failing CI check must be shell-gateable:
                 # `dg pr check N && deploy` has only the exit code

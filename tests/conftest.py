@@ -18,6 +18,7 @@ from repro.core import Column, CType, Schema
 from repro.core import faults as _faults
 from repro.core import objects as _objects
 from repro.core import sigs as _sigs
+from repro.core import telemetry as _telemetry
 
 
 @pytest.fixture(autouse=True)
@@ -35,6 +36,7 @@ def _restore_invariant_globals():
     _sigs.DEBUG_VALIDATE_CARRY = carry
     _objects.SANITIZE = sanitize
     _faults._ACTIVE = None
+    _telemetry._ACTIVE = None
 
 VCS_SCHEMA = Schema((Column("k", CType.I64), Column("v", CType.F64),
                      Column("doc", CType.LOB)), primary_key=("k",))

@@ -191,6 +191,63 @@ def test_wal_hygiene_positive_and_negative(tmp_path):
     msgs = [f.message for f in flagged(fs, "wal-hygiene")]
     assert any("'orphan'" in m and "never dispatches" in m for m in msgs)
 
+    # the replay dispatch may be split across a `_replay*` helper (the
+    # public wrapper opens a telemetry span) — kinds are still collected
+    facts3 = dict(facts)
+    facts3["src/repro/core/engine.py"] = (
+        "class Engine:\n"
+        "    @staticmethod\n"
+        "    def replay(wal):\n"
+        "        return Engine._replay_loop(wal)\n"
+        "    @staticmethod\n"
+        "    def _replay_loop(wal):\n"
+        "        for rec in wal:\n"
+        "            k = rec.kind\n"
+        "            if k == 'commit':\n"
+        "                pass\n"
+    )
+    fs = lint_tree(tmp_path, {**facts3, "app.py": (
+        "def log_bad(self):\n"
+        "    self.wal.append('bogus')\n"
+    )})
+    msgs = [f.message for f in flagged(fs, "wal-hygiene")]
+    assert any("unknown WAL kind 'bogus'" in m for m in msgs), msgs
+
+
+def test_wal_hygiene_clock_allowlist(tmp_path):
+    # ISSUE 8: a clock read in ANY repro.core module is flagged...
+    clocky = ("import time\n"
+              "def stamp():\n"
+              "    return time.perf_counter()\n")
+    fs = lint_tree(tmp_path, {"src/repro/core/clocky.py": clocky})
+    msgs = [f.message for f in flagged(fs, "wal-hygiene")]
+    assert any("clocks belong to" in m for m in msgs), msgs
+    # ...but the SAME source at core/telemetry.py is allowlisted — the
+    # span tracer is the one sanctioned home for the clock
+    fs = lint_tree(tmp_path, {"src/repro/core/telemetry.py": clocky})
+    assert not flagged(fs, "wal-hygiene")
+    # outside repro.core the module-wide clock check does not apply
+    fs = lint_tree(tmp_path, {"src/repro/launch/serve.py": clocky})
+    assert not flagged(fs, "wal-hygiene")
+    # a clock inside a WAL-logging function reports once (the logging-
+    # function finding), not twice
+    fs = lint_tree(tmp_path, {"src/repro/core/clocky.py": (
+        "import time\n"
+        "def log_bad(self):\n"
+        "    self.wal.append('commit', ts=time.time())\n"
+    )})
+    msgs = [f.message for f in flagged(fs, "wal-hygiene")
+            if "time.time" in f.message]
+    assert len(msgs) == 1, msgs
+    # a justified pragma suppresses the module-wide check too
+    fs = lint_tree(tmp_path, {"src/repro/core/clocky.py": (
+        "import time\n"
+        "# lint: wal-ok fixture — coarse progress meter, never logged\n"
+        "t = time.perf_counter()\n"
+    )})
+    assert not flagged(fs, "wal-hygiene")
+    assert suppressed(fs, "wal-hygiene")
+
 
 def test_sealed_write_positive_negative_and_taint(tmp_path):
     fs = lint_tree(tmp_path, {"app.py": (
