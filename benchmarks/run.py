@@ -22,11 +22,16 @@ import tempfile
 
 _HOTPATH_METRICS = ("diff_cold_s", "diff_warm_s", "merge_s")
 _WORKFLOW_METRICS = ("branch_s", "pr_diff_s", "publish_s", "revert_s")
+_PROBE_METRICS = ("probe_s",)
 
 
 def _row_metrics(row_or_op):
     op = row_or_op if isinstance(row_or_op, str) else row_or_op["op"]
-    return _WORKFLOW_METRICS if op.startswith("Workflow") else _HOTPATH_METRICS
+    if op.startswith("Workflow"):
+        return _WORKFLOW_METRICS
+    if op.startswith("Probe"):
+        return _PROBE_METRICS
+    return _HOTPATH_METRICS
 
 
 def _run_hotpath_subprocess(root: str, n_rows: int) -> list:
@@ -164,6 +169,11 @@ def main() -> None:
     n_rows = args.rows or (200_000 if args.quick else 2_000_000)
 
     from . import vcs_tables as V
+    from repro.kernels import ops as _ops
+    # force one-time jax backend init OUTSIDE the timed cells: without
+    # JAX_PLATFORMS pinned, the first lazy jax.default_backend() pays
+    # TPU-plugin probing (hundreds of ms) inside whatever cell hits it
+    _ops.backend_uses_pallas()
 
     if args.interleave:
         if not args.hotpath_only:
@@ -186,12 +196,20 @@ def main() -> None:
 
     if args.hotpath_only:
         run_once = lambda: (V.diff_merge_hotpath(n_rows)
-                            + V.workflow_scenario(n_rows))
+                            + V.workflow_scenario(n_rows)
+                            + V.probe_scenario(n_rows))
         rows = run_once()
         for rep in range(args.repeat - 1):
             print(f"# repeat {rep + 2}/{args.repeat} (min-fold)")
             rows = _min_fold(rows, run_once())
         for r in rows:
+            if r["op"].startswith("Probe"):
+                c = r.get("counters", {})
+                print(f"probe/{r['op']}/{r['change']}: "
+                      f"{r['probe_s']*1e3:.1f}ms for {r['changed_rows']} "
+                      f"queries (probe.queries={c.get('probe.queries', 0)} "
+                      f"hits={c.get('probe.hits', 0)})")
+                continue
             if r["op"].startswith("Workflow"):
                 print(f"workflow/{r['op']}/{r['change']}: "
                       f"branch {r['branch_s']*1e3:.1f}ms "

@@ -131,6 +131,49 @@ def _random_update(engine: Engine, table: str, base, n: int, rng,
     return idx
 
 
+# ------------------------------------------------- fused probe microbench
+
+def probe_scenario(n_rows: int = 2_000_000, repeats: int = 3) -> List[Dict]:
+    """k-query point-lookup batches against the sealed table (ISSUE 9).
+
+    PK: ``locate_keys`` over sampled key signatures; NoPK:
+    ``locate_rowsig_multi(..., flat=True)`` over sampled row signatures —
+    both exercise exactly the fused ``ops.probe128`` pass per object.
+    Queries are pre-sorted by (lo, hi), matching the fused-probe contract
+    (ROADMAP §Performance; the engine's hot callers get this for free).
+    The per-case ``counters`` snapshot carries the ``probe.*`` group."""
+    out = []
+    n_queries = min(100_000, n_rows // 2)
+    for pk in (True, False):
+        engine, _ = _mk_engine(n_rows, pk)
+        t = engine.table("lineitem")
+        oids = t.directory.data_oids
+        all_lo = np.concatenate([engine.store.get(o).key_lo for o in oids])
+        all_hi = np.concatenate([engine.store.get(o).key_hi for o in oids])
+        rng = np.random.default_rng([n_queries, int(pk)] + list(b"PRB"))
+        idx = rng.choice(all_lo.shape[0], size=n_queries, replace=False)
+        order = np.lexsort((all_hi[idx], all_lo[idx]))
+        q_lo, q_hi = all_lo[idx][order], all_hi[idx][order]
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            if pk:
+                found = t.locate_keys(q_lo, q_hi)
+            else:
+                found = t.locate_rowsig_multi(
+                    q_lo, q_hi, np.ones((n_queries,), np.int64), flat=True)
+            times.append(time.perf_counter() - t0)
+        nfound = int((found != 0).sum()) if pk else int(found.shape[0])
+        assert nfound == n_queries, (nfound, n_queries)
+        out.append({
+            "op": f"Probe{'PK' if pk else 'NoPK'}",
+            "change": "C4", "rows": n_rows, "changed_rows": n_queries,
+            "probe_s": float(np.min(times)),
+            "counters": telemetry.metrics_snapshot(engine),
+        })
+    return out
+
+
 # ------------------------------------------------- workflow porcelain
 
 def workflow_scenario(n_rows: int = 2_000_000, csizes=None) -> List[Dict]:

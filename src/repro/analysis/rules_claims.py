@@ -33,7 +33,8 @@ PRODUCER_MODULES = frozenset({
 #: hot-path modules where a hidden sort undoes the zero-rehash wins
 HOT_MODULES = frozenset({
     "repro.core.delta", "repro.core.merge", "repro.core.engine",
-    "repro.kernels.ops",
+    "repro.kernels.ops", "repro.kernels.probe",
+    "repro.distributed.sharding",
 })
 
 _SORT_FNS = frozenset({"sort", "lexsort", "unique", "argsort"})
@@ -103,8 +104,8 @@ class HiddenSortRule(Rule):
     id = "hidden-sort"
     pragma = "sort-ok"
     doc = ("np.sort/np.lexsort/np.unique/np.argsort in the hot-path "
-           "modules (delta, merge, ops, engine) is a zero-rehash "
-           "regression until justified")
+           "modules (delta, merge, ops, engine, probe, sharding) is a "
+           "zero-rehash regression until justified")
 
     def check(self, mod: LintModule, project) -> List[Finding]:
         if mod.tree is None or mod.module not in HOT_MODULES:

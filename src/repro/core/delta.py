@@ -147,15 +147,18 @@ class SignedStream:
                             self.row_lo, self.row_hi, self.rowid,
                             runs=self.runs, key_is_row=self.key_is_row)
 
-    def merge_by_key(self) -> "SignedStream":
+    def merge_by_key(self, cuts=None) -> "SignedStream":
         """Materialize the globally key-sorted stream: a stable k-way merge
         of the presorted runs (ties keep emission order), falling back to a
         stable 128-bit sort when no run structure is known. Identity when
-        already sorted."""
+        already sorted. ``cuts`` (a key-range shard plan from
+        ``distributed.sharding.plan_key_cuts``) partitions the merge by key
+        range — byte-identical output, per-shard execution."""
         if self.n == 0 or self.sorted_by_key:
             return self
         if self.runs is not None:
-            order = ops.merge128_runs(self.key_lo, self.key_hi, self.runs)
+            order = ops.merge128_runs(self.key_lo, self.key_hi, self.runs,
+                                      cuts=cuts)
         else:
             order = ops._sort128(self.key_lo, self.key_hi)
         out = self.take(order)
@@ -356,8 +359,17 @@ def _signed_delta(store: ObjectStore, a: Directory, b: Directory,
             parts.append(_emit(obj, minus, -1))
 
     # k-way merge the presorted per-object runs: the cached stream is
-    # globally key-sorted, so every consumer aggregates sort-free
-    stream = SignedStream.concat(parts).merge_by_key()
+    # globally key-sorted, so every consumer aggregates sort-free. Big
+    # multi-run streams merge per key-range shard (derived plan, never
+    # WAL-logged) — byte-identical order, partition-parallel execution.
+    stream = SignedStream.concat(parts)
+    cuts = None
+    if stream.n and not stream.sorted_by_key and stream.runs is not None:
+        from ..distributed.sharding import maybe_key_cuts
+        cuts = maybe_key_cuts(stream.key_lo, stream.key_hi, stream.runs)
+        if cuts is not None:
+            store.metrics.add("probe.shard_parts", cuts[0].shape[0] + 1)
+    stream = stream.merge_by_key(cuts=cuts)
     cache.put(a, b, stream)
     return stream
 

@@ -97,6 +97,22 @@ def gather_payload(store: ObjectStore, schema: Schema,
     alias = with_sigs and not schema.has_pk
     lob_names = ([c.name for c in schema.columns if c.ctype is CType.LOB]
                  if with_sigs else [])
+    if n and oids[0] == oids[-1] and (oids == oids[0]).all():
+        # single-object fast path (the common post-compaction merge shape):
+        # every rowid lives in ONE object, so the per-object split, concat
+        # and inverse-permutation round-trip all collapse into direct takes
+        obj = store.get(int(oids[0]))
+        batch = take_batch(obj.cols, offs)
+        if not with_sigs:
+            return batch
+        row_lo, row_hi = obj.row_lo[offs], obj.row_hi[offs]
+        if alias:
+            key_lo, key_hi = row_lo, row_hi
+        else:
+            key_lo, key_hi = obj.key_lo[offs], obj.key_hi[offs]
+        lob = {c: obj.lob_sigs[c][offs] for c in lob_names}
+        return batch, SigBatch(row_lo, row_hi, key_lo, key_hi, lob,
+                               runs=runs)
     batches, perm, sig_parts = [], [], []
     for oid in np.unique(oids):
         sel = np.flatnonzero(oids == oid)
@@ -119,19 +135,27 @@ def gather_payload(store: ObjectStore, schema: Schema,
                                {c: z64 for c in lob_names},
                                runs=np.zeros((0,), np.int64))
     merged = concat_batches(schema, batches)
-    inv = np.empty((n,), np.int64)
-    inv[np.concatenate(perm)] = np.arange(n)
-    batch = take_batch(merged, inv)
+    flat = np.concatenate(perm)
+    if flat.shape[0] > 1 and (flat[1:] > flat[:-1]).all():
+        # ascending oids ⇒ the per-object concat order IS the input order:
+        # skip building (and applying) the inverse permutation entirely
+        inv = None
+        batch = merged
+    else:
+        inv = np.empty((n,), np.int64)
+        inv[flat] = np.arange(n)
+        batch = take_batch(merged, inv)
     if not with_sigs:
         return batch
-    row_lo = np.concatenate([p[0] for p in sig_parts])[inv]
-    row_hi = np.concatenate([p[1] for p in sig_parts])[inv]
+    reorder = (lambda a: a) if inv is None else (lambda a: a[inv])
+    row_lo = reorder(np.concatenate([p[0] for p in sig_parts]))
+    row_hi = reorder(np.concatenate([p[1] for p in sig_parts]))
     if alias:
         key_lo, key_hi = row_lo, row_hi
     else:
-        key_lo = np.concatenate([p[2] for p in sig_parts])[inv]
-        key_hi = np.concatenate([p[3] for p in sig_parts])[inv]
-    lob = {c: np.concatenate([p[4][c] for p in sig_parts])[inv]
+        key_lo = reorder(np.concatenate([p[2] for p in sig_parts]))
+        key_hi = reorder(np.concatenate([p[3] for p in sig_parts]))
+    lob = {c: reorder(np.concatenate([p[4][c] for p in sig_parts]))
            for c in lob_names}
     return batch, SigBatch(row_lo, row_hi, key_lo, key_hi, lob, runs=runs)
 
@@ -143,10 +167,13 @@ def gather_rowsigs(store: ObjectStore,
     The Δ-sized value identity probe: two rows are byte-identical iff their
     128-bit row signatures match, so revert's "is the current row still the
     one being reverted away?" check never gathers payloads."""
-    lo = np.zeros(rowids.shape, np.uint64)
-    hi = np.zeros(rowids.shape, np.uint64)
     oids = rowid_oid(rowids)
     offs = rowid_off(rowids)
+    if rowids.shape[0] and oids[0] == oids[-1] and (oids == oids[0]).all():
+        obj = store.get(int(oids[0]))  # single-object fast path
+        return obj.row_lo[offs], obj.row_hi[offs]
+    lo = np.zeros(rowids.shape, np.uint64)
+    hi = np.zeros(rowids.shape, np.uint64)
     for oid in np.unique(oids):
         sel = oids == oid
         obj = store.get(int(oid))
@@ -156,7 +183,8 @@ def gather_rowsigs(store: ObjectStore,
 
 
 def _aggregate_stream(schema: Schema, stream: SignedStream,
-                      stats: DeltaStats) -> DiffResult:
+                      stats: DeltaStats,
+                      store: Optional[ObjectStore] = None) -> DiffResult:
     """Diff aggregation: cancel identical changes, keep net per value-group.
 
     Grouping is by full row signature (Listing-2 multiset semantics),
@@ -177,10 +205,20 @@ def _aggregate_stream(schema: Schema, stream: SignedStream,
     memo = getattr(stream, "_agg_memo", None)
     if memo is not None:
         return DiffResult(schema, *memo, stats)
-    st = stream.merge_by_key()  # always globally key-sorted for n > 0
+    # key-range sharding (derived plan, never WAL-logged): big streams
+    # merge and aggregate per shard — byte-identical to unsharded
+    from ..distributed import sharding as ksh
+    shards = ksh.key_shard_count(stream.n)
+    cuts = None
+    if shards > 1 and not stream.sorted_by_key and stream.runs is not None:
+        cuts = ksh.plan_key_cuts(stream.key_lo, stream.key_hi,
+                                 stream.runs, shards)
+        if cuts is not None and store is not None:
+            store.metrics.add("probe.shard_parts", cuts[0].shape[0] + 1)
+    st = stream.merge_by_key(cuts=cuts)  # always globally key-sorted, n > 0
     _, agg = ops.diff_aggregate_rows(st.key_lo, st.key_hi,
                                      st.row_lo, st.row_hi, st.sign,
-                                     presorted=True)
+                                     presorted=True, shards=shards)
     surviving = agg.run_sums != 0
     if surviving.all():  # pure-churn diffs: nothing cancelled
         keep = slice(None)
@@ -228,7 +266,7 @@ def snapshot_diff(store: ObjectStore, a: Snapshot, b: Snapshot) -> DiffResult:
     with telemetry.span(SP_DIFF):
         stats = DeltaStats()
         stream = signed_delta(store, a.directory, b.directory, stats)
-        return _aggregate_stream(a.schema, stream, stats)
+        return _aggregate_stream(a.schema, stream, stats, store)
 
 
 def sql_diff(store: ObjectStore, a: Snapshot, b: Snapshot) -> DiffResult:
@@ -240,4 +278,4 @@ def sql_diff(store: ObjectStore, a: Snapshot, b: Snapshot) -> DiffResult:
         full_scan_stream(store, a.directory, -1, stats),
         full_scan_stream(store, b.directory, +1, stats),
     ])
-    return _aggregate_stream(a.schema, stream, stats)
+    return _aggregate_stream(a.schema, stream, stats, store)

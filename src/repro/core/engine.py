@@ -298,7 +298,15 @@ class Engine:
             order = np.lexsort((key_hi, key_lo))
             stats.apply_sorts += 1
         else:
-            order = ops.merge128_runs(key_lo, key_hi, runs)
+            # multi-run seal merges shard by key range when big enough
+            # (derived plan — byte-identical sealed order, so zone maps,
+            # carried sigs and GOLDEN digests are untouched)
+            from ..distributed.sharding import maybe_key_cuts
+            cuts = maybe_key_cuts(key_lo, key_hi, runs)
+            if cuts is not None:
+                self.store.metrics.add("probe.shard_parts",
+                                       cuts[0].shape[0] + 1)
+            order = ops.merge128_runs(key_lo, key_hi, runs, cuts=cuts)
             stats.apply_sort_merged += 1
         if order is not None:
             s_klo, s_khi = key_lo[order], key_hi[order]
@@ -433,9 +441,10 @@ class Engine:
                         existing = t.locate_keys(klo, khi)
                         live = existing != 0
                         if live.any():
-                            dset = set(dels.tolist())
-                            if any(int(r) not in dset
-                                   for r in existing[live]):
+                            # vectorized membership: every live key must be
+                            # among this txn's deletes (update-in-place)
+                            if np.isin(existing[live], dels,
+                                       invert=True).any():
                                 raise PKViolation(
                                     f"{name}: key already exists")
                     tomb_oids = self._seal_tombstones(dels, ts)

@@ -341,8 +341,12 @@ def _merge_nopk(engine: Engine, target: str, source: Snapshot,
     d_s = signed_delta(engine.store, base_dir, source.directory, report.stats)
 
     # cancellation #1: deletions of the same base row (same physical rowid)
-    common_del = np.intersect1d(d_t.rowid[d_t.sign < 0],
-                                d_s.rowid[d_s.sign < 0])
+    if (d_t.n and d_s.n and (d_t.sign < 0).any()
+            and (d_s.sign < 0).any()):
+        common_del = np.intersect1d(d_t.rowid[d_t.sign < 0],
+                                    d_s.rowid[d_s.sign < 0])
+    else:
+        common_del = np.zeros((0,), np.uint64)
 
     def residual(stream: SignedStream) -> SignedStream:
         if common_del.shape[0] == 0 or stream.n == 0:
@@ -359,25 +363,53 @@ def _merge_nopk(engine: Engine, target: str, source: Snapshot,
     side = np.concatenate([np.zeros((d_t.n,), np.int8),
                            np.ones((d_s.n,), np.int8)])
     # both branch streams are value-sorted (NoPK key == value), so the
-    # combined stream is a stable 2-run merge and aggregation is sort-free
+    # combined stream is a stable 2-run merge and aggregation is sort-free;
+    # big streams merge/aggregate per key-range shard (derived plan —
+    # byte-identical order, partition-parallel execution)
+    from ..distributed import sharding as ksh
+    shards = ksh.key_shard_count(combined.n)
     if combined.sorted_by_key:
         st = combined
     else:
+        cuts = None
+        if shards > 1 and combined.runs is not None:
+            cuts = ksh.plan_key_cuts(combined.key_lo, combined.key_hi,
+                                     combined.runs, shards)
+            if cuts is not None:
+                engine.store.metrics.add("probe.shard_parts",
+                                         cuts[0].shape[0] + 1)
         order = (ops.merge128_runs(combined.key_lo, combined.key_hi,
-                                   combined.runs)
+                                   combined.runs, cuts=cuts)
                  if combined.runs is not None
                  else ops._sort128(combined.row_lo, combined.row_hi))
         st, side = combined.take(order), side[order]
     _, agg = ops.diff_aggregate(st.row_lo, st.row_hi,
-                                np.ones_like(st.sign), presorted=True)
+                                np.ones_like(st.sign), presorted=True,
+                                shards=shards)
     ro_lo, ro_hi = st.row_lo, st.row_hi
     sd, sg, rid = side, st.sign, st.rowid
     starts = agg.run_starts
     k = starts.shape[0]
-    plus_t = np.add.reduceat(((sd == 0) & (sg > 0)).astype(np.int64), starts)
-    plus_s = np.add.reduceat(((sd == 1) & (sg > 0)).astype(np.int64), starts)
-    net_t = np.add.reduceat(np.where(sd == 0, sg, 0), starts).astype(np.int64)
-    net_s = np.add.reduceat(np.where(sd == 1, sg, 0), starts).astype(np.int64)
+    # per-side + counts and net sums; a branch that contributed no Δ rows
+    # (common: merging into an untouched target) skips its masked reduceats
+    zk = np.zeros((k,), np.int64)
+    has_t = bool((sd == 0).any())
+    has_s = bool((sd == 1).any())
+    sg64 = sg.astype(np.int64)
+    if has_t:
+        pm = (sg > 0) if not has_s else ((sd == 0) & (sg > 0))
+        nm = sg64 if not has_s else np.where(sd == 0, sg64, 0)
+        plus_t = np.add.reduceat(pm.astype(np.int64), starts)
+        net_t = np.add.reduceat(nm, starts)
+    else:
+        plus_t, net_t = zk, zk
+    if has_s:
+        pm = (sg > 0) if not has_t else ((sd == 1) & (sg > 0))
+        nm = sg64 if not has_t else np.where(sd == 1, sg64, 0)
+        plus_s = np.add.reduceat(pm.astype(np.int64), starts)
+        net_s = np.add.reduceat(nm, starts)
+    else:
+        plus_s, net_s = zk, zk
     # cancellation #2: insertions of identical values on both branches
     c_ins = np.minimum(plus_t, plus_s)
     dt = net_t - c_ins   # residual δ_T per value group

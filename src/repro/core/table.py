@@ -173,59 +173,78 @@ class Table:
                     directory: Optional[Directory] = None) -> np.ndarray:
         """PK probe: rowid of the visible row per key signature, 0 if absent.
 
-        LSM probe with zone-map pruning; per-object lower_bound via the
-        searchsorted kernel. PK uniqueness -> at most one visible match.
+        LSM probe with zone-map pruning; per-object fused ``ops.probe128``
+        pass. PK uniqueness -> at most one visible match. Query batches
+        should arrive sorted by (key_lo, key_hi) — the fused-probe contract
+        (ROADMAP §Performance); the merge planner's batches are run starts
+        of key-sorted streams, so this is free for the hot callers.
         """
         d = directory or self.directory
         vi = visibility_index(self._store, d)
         q = key_lo.shape[0]
+        m = self._store.metrics
+        m.add("probe.queries", q)
         out = np.zeros((q,), np.uint64)
-        pending = np.arange(q)
+        # sorted queries (the hot-caller contract) turn each object's zone
+        # filter into two binary searches + one unresolved scan over the
+        # window, instead of full-length masks per object
+        srt = q > 1 and bool((key_lo[1:] >= key_lo[:-1]).all())
+        pending = None if srt else np.arange(q)
         for oid in reversed(d.data_oids):  # newest objects first
-            if pending.shape[0] == 0:
+            if pending is not None and pending.shape[0] == 0:
                 break
             obj: DataObject = self._store.get(oid)
             if obj.nrows == 0:
                 continue
             zmin, zmax = obj.zone
-            sel = (key_lo[pending] >= zmin) & (key_lo[pending] <= zmax)
-            cand = pending[sel]
+            if srt:
+                a = int(np.searchsorted(key_lo, zmin, side="left"))
+                b = int(np.searchsorted(key_lo, zmax, side="right"))
+                cand = (a + np.flatnonzero(out[a:b] == 0) if b > a
+                        else np.zeros((0,), np.int64))
+            else:
+                sel = (key_lo[pending] >= zmin) & (key_lo[pending] <= zmax)
+                cand = pending[sel]
             if cand.shape[0] == 0:
+                m.add("probe.objects_pruned")
                 continue
             found = self._probe_object(obj, vi, key_lo[cand], key_hi[cand])
             hit = found != 0
+            m.add("probe.hits", int(hit.sum()))
             out[cand[hit]] = found[hit]
-            pending = np.concatenate([pending[~sel], cand[~hit]])
+            if not srt:
+                pending = np.concatenate([pending[~sel], cand[~hit]])
         return out
 
     def _probe_object(self, obj: DataObject, vi,
                       q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
         """rowids of visible matches of (q_lo, q_hi) in obj (0 = miss).
 
-        Fully vectorized: exact hits resolve at the lower bound; lo64-
-        collision runs (or runs whose first row is invisible) are expanded
-        flat and resolved with one segmented min-reduction — no per-query
-        Python walk."""
+        One fused ``ops.probe128`` pass hands every query its exact-key run
+        ``[start, start + cnt)`` directly — no lower/upper-bound pair on
+        the lo64 word, no lo64-collision-run expansion. Run heads that are
+        visible resolve immediately (the overwhelmingly common case); only
+        runs with an invisible head AND length > 1 expand, and the
+        expansion covers exactly-equal keys only."""
         n = obj.nrows
+        self._store.metrics.add("probe.objects_probed")
         out = np.zeros(q_lo.shape, np.uint64)
-        lb = ops.lower_bound(obj.key_lo, q_lo)
-        idx = np.minimum(lb, n - 1)
-        hit_lo = (lb < n) & (obj.key_lo[idx] == q_lo)
-        if not hit_lo.any():
+        start, cnt = ops.probe128(obj.key_lo, obj.key_hi, q_lo, q_hi)
+        hit = cnt > 0
+        if not hit.any():
             return out
         vis = vi.visible_mask(obj)
-        exact = hit_lo & (obj.key_hi[idx] == q_hi) & vis[idx]
-        out[exact] = pack_rowid(obj.oid, idx[exact].astype(np.uint64))
-        maybe = np.flatnonzero(hit_lo & ~exact)
-        if maybe.shape[0] == 0:
-            return out
-        ub = ops.upper_bound(obj.key_lo, q_lo[maybe])
-        lens = ub - lb[maybe]                    # > 0: key_lo hit confirmed
-        seg, base, flat = ops.segment_expand(lb[maybe], lens)
-        match = (obj.key_hi[flat] == q_hi[maybe][seg]) & vis[flat]
-        first = np.minimum.reduceat(np.where(match, flat, n), base)
-        found = first < n
-        out[maybe[found]] = pack_rowid(obj.oid, first[found].astype(np.uint64))
+        head = hit & vis[np.minimum(start, n - 1)]
+        out[head] = pack_rowid(obj.oid, start[head].astype(np.uint64))
+        deep = np.flatnonzero(hit & ~head & (cnt > 1))
+        if deep.shape[0]:
+            self._store.metrics.add("probe.expansions", int(deep.shape[0]))
+            seg, base, flat = ops.segment_expand(start[deep] + 1,
+                                                 cnt[deep] - 1)
+            first = np.minimum.reduceat(np.where(vis[flat], flat, n), base)
+            found = first < n
+            out[deep[found]] = pack_rowid(obj.oid,
+                                          first[found].astype(np.uint64))
         return out
 
     def locate_rowsig_multi(self, sig_lo: np.ndarray, sig_hi: np.ndarray,
@@ -235,9 +254,11 @@ class Table:
         """NoPK probe: up to ``need[i]`` visible rowids per row-signature.
 
         Used by merge to delete k rows among duplicates (paper §3 NoPK
-        cardinality resolution). Vectorized: per object, all still-needy
-        signatures expand their equal-sig_lo runs flat; matches are ranked
-        within their query segment by a cumulative count and the first
+        cardinality resolution). Vectorized: per object, one fused
+        ``ops.probe128`` pass hands every still-needy signature its
+        exact-key run; only genuine duplicate runs expand (over equal keys
+        only — never whole lo64-collision runs), matches are ranked within
+        their query segment by a cumulative count and the first
         ``remaining`` of them taken — no nested per-row Python loop.
 
         ``flat=True`` returns one query-ordered rowid array (exactly the
@@ -246,31 +267,54 @@ class Table:
         d = directory or self.directory
         vi = visibility_index(self._store, d)
         q = sig_lo.shape[0]
+        m = self._store.metrics
+        m.add("probe.queries", q)
         part_rows: List[np.ndarray] = []   # flat (rowid, query) accumulation
         part_qids: List[np.ndarray] = []
         remaining = need.astype(np.int64).copy()
+        # sorted queries: zone windows by binary search (see locate_keys)
+        srt = q > 1 and bool((sig_lo[1:] >= sig_lo[:-1]).all())
         for oid in reversed(d.data_oids):
-            if not (remaining > 0).any():
-                break
             obj: DataObject = self._store.get(oid)
             if obj.nrows == 0:
                 continue
-            act = np.flatnonzero(remaining > 0)
             zmin, zmax = obj.zone
-            act = act[(sig_lo[act] >= zmin) & (sig_lo[act] <= zmax)]
+            if srt:
+                a = int(np.searchsorted(sig_lo, zmin, side="left"))
+                b = int(np.searchsorted(sig_lo, zmax, side="right"))
+                act = (a + np.flatnonzero(remaining[a:b] > 0) if b > a
+                       else np.zeros((0,), np.int64))
+            else:
+                act = np.flatnonzero(remaining > 0)
+                if act.shape[0] == 0:
+                    break
+                act = act[(sig_lo[act] >= zmin) & (sig_lo[act] <= zmax)]
             if act.shape[0] == 0:
+                m.add("probe.objects_pruned")
                 continue
-            lb = ops.lower_bound(obj.key_lo, sig_lo[act])
-            ub = ops.upper_bound(obj.key_lo, sig_lo[act])
-            lens = ub - lb
+            m.add("probe.objects_probed")
+            start, lens = ops.probe128(obj.key_lo, obj.key_hi,
+                                       sig_lo[act], sig_hi[act])
             nz = lens > 0
-            act, lb, lens = act[nz], lb[nz], lens[nz]
+            act, start, lens = act[nz], start[nz], lens[nz]
             if act.shape[0] == 0:
                 continue
             vis = vi.visible_mask(obj)
-            seg, base, offs = ops.segment_expand(lb, lens)
-            match = ((obj.key_hi[offs] == sig_hi[act][seg]) & vis[offs]
-                     ).astype(np.int64)
+            if bool((lens == 1).all()):
+                # unique signatures (the overwhelmingly common case): the
+                # run IS its head — no expansion, no rank machinery
+                ok = vis[start]
+                hit_off = start[ok]
+                if hit_off.shape[0]:
+                    m.add("probe.hits", int(hit_off.shape[0]))
+                    part_rows.append(pack_rowid(obj.oid,
+                                                hit_off.astype(np.uint64)))
+                    part_qids.append(act[ok])
+                    remaining[act[ok]] -= 1
+                continue
+            m.add("probe.expansions", int((lens > 1).sum()))
+            seg, base, offs = ops.segment_expand(start, lens)
+            match = vis[offs].astype(np.int64)  # keys equal by construction
             # rank of each match within its query segment (1-based)
             cm = np.cumsum(match)
             seg_base = cm[base] - match[base]
@@ -278,6 +322,7 @@ class Table:
             take = (match > 0) & (rank <= remaining[act][seg])
             taken = np.flatnonzero(take)
             if taken.shape[0]:
+                m.add("probe.hits", int(taken.shape[0]))
                 part_rows.append(pack_rowid(obj.oid,
                                             offs[taken].astype(np.uint64)))
                 part_qids.append(act[seg[taken]])

@@ -55,8 +55,9 @@ __all__ = [
 ]
 
 #: version of the ``stats_json`` document (bumped on any key change, like
-#: the LINT report's ``schema: 1``).
-STATS_SCHEMA = 1
+#: the LINT report's ``schema: 1``). 2: the probe.* counter group
+#: (fused key probes + key-range shard plans, ISSUE 9).
+STATS_SCHEMA = 2
 
 #: span name -> human description. Populated at import time by the modules
 #: that own the operations, exactly like the crash-point registry.
@@ -123,6 +124,12 @@ for _n, _d in (
     ("gc.objects_freed", "objects swept by gc"),
     ("gc.versions_pruned", "table versions pruned by gc"),
     ("gc.pinned_horizons", "versions kept alive by pins at last gc"),
+    ("probe.queries", "key/rowsig signatures submitted to the probe paths"),
+    ("probe.objects_probed", "sealed objects probed by the fused kernel"),
+    ("probe.objects_pruned", "objects skipped entirely by zone maps"),
+    ("probe.hits", "probe queries resolved to a visible rowid"),
+    ("probe.expansions", "equal-key runs expanded past their head"),
+    ("probe.shard_parts", "key-range shard partitions merged"),
 ):
     register_metric(_n, _d)
 

@@ -1,5 +1,6 @@
 """Sharding rules: map every parameter / activation / cache tensor to a
-PartitionSpec on the production mesh (DESIGN.md §4).
+PartitionSpec on the production mesh (DESIGN.md §4), plus the 128-bit
+KEY-RANGE shard planner for the VCS Δ/merge pipeline (ISSUE 9).
 
 Axes: ``pod`` (inter-pod DP), ``data`` (DP + FSDP/ZeRO-3 + SP), ``model``
 (TP + EP). Rules are name-pattern based — the same style MaxText/Megatron
@@ -8,6 +9,14 @@ use — so configs can override per architecture/shape.
 FSDP: stacked layer weights get their largest non-TP dim sharded over
 ``data``; XLA all-gathers at use inside the layer scan (gather-at-use) and
 reduce-scatters the gradients — ZeRO-3 semantics from pjit alone.
+
+Key-range sharding (bottom of this module): sealed objects and Δ streams
+are sorted by 128-bit key signature, so merge and diff aggregation are
+embarrassingly partitionable on key ranges. ``plan_key_cuts`` picks
+boundary keys by rank-sum over the presorted runs; ``kernels.ops``
+executes the plan byte-identically to the unsharded path. Shard plans are
+DERIVED state — a pure function of the immutable lanes and the backend's
+device count — and are never WAL-logged (replay re-derives them).
 """
 from __future__ import annotations
 
@@ -243,3 +252,109 @@ class ModelSharding:
 
     def head(self, w):
         return self._wsc(w, self.head_use)
+
+
+# --------------------------------------------------------------------------
+# 128-bit key-range sharding for the VCS Δ/merge pipeline (ISSUE 9)
+# --------------------------------------------------------------------------
+
+from ..kernels import ops as _ops  # noqa: E402  (after the jax-heavy half)
+
+#: CPU shard sizing: one shard per ~object-capacity of stream rows keeps a
+#: partition's six signature/sign lanes inside L2-ish working sets.
+KEY_SHARD_TARGET_ROWS = 1 << 18
+#: auto-sharding floor: below this, split/concat overhead beats the win
+#: (Δ-sized merges — the committed bench C-sets — stay unsharded).
+KEY_SHARD_MIN_ROWS = 1 << 20
+#: cap on auto shard counts (plan cost is runs x cuts searchsorteds).
+KEY_SHARD_MAX = 16
+
+_FORCED_KEY_SHARDS: Optional[int] = None
+
+
+def set_key_shards(n: Optional[int]) -> Optional[int]:
+    """Force the shard count (tests / operators); ``None`` restores the
+    auto policy. Returns the previous override so callers can restore."""
+    global _FORCED_KEY_SHARDS
+    prev = _FORCED_KEY_SHARDS
+    _FORCED_KEY_SHARDS = n
+    return prev
+
+
+def key_shard_count(n_rows: int) -> int:
+    """How many key-range shards an ``n_rows`` merge/aggregate should use.
+
+    Deterministic in (n_rows, backend): 1 (off) below KEY_SHARD_MIN_ROWS;
+    above it, multi-device backends split one shard per local device and
+    CPU splits into cache-sized partitions. Never persisted — shard plans
+    are derived state, so WAL replay on a different backend re-derives its
+    own (outputs are byte-identical either way)."""
+    if _FORCED_KEY_SHARDS is not None:
+        return max(1, int(_FORCED_KEY_SHARDS))
+    if n_rows < KEY_SHARD_MIN_ROWS:
+        return 1
+    if jax.default_backend() != "cpu" and jax.local_device_count() > 1:
+        return min(jax.local_device_count(), KEY_SHARD_MAX)
+    return int(min(KEY_SHARD_MAX, max(2, n_rows // KEY_SHARD_TARGET_ROWS)))
+
+
+def plan_key_cuts(lo: np.ndarray, hi: np.ndarray, runs: np.ndarray,
+                  shards: int):
+    """Boundary keys splitting presorted runs into ``shards`` balanced
+    key ranges, by rank-sum over the run starts.
+
+    Candidates are each run's local quantile keys; a candidate's global
+    rank is the sum over runs of its exact 128-bit lower bound (the same
+    rank-sum trick the Pallas merge path uses), and the candidate nearest
+    each target rank ``i*n/shards`` wins. Returns ``(cut_lo, cut_hi)`` —
+    ascending, distinct, possibly fewer than ``shards - 1`` entries — or
+    ``None`` when no usable interior boundary exists. Pure function of the
+    immutable lanes: derived state, never WAL-logged."""
+    n = int(lo.shape[0])
+    runs = np.asarray(runs, np.int64)
+    k = runs.shape[0]
+    if shards <= 1 or n == 0 or k <= 1:
+        return None
+    bounds = np.append(runs, n)
+    cand_parts = []
+    for r in range(k):
+        a, b = int(bounds[r]), int(bounds[r + 1])
+        if b > a:
+            cand_parts.append(
+                a + (np.arange(1, shards, dtype=np.int64) * (b - a)) // shards)
+    if not cand_parts:
+        return None
+    cand_idx = np.concatenate(cand_parts)
+    c_lo, c_hi = lo[cand_idx], hi[cand_idx]
+    ranks = np.zeros((cand_idx.shape[0],), np.int64)
+    for r in range(k):
+        a, b = int(bounds[r]), int(bounds[r + 1])
+        ranks += _ops.searchsorted128(lo[a:b], hi[a:b], c_lo, c_hi,
+                                      side="left")
+    chosen = []
+    for j in range(1, shards):
+        target = (j * n) // shards
+        pick = int(np.argmin(np.abs(ranks - target)))
+        rank = int(ranks[pick])
+        key = (int(c_lo[pick]), int(c_hi[pick]))
+        # degenerate cuts (empty first/last shard) and non-ascending picks
+        # are dropped: fewer shards, never a wrong plan
+        if rank <= 0 or rank >= n or (chosen and key <= chosen[-1]):
+            continue
+        chosen.append(key)
+    if not chosen:
+        return None
+    return (np.array([c[0] for c in chosen], np.uint64),
+            np.array([c[1] for c in chosen], np.uint64))
+
+
+def maybe_key_cuts(lo: np.ndarray, hi: np.ndarray, runs):
+    """The one-call shard plan: ``None`` (stay unsharded) unless the
+    stream is big enough for the backend policy AND has real multi-run
+    structure to merge."""
+    if runs is None or runs.shape[0] <= 1:
+        return None
+    shards = key_shard_count(int(lo.shape[0]))
+    if shards <= 1:
+        return None
+    return plan_key_cuts(lo, hi, runs, shards)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .probe import probe_pallas, DEFAULT_BLOCK_Q as PROBE_BLOCK_Q
 from .rowhash import rowhash_pallas, DEFAULT_BLOCK_ROWS
 from .searchsorted import searchsorted_pallas, DEFAULT_BLOCK_Q
 from .segsum_diff import segsum_pallas, DEFAULT_BLOCK
@@ -176,6 +177,70 @@ def searchsorted128(t_lo: np.ndarray, t_hi: np.ndarray,
     return out
 
 
+def probe128(t_lo: np.ndarray, t_hi: np.ndarray,
+             q_lo: np.ndarray, q_hi: np.ndarray):
+    """Fused probe of a (lo, hi)-key-sorted table: per query key, the exact
+    128-bit lower bound (``start``) and the equal-key run length (``cnt``,
+    0 == key absent). ``start`` is defined for misses too — it is where the
+    key WOULD insert — so the contract is total and backend-independent.
+
+    This one call replaces the probe paths' lower_bound → key-compare →
+    upper_bound → segment_expand → reduceat chain: the run of rows exactly
+    equal to the query is ``[start, start + cnt)``, contiguous because
+    sealed objects sort by (lo, hi). Queries SHOULD arrive sorted by
+    (lo, hi) — correctness never depends on it, but the kernel's per-block
+    descents and the CPU searchsorted both degrade on shuffled batches
+    (documented probe contract, ROADMAP §Performance).
+
+    Backend dispatch: on Pallas both bounds come out of one fused
+    fixed-depth kernel descent over the four uint32 lanes; on CPU one lo64
+    searchsorted resolves every query whose lo64 run has length 1 (the
+    common case for hashed keys) and only genuine lo64 collisions pay the
+    vectorized hi-word refinement."""
+    n = t_lo.shape[0]
+    nq = q_lo.shape[0]
+    if nq == 0 or n == 0:
+        return np.zeros((nq,), np.int64), np.zeros((nq,), np.int64)
+    if backend_uses_pallas():
+        t_lh, t_ll = unpack64(np.asarray(t_lo))
+        t_hh, t_hl = unpack64(np.asarray(t_hi))
+        q_lh, q_ll = unpack64(_pad_rows(np.asarray(q_lo), PROBE_BLOCK_Q,
+                                        fill=np.uint64(0)))
+        q_hh, q_hl = unpack64(_pad_rows(np.asarray(q_hi), PROBE_BLOCK_Q,
+                                        fill=np.uint64(0)))
+        start, cnt = probe_pallas(
+            jnp.asarray(t_lh), jnp.asarray(t_ll),
+            jnp.asarray(t_hh), jnp.asarray(t_hl),
+            jnp.asarray(q_lh), jnp.asarray(q_ll),
+            jnp.asarray(q_hh), jnp.asarray(q_hl), interpret=_interp())
+        return (np.asarray(start[:nq], np.int64),
+                np.asarray(cnt[:nq], np.int64))
+    # CPU fused fast path: one primary-word searchsorted for everything
+    lb = np.searchsorted(t_lo, q_lo, side="left").astype(np.int64)
+    start = lb.copy()
+    cnt = np.zeros((nq,), np.int64)
+    idx = np.minimum(lb, n - 1)
+    hit = (lb < n) & (t_lo[idx] == q_lo)
+    if not hit.any():
+        return start, cnt
+    # the lo64 run extends past lb only on a genuine lo64 collision
+    multi = hit & (lb + 1 < n) & (t_lo[np.minimum(lb + 1, n - 1)] == q_lo)
+    one = hit & ~multi
+    if one.any():
+        i1 = lb[one]
+        start[one] = i1 + (t_hi[i1] < q_hi[one])
+        cnt[one] = (t_hi[i1] == q_hi[one]).astype(np.int64)
+    midx = np.flatnonzero(multi)
+    if midx.shape[0]:
+        ub = np.searchsorted(t_lo, q_lo[midx], side="right").astype(np.int64)
+        seg, base, flat = segment_expand(lb[midx], ub - lb[midx])
+        t_run, q_seg = t_hi[flat], q_hi[midx][seg]
+        start[midx] = lb[midx] + np.add.reduceat(
+            (t_run < q_seg).astype(np.int64), base)
+        cnt[midx] = np.add.reduceat((t_run == q_seg).astype(np.int64), base)
+    return start, cnt
+
+
 def segment_expand(starts: np.ndarray, lens: np.ndarray):
     """Expand per-segment (start, len) pairs into flat element indices.
 
@@ -312,7 +377,7 @@ def _sort128(sig_lo: np.ndarray, sig_hi: np.ndarray, *,
 
 
 def merge128_runs(lo: np.ndarray, hi: np.ndarray,
-                  starts: np.ndarray) -> np.ndarray:
+                  starts: np.ndarray, *, cuts=None) -> np.ndarray:
     """Stable merge permutation for concatenated presorted runs.
 
     ``starts`` (k,) int64 holds each run's first offset (``starts[0] == 0``);
@@ -320,6 +385,13 @@ def merge128_runs(lo: np.ndarray, hi: np.ndarray,
     Returns ``order`` such that ``lo[order], hi[order]`` is the stable k-way
     merge — identical to ``np.lexsort((hi, lo))`` on the whole stream (ties
     resolved by run order, then in-run position).
+
+    ``cuts`` (optional) is a key-range shard plan from
+    ``distributed.sharding.plan_key_cuts``: a (cut_lo, cut_hi) pair of
+    ascending distinct 128-bit boundary keys. When given, the merge runs
+    per key-range shard and concatenates — byte-identical to the unsharded
+    merge (see ``_merge128_sharded``), so multi-device backends can split
+    by key range and CPU gets cache-sized partitions for free.
 
     Backend dispatch: on the Pallas backend the runs are merged by
     searchsorted rank-sums (k passes of the searchsorted kernel, no sort at
@@ -330,9 +402,56 @@ def merge128_runs(lo: np.ndarray, hi: np.ndarray,
     starts = np.asarray(starts, np.int64)
     if n == 0 or starts.shape[0] <= 1:
         return np.arange(n, dtype=np.int64)
+    if cuts is not None and cuts[0].shape[0]:
+        return _merge128_sharded(lo, hi, starts, cuts)
     if backend_uses_pallas() and starts.shape[0] <= 64:
         return _merge128_ranksum(lo, hi, starts)
     return _sort128(lo, hi)
+
+
+def _merge128_sharded(lo: np.ndarray, hi: np.ndarray, starts: np.ndarray,
+                      cuts) -> np.ndarray:
+    """Key-range-sharded stable k-way merge, byte-identical to unsharded.
+
+    Every run is split at the exact 128-bit LOWER bound of each cut key —
+    the same rule in every run — so all elements with keys equal to a
+    boundary land in the shard that begins at that boundary and equal keys
+    never straddle shards. Each shard is then a self-contained stable
+    k-way merge (run order and in-run position restricted to the shard are
+    exactly the global tie-break restricted to the shard), so per-shard
+    merges concatenated in cut order reproduce the global stable merge
+    permutation element for element."""
+    cut_lo, cut_hi = cuts
+    n = lo.shape[0]
+    k = starts.shape[0]
+    s = cut_lo.shape[0] + 1
+    bounds = np.append(starts, n)
+    split = np.empty((k, s + 1), np.int64)
+    for r in range(k):
+        a, b = int(bounds[r]), int(bounds[r + 1])
+        split[r, 0], split[r, s] = a, b
+        split[r, 1:s] = a + searchsorted128(lo[a:b], hi[a:b],
+                                            cut_lo, cut_hi, side="left")
+    parts = []
+    for j in range(s):
+        gidx, run_starts, off = [], [], 0
+        for r in range(k):
+            a, b = int(split[r, j]), int(split[r, j + 1])
+            if b > a:
+                run_starts.append(off)
+                off += b - a
+                gidx.append(np.arange(a, b, dtype=np.int64))
+        if not gidx:
+            continue
+        piece = gidx[0] if len(gidx) == 1 else np.concatenate(gidx)
+        if len(run_starts) > 1:
+            sub = merge128_runs(lo[piece], hi[piece],
+                                np.asarray(run_starts, np.int64))
+            piece = piece[sub]
+        parts.append(piece)
+    if not parts:
+        return np.zeros((0,), np.int64)
+    return parts[0] if len(parts) == 1 else np.concatenate(parts)
 
 
 def _merge128_ranksum(lo: np.ndarray, hi: np.ndarray,
@@ -360,12 +479,52 @@ def _merge128_ranksum(lo: np.ndarray, hi: np.ndarray,
     return order
 
 
+def _shard_slices(s_lo: np.ndarray, s_hi: np.ndarray,
+                  shards: int) -> np.ndarray:
+    """Slice starts for a key-range-sharded boundary pass over a SORTED
+    stream: equal-width candidate positions snapped to the START of the
+    equal-key run containing them, so no run straddles a slice and every
+    slice's first element begins a fresh run — per-slice boundary flags
+    are then globally correct by construction. Returns the interior slice
+    starts (ascending, distinct, possibly empty)."""
+    n = s_lo.shape[0]
+    pos = (np.arange(1, shards, dtype=np.int64) * n) // shards
+    aligned = searchsorted128(s_lo, s_hi, s_lo[pos], s_hi[pos], side="left")
+    # keys at ascending positions are non-decreasing, so aligned is too:
+    # dedupe by adjacent-distinct (no sort) and drop degenerate 0 starts
+    aligned = aligned[aligned > 0]
+    if aligned.shape[0] > 1:
+        keep = np.empty(aligned.shape, bool)
+        keep[0] = True
+        keep[1:] = aligned[1:] != aligned[:-1]
+        aligned = aligned[keep]
+    return aligned
+
+
+def _boundary_flags(s_lo: np.ndarray, s_hi: np.ndarray,
+                    s_sg: np.ndarray) -> np.ndarray:
+    """New-run boundary flags of one sorted slice (backend dispatch)."""
+    if backend_uses_pallas():
+        return _segsum_boundary(s_lo, s_hi, s_sg)
+    n = s_lo.shape[0]
+    neq = np.empty((n,), bool)
+    neq[0] = True
+    neq[1:] = (s_lo[1:] != s_lo[:-1]) | (s_hi[1:] != s_hi[:-1])
+    return neq
+
+
 def diff_aggregate(sig_lo: np.ndarray, sig_hi: np.ndarray,
-                   signs: np.ndarray, *, presorted: bool = False):
+                   signs: np.ndarray, *, presorted: bool = False,
+                   shards: int = 1):
     """Sort a signed stream by 128-bit signature and aggregate runs.
 
     Returns (order, DiffAgg): ``order`` is the permutation applied (identity
     if presorted). Runs are maximal groups of equal (sig_lo, sig_hi).
+
+    ``shards > 1`` partitions the boundary pass into key-range slices
+    aligned to run starts (``_shard_slices``) — byte-identical flags,
+    embarrassingly parallel per slice. Only meaningful with ``presorted``
+    (an unsorted stream pays the sort first and shards nothing).
     """
     n = sig_lo.shape[0]
     if n == 0:
@@ -378,15 +537,16 @@ def diff_aggregate(sig_lo: np.ndarray, sig_hi: np.ndarray,
         s_lo, s_hi = sig_lo[order], sig_hi[order]
         s_sg = np.asarray(signs, np.int32)[order]
 
-    if backend_uses_pallas():
-        bnd = _segsum_boundary(s_lo, s_hi, s_sg)
-        return order, DiffAgg(bnd, s_sg)
+    if presorted and shards > 1 and n > shards:
+        starts = _shard_slices(s_lo, s_hi, shards)
+        if starts.shape[0]:
+            bnd = np.empty((n,), bool)
+            edges = np.concatenate([[0], starts, [n]])
+            for a, b in zip(edges[:-1], edges[1:]):
+                bnd[a:b] = _boundary_flags(s_lo[a:b], s_hi[a:b], s_sg[a:b])
+            return order, DiffAgg(bnd, s_sg)
 
-    # CPU fast path
-    neq = np.empty((n,), bool)
-    neq[0] = True
-    neq[1:] = (s_lo[1:] != s_lo[:-1]) | (s_hi[1:] != s_hi[:-1])
-    return order, DiffAgg(neq, s_sg)
+    return order, DiffAgg(_boundary_flags(s_lo, s_hi, s_sg), s_sg)
 
 
 def _segsum_boundary(s_lo: np.ndarray, s_hi: np.ndarray,
@@ -412,9 +572,27 @@ def _segsum_boundary(s_lo: np.ndarray, s_hi: np.ndarray,
     return bnd
 
 
+def _boundary_flags_rows(k_lo, k_hi, r_lo, r_hi, s_sg,
+                         same: bool) -> np.ndarray:
+    """(key OR row)-change boundary flags of one key-sorted slice."""
+    if backend_uses_pallas():
+        bnd = _segsum_boundary(k_lo, k_hi, s_sg)
+        if not same:
+            bnd |= _segsum_boundary(r_lo, r_hi, s_sg)
+        return bnd
+    n = k_lo.shape[0]
+    neq = np.empty((n,), bool)
+    neq[0] = True
+    neq[1:] = (k_lo[1:] != k_lo[:-1]) | (k_hi[1:] != k_hi[:-1])
+    if not same:
+        neq[1:] |= (r_lo[1:] != r_lo[:-1]) | (r_hi[1:] != r_hi[:-1])
+    return neq
+
+
 def diff_aggregate_rows(key_lo: np.ndarray, key_hi: np.ndarray,
                         row_lo: np.ndarray, row_hi: np.ndarray,
-                        signs: np.ndarray, *, presorted: bool = False):
+                        signs: np.ndarray, *, presorted: bool = False,
+                        shards: int = 1):
     """Aggregate a signed stream into (key, row-signature) runs along KEY
     order — the sort-free execution of Listing-2 value grouping.
 
@@ -424,6 +602,11 @@ def diff_aggregate_rows(key_lo: np.ndarray, key_hi: np.ndarray,
     sub-group of one key's (≤ 2-element, by PK uniqueness) run, so
     equal-valued ± pairs cancel exactly as the row-sorted aggregation would,
     while the key order itself is free at emission time.
+
+    ``shards > 1`` partitions the boundary pass into key-range slices
+    aligned to KEY-run starts — a key-run start is also a (key, row) group
+    start, so the per-slice flags are globally correct and byte-identical
+    to the unsharded pass. Only meaningful with ``presorted``.
 
     Returns (order, DiffAgg); ``order`` is identity when presorted.
     """
@@ -442,18 +625,19 @@ def diff_aggregate_rows(key_lo: np.ndarray, key_hi: np.ndarray,
         s_sg = np.asarray(signs, np.int32)[order]
 
     same = r_lo is k_lo and r_hi is k_hi  # NoPK: key IS the row signature
-    if backend_uses_pallas():
-        bnd = _segsum_boundary(k_lo, k_hi, s_sg)
-        if not same:
-            bnd |= _segsum_boundary(r_lo, r_hi, s_sg)
-        return order, DiffAgg(bnd, s_sg)
+    if presorted and shards > 1 and n > shards:
+        starts = _shard_slices(k_lo, k_hi, shards)
+        if starts.shape[0]:
+            bnd = np.empty((n,), bool)
+            edges = np.concatenate([[0], starts, [n]])
+            for a, b in zip(edges[:-1], edges[1:]):
+                bnd[a:b] = _boundary_flags_rows(
+                    k_lo[a:b], k_hi[a:b], r_lo[a:b], r_hi[a:b],
+                    s_sg[a:b], same)
+            return order, DiffAgg(bnd, s_sg)
 
-    neq = np.empty((n,), bool)
-    neq[0] = True
-    neq[1:] = (k_lo[1:] != k_lo[:-1]) | (k_hi[1:] != k_hi[:-1])
-    if not same:
-        neq[1:] |= (r_lo[1:] != r_lo[:-1]) | (r_hi[1:] != r_hi[:-1])
-    return order, DiffAgg(neq, s_sg)
+    return order, DiffAgg(
+        _boundary_flags_rows(k_lo, k_hi, r_lo, r_hi, s_sg, same), s_sg)
 
 
 # --------------------------------------------------------- attention entry

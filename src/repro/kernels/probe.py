@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused 128-bit key probe (run start + run length).
+
+One pass over the sorted ``(key_lo, key_hi)`` lanes of a sealed object
+answers both questions the probe paths used to ask as a lower_bound /
+upper_bound / segment_expand / reduceat chain: WHERE the query key's
+equal-key run begins (its exact 128-bit lower bound — defined even for
+misses) and HOW LONG that run is (0 == key absent).
+
+TPU adaptation mirrors ``searchsorted.py``: the whole table block lives in
+VMEM (objects seal at <= 256Ki rows -> 4 MiB of signature lanes), queries
+tile over the grid, and BOTH bounds descend in one fixed-depth (log2 N,
+static) sequence of masked gathers — the upper bound is a true 128-bit
+descent, not the +1 trick the 64-bit kernel needs, so no sentinel guard.
+Comparisons are lexicographic with the packed lo64 word primary (the seal
+order; see ``ops.py``'s signature convention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 1024
+
+
+def _lt64(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def _lt128(a, b):
+    """a < b for 128-bit keys as (lo_hi32, lo_lo32, hi_hi32, hi_lo32)
+    lane tuples; the packed lo64 word is the primary sort word."""
+    a_lh, a_ll, a_hh, a_hl = a
+    b_lh, b_ll, b_hh, b_hl = b
+    lt_lo = _lt64(a_lh, a_ll, b_lh, b_ll)
+    eq_lo = (a_lh == b_lh) & (a_ll == b_ll)
+    return lt_lo | (eq_lo & _lt64(a_hh, a_hl, b_hh, b_hl))
+
+
+def _probe_kernel(t_lh_ref, t_ll_ref, t_hh_ref, t_hl_ref,
+                  q_lh_ref, q_ll_ref, q_hh_ref, q_hl_ref,
+                  start_ref, cnt_ref, *, n_table: int):
+    tab = (t_lh_ref[...], t_ll_ref[...], t_hh_ref[...], t_hl_ref[...])
+    q = (q_lh_ref[...], q_ll_ref[...], q_hh_ref[...], q_hl_ref[...])
+    bq = q[0].shape[0]
+    lb = jnp.zeros((bq,), jnp.int32)
+    ub = jnp.zeros((bq,), jnp.int32)
+    half = jnp.int32(n_table)
+    for _ in range(max(1, int(n_table).bit_length())):  # static depth
+        half = (half + 1) // 2
+        # lower bound: first i with tab[i] >= q  (go right while tab < q)
+        mid = jnp.minimum(lb + half, jnp.int32(n_table)) - 1
+        mid_c = jnp.clip(mid, 0, max(n_table - 1, 0))
+        t_mid = tuple(lane[mid_c] for lane in tab)
+        go = _lt128(t_mid, q) & (mid < n_table)
+        lb = jnp.where(go, mid + 1, lb)
+        # upper bound: first i with tab[i] > q  (go right while tab <= q)
+        mid2 = jnp.minimum(ub + half, jnp.int32(n_table)) - 1
+        mid2_c = jnp.clip(mid2, 0, max(n_table - 1, 0))
+        t_mid2 = tuple(lane[mid2_c] for lane in tab)
+        go2 = (~_lt128(q, t_mid2)) & (mid2 < n_table)
+        ub = jnp.where(go2, mid2 + 1, ub)
+    start_ref[...] = lb
+    cnt_ref[...] = ub - lb
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def probe_pallas(t_lh: jnp.ndarray, t_ll: jnp.ndarray,
+                 t_hh: jnp.ndarray, t_hl: jnp.ndarray,
+                 q_lh: jnp.ndarray, q_ll: jnp.ndarray,
+                 q_hh: jnp.ndarray, q_hl: jnp.ndarray, *,
+                 block_q: int = DEFAULT_BLOCK_Q,
+                 interpret: bool = False):
+    """Fused (run start, run length) probe of each 128-bit query key.
+
+    t_*/q_*: (N,)/(Q,) uint32 lanes as (lo_hi32, lo_lo32, hi_hi32,
+    hi_lo32); Q % block_q == 0. Returns ((Q,) int32 start in [0, N],
+    (Q,) int32 count >= 0).
+    """
+    n = t_lh.shape[0]
+    q = q_lh.shape[0]
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    full_tab = pl.BlockSpec((n,), lambda i: (0,))
+    per_q = pl.BlockSpec((block_q,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, n_table=n),
+        grid=grid,
+        in_specs=[full_tab] * 4 + [per_q] * 4,
+        out_specs=(per_q, per_q),
+        out_shape=(jax.ShapeDtypeStruct((q,), jnp.int32),
+                   jax.ShapeDtypeStruct((q,), jnp.int32)),
+        interpret=interpret,
+    )(t_lh, t_ll, t_hh, t_hl, q_lh, q_ll, q_hh, q_hl)

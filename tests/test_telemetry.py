@@ -44,6 +44,12 @@ PINNED_METRICS = [
     "gc.objects_freed",
     "gc.pinned_horizons",
     "gc.versions_pruned",
+    "probe.expansions",
+    "probe.hits",
+    "probe.objects_probed",
+    "probe.objects_pruned",
+    "probe.queries",
+    "probe.shard_parts",
     "vis.builds",
     "vis.derives",
     "vis.extends",
@@ -112,7 +118,7 @@ def test_stats_json_golden_schema():
     repo = _mk_repo()
     doc = telemetry.stats_json(repo.engine)
     assert set(doc) == {"schema", "metrics"}
-    assert doc["schema"] == telemetry.STATS_SCHEMA == 1
+    assert doc["schema"] == telemetry.STATS_SCHEMA == 2
     assert list(doc["metrics"]) == PINNED_METRICS  # sorted AND complete
     # engine=None (CLI arms before the store loads): same keys, all zero
     empty = telemetry.stats_json(None)
