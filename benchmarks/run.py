@@ -23,6 +23,8 @@ import tempfile
 _HOTPATH_METRICS = ("diff_cold_s", "diff_warm_s", "merge_s")
 _WORKFLOW_METRICS = ("branch_s", "pr_diff_s", "publish_s", "revert_s")
 _PROBE_METRICS = ("probe_s",)
+_COLDSTORE_METRICS = ("spill_s", "evict_s", "diff_fault_s",
+                      "diff_warm_s", "merge_fault_s")
 
 
 def _row_metrics(row_or_op):
@@ -31,7 +33,34 @@ def _row_metrics(row_or_op):
         return _WORKFLOW_METRICS
     if op.startswith("Probe"):
         return _PROBE_METRICS
+    if op.startswith("Coldstore"):
+        return _COLDSTORE_METRICS
     return _HOTPATH_METRICS
+
+
+def _environment() -> dict:
+    """Provenance header for every BENCH json (ISSUE 10 satellite): two
+    artifacts are only comparable when this block matches."""
+    import platform
+    env = {"platform": platform.platform(),
+           "python": platform.python_version(),
+           "jax_platforms": os.environ.get("JAX_PLATFORMS", "")}
+    try:
+        import numpy
+        env["numpy"] = numpy.__version__
+    except ImportError:  # pragma: no cover
+        env["numpy"] = None
+    try:
+        import jax
+        env["jax"] = jax.__version__
+    except ImportError:
+        env["jax"] = None
+    try:
+        from repro.core.wal import CRC32C_IMPL
+        env["crc32c"] = CRC32C_IMPL
+    except ImportError:  # pragma: no cover
+        env["crc32c"] = None
+    return env
 
 
 def _run_hotpath_subprocess(root: str, n_rows: int) -> list:
@@ -131,6 +160,7 @@ def _fold_hotpath_trajectory(prev_path, n_rows, rows, note):
             entry["counters"] = r["counters"]
         results.append(entry)
     out = {"bench": "diff_merge_hotpath", "rows": n_rows,
+           "env": _environment(),
            "change_sets": {r["change"]: r["changed_rows"] for r in rows},
            "results": results}
     if note:
@@ -197,7 +227,8 @@ def main() -> None:
     if args.hotpath_only:
         run_once = lambda: (V.diff_merge_hotpath(n_rows)
                             + V.workflow_scenario(n_rows)
-                            + V.probe_scenario(n_rows))
+                            + V.probe_scenario(n_rows)
+                            + V.coldstore_scenario(n_rows))
         rows = run_once()
         for rep in range(args.repeat - 1):
             print(f"# repeat {rep + 2}/{args.repeat} (min-fold)")
@@ -209,6 +240,17 @@ def main() -> None:
                       f"{r['probe_s']*1e3:.1f}ms for {r['changed_rows']} "
                       f"queries (probe.queries={c.get('probe.queries', 0)} "
                       f"hits={c.get('probe.hits', 0)})")
+                continue
+            if r["op"].startswith("Coldstore"):
+                c = r.get("counters", {})
+                print(f"coldstore/{r['op']}/{r['change']}: "
+                      f"spill {r['spill_s']*1e3:.1f}ms "
+                      f"evict {r['evict_s']*1e3:.1f}ms "
+                      f"diff fault {r['diff_fault_s']*1e3:.1f}ms "
+                      f"warm {r['diff_warm_s']*1e3:.1f}ms "
+                      f"merge fault {r['merge_fault_s']*1e3:.1f}ms "
+                      f"(store.faults={c.get('store.faults', 0)} "
+                      f"spills={c.get('store.spills', 0)})")
                 continue
             if r["op"].startswith("Workflow"):
                 print(f"workflow/{r['op']}/{r['change']}: "
@@ -226,7 +268,7 @@ def main() -> None:
                   f"/{r['visibility_builds_merge']}")
         if args.json:
             payload = {"bench": "diff_merge_hotpath", "rows": n_rows,
-                       "results": rows}
+                       "env": _environment(), "results": rows}
             if args.compare_to:
                 payload = _fold_hotpath_trajectory(
                     args.compare_to, n_rows, rows, args.note)
@@ -234,7 +276,7 @@ def main() -> None:
                 json.dump(payload, f, indent=1)
         return
 
-    json_out = {"rows": n_rows, "sections": {}}
+    json_out = {"rows": n_rows, "env": _environment(), "sections": {}}
     print("name,us_per_call,derived")
 
     # ---- Table 1: clone vs insert

@@ -131,6 +131,67 @@ def _random_update(engine: Engine, table: str, base, n: int, rng,
     return idx
 
 
+# ------------------------------------------------- tiered store cold path
+
+def coldstore_scenario(n_rows: int = 2_000_000, csizes=None) -> List[Dict]:
+    """Fault-in cost of the tiered store (ISSUE 10): spill + evict the
+    WHOLE heap to a pack directory, then time a diff and a merge that
+    must fault every touched object back in. ``diff_warm_s`` re-times
+    the same diff with everything resident again, so the pair brackets
+    exactly what the heap tier buys on this container."""
+    import shutil
+    import tempfile
+
+    from repro.store import attach_packs
+
+    out = []
+    for pk in (True, False):
+        for cname, csize in (csizes or {"C3": 10_000}).items():
+            csize = min(csize, n_rows // 5)
+            rng = np.random.default_rng([csize, 10] + list(cname.encode()))
+            engine, base = _mk_engine(n_rows, pk)
+            sn1 = engine.create_snapshot("sn1", "lineitem")
+            engine.clone_table("t", sn1)
+            _random_update(engine, "t", base, csize, rng, pk)
+            sn3 = engine.create_snapshot("sn3", "t")
+            cur = engine.current_snapshot("lineitem")
+            root = tempfile.mkdtemp(prefix="dg_coldstore_")
+            try:
+                attach_packs(engine.store, root)
+                t0 = time.perf_counter()
+                engine.store.spill_all()
+                t_spill = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                engine.store.evict_all()
+                t_evict = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                d_cold = snapshot_diff(engine.store, cur, sn3)
+                t_diff_fault = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                d_warm = snapshot_diff(engine.store, cur, sn3)
+                t_diff_warm = time.perf_counter() - t0
+                assert d_warm.n_groups == d_cold.n_groups
+                engine.store.evict_all()
+                t0 = time.perf_counter()
+                three_way_merge(engine, "lineitem", sn3, base=sn1,
+                                mode=ConflictMode.ACCEPT)
+                t_merge_fault = time.perf_counter() - t0
+                out.append({
+                    "op": f"Coldstore{'PK' if pk else 'NoPK'}",
+                    "change": cname, "rows": n_rows,
+                    "changed_rows": csize,
+                    "spill_s": t_spill, "evict_s": t_evict,
+                    "diff_fault_s": t_diff_fault,
+                    "diff_warm_s": t_diff_warm,
+                    "merge_fault_s": t_merge_fault,
+                    # store.* counters pin the tier traffic of the case
+                    "counters": telemetry.metrics_snapshot(engine),
+                })
+            finally:
+                shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
 # ------------------------------------------------- fused probe microbench
 
 def probe_scenario(n_rows: int = 2_000_000, repeats: int = 3) -> List[Dict]:

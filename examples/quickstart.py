@@ -1,7 +1,9 @@
-"""Quickstart: the paper's git-for-data operations in 60 lines.
+"""Quickstart: the paper's git-for-data operations in 80 lines.
 
 Runs the paper §3 workflow (Listing 1): snapshot → clone → independent
-edits → diff → three-way merge, on a small lineitem-like table.
+edits → diff → three-way merge, on a small lineitem-like table — then
+shares the result with a second repo through a bare remote directory
+(push → shallow clone → fetch → pull).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -61,3 +63,37 @@ print(f"merge: {rep.true_conflicts} true / {rep.false_conflicts} false "
 d2 = snapshot_diff(engine.store, engine.current_snapshot("lineitem"), sn3)
 print(f"post-merge diff vs branch: {d2.n_groups} groups "
       f"(= main's own repricing, as expected)")
+
+# ---------------------------------------------------------------- remotes
+# Share the repo through a bare remote directory (ISSUE 10). A remote is
+# just refs + WAL + content-addressed pack objects; push/pull move only
+# the objects the other side lacks, and pulled objects carry their
+# signatures — no row is ever re-hashed in transit.
+import shutil
+import tempfile
+
+from repro.core.repo import Repo
+from repro.store import clone
+from repro.vcs_cli import load_repo
+
+root = tempfile.mkdtemp(prefix="dg-quickstart-")
+remote = f"{root}/origin"
+
+repo = Repo(engine)
+st = repo.push(remote)                        # PUSH TO 'dir'
+print(f"push: {st['objects_pushed']} object(s), "
+      f"{st['bytes_pushed']:,} bytes, {st['records_pushed']} WAL records")
+
+# clone --shallow: refs now, objects fault in from origin on first scan
+clone(remote, f"{root}/b.wal", shallow=True)
+other = load_repo(f"{root}/b.wal")
+print(f"shallow clone: {other.engine.table('lineitem').count():,} rows "
+      f"visible before any object transfer")
+other.fetch(remote)                           # optional bulk warm-up
+st = other.pull(remote)                       # already current -> no-op
+print(f"pull: up_to_date={st['up_to_date']}, "
+      f"objects_pulled={st['objects_pulled']}")
+
+# push is fast-forward-only: divergent histories are refused with a
+# typed RemoteError telling you to pull first (try it!).
+shutil.rmtree(root)

@@ -28,6 +28,10 @@ PRODUCER_MODULES = frozenset({
     "repro.core.diff", "repro.core.merge", "repro.core.table",
     "repro.core.engine", "repro.core.workspace", "repro.core.compaction",
     "repro.core.indices",
+    # ISSUE 10: pack decode reconstructs sealed objects lane-for-lane from
+    # digest-verified blobs — the lanes were sorted when sealed, and the
+    # content address pins them bit-for-bit
+    "repro.store.packs",
 })
 
 #: hot-path modules where a hidden sort undoes the zero-rehash wins

@@ -767,13 +767,20 @@ class Engine:
 
     # ------------------------------------------------------------ replay
     @staticmethod
-    def replay(wal: WAL) -> "Engine":
-        """Deterministically rebuild an engine from its WAL (crash recovery)."""
+    def replay(wal: WAL, *, into: Optional["Engine"] = None,
+               start: int = 0) -> "Engine":
+        """Deterministically rebuild an engine from its WAL (crash recovery).
+
+        ``into``/``start`` continue replay on top of an engine restored by
+        other means (a refs snapshot, see ``repro.store.remote``): records
+        before ``start`` are assumed already absorbed into ``into``'s
+        state — including its oid counter — so only the tail re-runs."""
         from .compaction import compact_objects  # local import: cycle
         _sp = telemetry.span(SP_REPLAY)
         _sp.__enter__()
         try:
-            e = Engine._replay_loop(wal, compact_objects)
+            e = Engine._replay_loop(wal, compact_objects,
+                                    engine=into, start=start)
         finally:
             _sp.__exit__(None, None, None)
         # traces are derived state, never durable state: replay re-ran the
@@ -783,10 +790,12 @@ class Engine:
         return e
 
     @staticmethod
-    def _replay_loop(wal: WAL, compact_objects) -> "Engine":
-        e = Engine()
+    def _replay_loop(wal: WAL, compact_objects,
+                     engine: Optional["Engine"] = None,
+                     start: int = 0) -> "Engine":
+        e = engine if engine is not None else Engine()
         records = list(wal)
-        i = 0
+        i = start
         while i < len(records):
             rec = records[i]
             k, p = rec.kind, rec.payload

@@ -54,7 +54,8 @@ class FsckIssue:
     kind: str               # signature_mismatch | bad_structure |
     #                         unsorted_keys | bad_tombstone |
     #                         missing_object | dangling_ref |
-    #                         replay_divergence | replay_failure
+    #                         pack_corrupt | replay_divergence |
+    #                         replay_failure
     where: str              # ref context, e.g. "table:t@current"
     detail: str
     oid: Optional[int] = None
@@ -71,6 +72,7 @@ class FsckReport:
     rows_verified: int = 0
     directories_checked: int = 0
     refs_checked: int = 0
+    packs_checked: int = 0
     replay_checked: bool = False
     # repair results
     repaired: bool = False
@@ -89,6 +91,8 @@ class FsckReport:
              f"{self.rows_verified} row(s) verified, "
              f"{self.directories_checked} directories, "
              f"{self.refs_checked} refs"
+             + (f", {self.packs_checked} pack(s)" if self.packs_checked
+                else "")
              + (", replay checked" if self.replay_checked else ""))
         if self.repaired:
             s += (f"; repaired: {len(self.quarantined)} quarantined, "
@@ -284,6 +288,18 @@ def _fsck(engine, *, sample: float, check_replay: bool, repair: bool,
             _check_tombstone(obj, where, report)
         else:
             _check_data_object(obj, schema, where, oid in verify, report)
+
+    # ---- pack tier integrity (ISSUE 10): every packed oid's pack file
+    # must exist (or be origin-backed), match its content address, and
+    # frame-verify — bit rot in the spill tier is caught here even while
+    # a heap copy masks it from readers
+    packs = getattr(engine.store, "packs", None)
+    if packs is not None:
+        for oid, ent in sorted(engine.store._packed.items()):
+            report.packs_checked += 1
+            for why in packs.verify(ent[0]):
+                report.issues.append(FsckIssue(
+                    "pack_corrupt", f"pack:{ent[0][:12]}", why, oid))
 
     # ---- WAL replay equivalence (skipped when state is already damaged:
     # the live digests would throw on missing objects)

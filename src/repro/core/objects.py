@@ -16,8 +16,16 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from .faults import crash_point, register
 from .schema import Schema, batch_nbytes, take_batch
 from .telemetry import Metrics
+
+CP_STORE_SPILL = register(
+    "store.spill",
+    "mid spill: the pack file for an object may exist on disk but the "
+    "heap entry has not moved to the packed map — the heap copy is still "
+    "authoritative, so recovery sees identical content (an orphan pack "
+    "file is invisible content-addressed garbage)")
 
 OBJECT_CAPACITY = 1 << 18  # max rows per sealed object (256Ki)
 
@@ -193,8 +201,12 @@ class ObjectStore:
     reused after its object was deleted — any oid-keyed structure must
     therefore subscribe to ``delete`` notifications (``on_delete``, as
     the visibility/delta caches do) rather than assume oids are unique
-    forever. Immutability makes client caching trivial (paper §4) — here
-    the "cache" is the process heap itself.
+    forever. That same reuse is why the durable pack tier below keys by
+    content digest, never oid. Immutability makes client caching trivial
+    (paper §4) — here the heap is tier 1 of a three-tier store: with a
+    ``repro.store.packs.PackDir`` attached (``attach_packs``), objects can
+    be spilled/evicted to content-addressed pack files and fault back in
+    lazily on ``get``.
     """
 
     def __init__(self):
@@ -210,6 +222,18 @@ class ObjectStore:
         # per-call stats objects are transient, so the store keeps the
         # running sums the tracer snapshots
         self.metrics = Metrics()
+        # durable pack tier (ISSUE 10), attached via attach_packs(); when
+        # None every path below reduces to the plain heap-dict store.
+        self.packs = None
+        # oid -> (digest, is_tomb, nbytes) for every oid with a pack copy;
+        # an oid in BOTH maps is spilled-but-resident, in _packed only it
+        # is evicted and will fault in on get()
+        self._packed: Dict[int, Tuple[str, bool, int]] = {}
+        # digest -> live-oid refcount: pack files are deleted only when no
+        # live oid references their content (oids can share bytes)
+        self._digest_refs: Dict[str, int] = {}
+        self._atime: Dict[int, int] = {}   # oid -> LRU tick (heap tier)
+        self._tick = 0
 
     def new_oid(self) -> int:
         oid = self._next_oid
@@ -217,7 +241,8 @@ class ObjectStore:
         return oid
 
     def put(self, obj) -> int:
-        assert obj.oid not in self._objects, "objects are immutable/write-once"
+        assert obj.oid not in self._objects and obj.oid not in self._packed, \
+            "objects are immutable/write-once"
         if SANITIZE:
             _freeze_lanes(obj)
         self._objects[obj.oid] = obj
@@ -225,20 +250,131 @@ class ObjectStore:
         return obj.oid
 
     def get(self, oid: int):
-        return self._objects[oid]
+        obj = self._objects.get(oid)
+        if obj is not None:
+            if self.packs is not None:
+                self.metrics.add("store.hits")
+                self._tick += 1
+                self._atime[oid] = self._tick
+            return obj
+        ent = self._packed.get(oid)
+        if ent is None:
+            raise KeyError(oid)
+        return self._fault_in(oid, ent)
 
     def has(self, oid: int) -> bool:
-        return oid in self._objects
+        return oid in self._objects or oid in self._packed
 
     def delete(self, oid: int) -> None:
-        obj = self._objects.pop(oid)
-        if self.vis_cache is not None and isinstance(obj, TombstoneObject):
+        obj = self._objects.pop(oid, None)
+        ent = self._packed.pop(oid, None)
+        if obj is None and ent is None:
+            raise KeyError(oid)
+        self._atime.pop(oid, None)
+        is_tomb = (isinstance(obj, TombstoneObject) if obj is not None
+                   else ent[1])
+        if self.vis_cache is not None and is_tomb:
             self.vis_cache.on_delete(oid)
         if self.delta_cache is not None:
             self.delta_cache.on_delete(oid)
+        if ent is not None:
+            digest = ent[0]
+            n = self._digest_refs.get(digest, 1) - 1
+            if n <= 0:
+                self._digest_refs.pop(digest, None)
+                self.packs.release(digest)
+            else:
+                self._digest_refs[digest] = n
 
     def oids(self):
-        return self._objects.keys()
+        if not self._packed:
+            return self._objects.keys()
+        return self._objects.keys() | self._packed.keys()
 
     def live_bytes(self) -> int:
-        return sum(int(o.nbytes) for o in self._objects.values())
+        heap = sum(int(o.nbytes) for o in self._objects.values())
+        packed_only = sum(ent[2] for oid, ent in self._packed.items()
+                          if oid not in self._objects)
+        return heap + packed_only
+
+    # -- pack tier (ISSUE 10) ---------------------------------------------
+
+    def attach_packs(self, backend) -> None:
+        """Attach a durable pack directory (``repro.store.packs.PackDir``)
+        as tier 2. In-place: ``Table._store`` and the caches keep their
+        references to this store."""
+        self.packs = backend
+        backend.metrics = self.metrics
+
+    def digest_of(self, oid: int) -> Optional[str]:
+        ent = self._packed.get(oid)
+        return ent[0] if ent is not None else None
+
+    def spill(self, oid: int) -> str:
+        """Write oid's content to the pack tier (keeps the heap copy);
+        returns the content digest. Idempotent per oid."""
+        ent = self._packed.get(oid)
+        if ent is not None:
+            return ent[0]
+        digest, blob = self.packs.encode(self._objects[oid])
+        crash_point(CP_STORE_SPILL)
+        fresh = self.packs.store(digest, blob)
+        obj = self._objects[oid]
+        self._packed[oid] = (digest, isinstance(obj, TombstoneObject),
+                             int(obj.nbytes))
+        self._digest_refs[digest] = self._digest_refs.get(digest, 0) + 1
+        self.metrics.add("store.spills")
+        if fresh:
+            self.metrics.add("store.bytes_packed", len(blob))
+        return digest
+
+    def evict(self, oid: int) -> str:
+        """Spill oid then drop its heap copy — the object stays live (no
+        ``on_delete``: caches keyed by oid remain valid because fault-in
+        reconstructs identical content at the same oid)."""
+        digest = self.spill(oid)
+        self._objects.pop(oid, None)
+        self._atime.pop(oid, None)
+        self.metrics.add("store.evictions")
+        return digest
+
+    def _fault_in(self, oid: int, ent):
+        obj = self.packs.load(ent[0], oid)
+        if SANITIZE:
+            _freeze_lanes(obj)
+        self._objects[oid] = obj
+        self._tick += 1
+        self._atime[oid] = self._tick
+        self.metrics.add("store.faults")
+        return obj
+
+    def spill_all(self) -> int:
+        n = 0
+        for oid in list(self._objects):
+            if oid not in self._packed:
+                self.spill(oid)
+                n += 1
+        return n
+
+    def evict_all(self) -> int:
+        n = 0
+        for oid in list(self._objects):
+            self.evict(oid)
+            n += 1
+        return n
+
+    def shrink_heap(self, target_bytes: int) -> int:
+        """Evict least-recently-used resident objects until the heap tier
+        holds at most ``target_bytes``; returns the eviction count."""
+        resident = sum(int(o.nbytes) for o in self._objects.values())
+        if resident <= target_bytes:
+            return 0
+        order = sorted(self._objects, key=lambda o: self._atime.get(o, 0))
+        n = 0
+        for oid in order:
+            if resident <= target_bytes:
+                break
+            resident -= int(self._objects[oid].nbytes)
+            self.evict(oid)
+            n += 1
+        return n

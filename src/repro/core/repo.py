@@ -26,7 +26,17 @@ every verb maps 1:1 onto a statement and a CLI subcommand:
     status          STATUS                        status
     gc              GC                            gc
     fsck            FSCK [REPAIR]                 fsck [--repair]
+    push            PUSH TO 'dir'                 push dir
+    pull            PULL FROM 'dir'               pull dir
+    fetch           FETCH FROM 'dir'              fetch dir
+    (clone repo)    —                             clone new-store dir
     ==============  ============================  =====================
+
+    ``push``/``pull``/``fetch`` exchange content-addressed pack objects
+    with a remote directory (only missing digests transfer; pulled
+    signatures are carried, never re-hashed); repo-level ``clone`` with
+    ``--shallow`` imports refs up front and faults objects from the origin
+    on first gather. See :mod:`repro.store`.
 
 The facade is thin by design: verbs delegate to the engine/workspace layer
 (which owns WAL logging and replay), so a statement-driven session and a
@@ -293,7 +303,9 @@ class Repo:
         versions), branches, snapshots, PRs, and the full telemetry
         registry snapshot (every registered counter, zeros included — the
         zero-rehash invariant is inspectable without a debugger)."""
+        from .wal import CRC32C_IMPL
         e = self.engine
+        st = e.store
         return {
             "ts": e.ts,
             "tables": [(n, e.tables[n].directory.ts,
@@ -303,6 +315,15 @@ class Repo:
             "snapshots": self.snapshots(),
             "prs": [(i, p.base_name, p.head_name, p.status)
                     for i, p in sorted(e.prs.items())],
+            # integrity backend (ISSUE 10 satellite): which crc32c does the
+            # framing — the pure-python fallback is ~100x slower and should
+            # be visible, not silent
+            "crc32c": CRC32C_IMPL,
+            "store": {
+                "resident": len(st._objects),
+                "packed": len(st._packed),
+                "packs": st.packs.root if st.packs is not None else None,
+            },
             "metrics": dict(sorted(self.stats().items())),
         }
 
@@ -317,6 +338,27 @@ class Repo:
         """Snapshot of every registered metric (stable key set — the
         ``datagit stats`` schema)."""
         return telemetry.metrics_snapshot(self.engine)
+
+    # ------------------------------------------------------------ remotes
+    def push(self, remote: str) -> dict:
+        """PUSH TO 'dir' — ship missing pack objects + the WAL to a remote
+        directory and swing its refs (fast-forward only)."""
+        from ..store.remote import push as _push
+        return _push(self.engine, remote)
+
+    def fetch(self, remote: str, pack_dir: Optional[str] = None) -> dict:
+        """FETCH FROM 'dir' — copy missing pack objects locally without
+        changing any repo state (warm-up for shallow clones and pulls)."""
+        from ..store.remote import fetch as _fetch
+        return _fetch(self.engine, remote, pack_dir)
+
+    def pull(self, remote: str, pack_dir: Optional[str] = None) -> dict:
+        """PULL FROM 'dir' — fast-forward this repo to the remote's state,
+        fetching only missing objects; swaps ``self.engine``. Carried
+        signatures are imported verbatim (``rows_rehashed`` stays 0)."""
+        from ..store.remote import pull as _pull
+        self.engine, stats = _pull(self.engine, remote, pack_dir)
+        return stats
 
     # ----------------------------------------------------------------- gc
     def gc(self) -> GCStats:

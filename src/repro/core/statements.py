@@ -33,6 +33,9 @@ Supported statements (keywords case-insensitive; refs quoted or bare)::
     GC
     FSCK [REPAIR]
     LINT
+    PUSH TO '/path/to/remote'
+    PULL FROM '/path/to/remote'
+    FETCH FROM '/path/to/remote'
 
 ``execute(repo, text)`` runs one statement; ``execute_script`` splits on
 ``;``. Unknown verbs raise :class:`StatementError` with did-you-mean
@@ -226,6 +229,13 @@ def _fmt_status(st: dict) -> str:
     lines = [f"ts={st['ts']}"]
     for section, (label, fmt) in _SECTIONS.items():
         lines += [f"{label} {fmt(r)}" for r in st[section]]
+    if "crc32c" in st:
+        lines.append(f"crc32c={st['crc32c']}")
+    tier = st.get("store")
+    if tier is not None:
+        lines.append(f"store resident={tier['resident']} "
+                     f"packed={tier['packed']} "
+                     f"packs={tier['packs'] or '(heap only)'}")
     # the full registry snapshot, zeros included: `datagit status` is how
     # an operator checks the zero-rehash invariant without a debugger
     for k, v in sorted(st.get("metrics", {}).items()):
@@ -471,6 +481,42 @@ def _lint(repo, p: _P) -> StatementResult:
         render_text(findings, discover_count(paths)))
 
 
+def _push(repo, p: _P) -> StatementResult:
+    p.kw("TO")
+    remote = p.ref()
+    p.end()
+    st = repo.push(remote)
+    return StatementResult(
+        "push", st,
+        f"push {remote}: {st['objects_pushed']} object(s) "
+        f"({st['bytes_pushed']} bytes), {st['records_pushed']} record(s)")
+
+
+def _pull(repo, p: _P) -> StatementResult:
+    p.kw("FROM")
+    remote = p.ref()
+    p.end()
+    st = repo.pull(remote)
+    if st.get("up_to_date"):
+        return StatementResult("pull", st,
+                               f"pull {remote}: already up to date")
+    return StatementResult(
+        "pull", st,
+        f"pull {remote}: {st['objects_pulled']} object(s), "
+        f"{st['records_pulled']} record(s)")
+
+
+def _fetch(repo, p: _P) -> StatementResult:
+    p.kw("FROM")
+    remote = p.ref()
+    p.end()
+    st = repo.fetch(remote)
+    return StatementResult(
+        "fetch", st,
+        f"fetch {remote}: {st['objects_pulled']} object(s) "
+        f"({st['bytes_pulled']} bytes)")
+
+
 def _stats(repo, p: _P) -> StatementResult:
     p.end()
     doc = telemetry.stats_json(repo.engine)
@@ -515,7 +561,7 @@ _HANDLERS = {
     "CLOSE": _close, "REVERT": _revert, "RESTORE": _restore, "LOG": _log,
     "SHOW": _show, "STATUS": _status, "STATS": _stats,
     "EXPLAIN": _explain, "GC": _gc, "FSCK": _fsck,
-    "LINT": _lint,
+    "LINT": _lint, "PUSH": _push, "PULL": _pull, "FETCH": _fetch,
 }
 _VERBS = tuple(_HANDLERS)        # one source of truth for did-you-mean
 

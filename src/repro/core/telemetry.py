@@ -56,8 +56,9 @@ __all__ = [
 
 #: version of the ``stats_json`` document (bumped on any key change, like
 #: the LINT report's ``schema: 1``). 2: the probe.* counter group
-#: (fused key probes + key-range shard plans, ISSUE 9).
-STATS_SCHEMA = 2
+#: (fused key probes + key-range shard plans, ISSUE 9). 3: the store.*
+#: counter group (tiered pack store + remotes, ISSUE 10).
+STATS_SCHEMA = 3
 
 #: span name -> human description. Populated at import time by the modules
 #: that own the operations, exactly like the crash-point registry.
@@ -130,6 +131,13 @@ for _n, _d in (
     ("probe.hits", "probe queries resolved to a visible rowid"),
     ("probe.expansions", "equal-key runs expanded past their head"),
     ("probe.shard_parts", "key-range shard partitions merged"),
+    ("store.hits", "object gets served from the heap tier (packs attached)"),
+    ("store.faults", "objects faulted in from the pack tier on get"),
+    ("store.spills", "objects spilled to the pack tier"),
+    ("store.evictions", "heap-tier entries evicted to the pack tier"),
+    ("store.bytes_packed", "pack-blob bytes freshly written to disk"),
+    ("store.objects_pushed", "pack objects shipped to a remote by push"),
+    ("store.objects_pulled", "pack objects fetched from a remote"),
 ):
     register_metric(_n, _d)
 

@@ -123,13 +123,43 @@ class StoreVersionError(StoreFormatError):
             "this build (or load it with the build that wrote it)")
 
 
+#: cumulative bytes hashed by the pure-python fallback, and the threshold
+#: past which a one-shot warning fires (ISSUE 10 satellite): the table
+#: loop is ~100x slower than google-crc32c, which matters once pack spill
+#: starts hashing whole row groups. Module globals so tests can shrink
+#: the threshold instead of hashing 64MB.
+_py_crc32c_bytes = 0
+_PY_CRC32C_WARN_BYTES = 64 << 20
+_py_crc32c_warned = False
+
+
+def _note_py_crc32c(nbytes: int) -> None:
+    """Account fallback-hashed bytes; warn once past the threshold.
+
+    Defined unconditionally (not just in the fallback branch) so the
+    warn-once contract stays testable on hosts with google-crc32c."""
+    global _py_crc32c_bytes, _py_crc32c_warned
+    _py_crc32c_bytes += nbytes
+    if (not _py_crc32c_warned
+            and _py_crc32c_bytes > _PY_CRC32C_WARN_BYTES):
+        _py_crc32c_warned = True
+        import sys
+        print(f"datagit: warning: hashed "
+              f"{_py_crc32c_bytes / (1 << 20):.0f}MB with the "
+              "pure-python crc32c fallback; install google-crc32c "
+              "for ~100x faster integrity checks", file=sys.stderr)
+
 try:                                       # C implementation when present
     from google_crc32c import value as _crc32c_impl
+
+    CRC32C_IMPL = "google-crc32c"
 
     def crc32c(data: bytes) -> int:
         return _crc32c_impl(data)
 except ImportError:                        # pure-python fallback (CI has
     _CRC32C_TABLE: List[int] = []          # only numpy/jax/pytest)
+
+    CRC32C_IMPL = "pure-python"
 
     def _crc32c_build_table() -> None:
         poly = 0x82F63B78                  # Castagnoli, reflected
@@ -142,6 +172,7 @@ except ImportError:                        # pure-python fallback (CI has
     def crc32c(data: bytes) -> int:
         if not _CRC32C_TABLE:
             _crc32c_build_table()
+        _note_py_crc32c(len(data))
         tab = _CRC32C_TABLE
         c = 0xFFFFFFFF
         for b in data:

@@ -1,0 +1,345 @@
+"""Content-addressed pack files: the durable spill tier (ISSUE 10).
+
+One sealed object per pack file, in the DGWS framing style of the WAL::
+
+    header  := MAGIC "DGPK" | version u8 | reserved u8*3       (8 bytes)
+    frame 0 := meta (canonical JSON: kind, lane layout, dtypes)
+    frame i := one lane payload per meta["lanes"] entry
+    frame   := length u32le | crc32c(payload) u32le | payload
+
+Numeric lanes are raw little-endian array bytes — ``np.frombuffer`` over
+the blob reconstructs them zero-copy (read-only, mmap-friendly). LOB lanes
+(object arrays of ``bytes``) are a u32le length lane followed by the
+concatenated values. No pickle anywhere in the pack path: a pack file is
+fully decodable (and verifiable) from its bytes alone.
+
+The content address is ``sha256(blob)`` over the whole encoded blob with
+the **oid excluded** from the meta frame: oids are recycled by the engine's
+rollback paths, so a digest keyed on one would alias a recycled oid to
+stale bytes. ``PackDir.load`` re-binds the requesting oid at decode time.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import struct
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from ..core.faults import crash_point, register
+from ..core.objects import DataObject, TombstoneObject
+from ..core.wal import StoreFormatError, encode_frame, iter_frames
+
+PACK_MAGIC = b"DGPK"
+PACK_VERSION = 1
+PACK_HEADER = PACK_MAGIC + bytes([PACK_VERSION]) + b"\x00\x00\x00"
+PACK_SUFFIX = ".dgp"
+
+CP_PACK_WRITE = register(
+    "store.pack.write",
+    "mid atomic pack/refs file write: the tmp file is fully written but "
+    "not yet renamed into place — recovery must see either the old file "
+    "or none (the stale .tmp is ignored by every reader)")
+
+_LOB_HEAD = struct.Struct("<Q")           # value count of a LOB lane
+
+
+class PackFormatError(StoreFormatError):
+    """A pack blob failed structural validation (magic/version/layout)."""
+
+
+# --------------------------------------------------------------------------
+# lane codecs
+# --------------------------------------------------------------------------
+
+def _encode_lob_lane(arr: np.ndarray) -> bytes:
+    vals = [v if isinstance(v, bytes) else bytes(v) for v in arr.tolist()]
+    lens = np.asarray([len(v) for v in vals], dtype=np.uint32)
+    return _LOB_HEAD.pack(len(vals)) + lens.tobytes() + b"".join(vals)
+
+
+def _decode_lob_lane(payload: bytes) -> np.ndarray:
+    if len(payload) < _LOB_HEAD.size:
+        raise PackFormatError("LOB lane truncated before its count")
+    (n,) = _LOB_HEAD.unpack_from(payload, 0)
+    off = _LOB_HEAD.size
+    lens = np.frombuffer(payload, dtype=np.uint32, count=n, offset=off)
+    off += n * 4
+    if off + int(lens.sum()) != len(payload):
+        raise PackFormatError("LOB lane length table does not cover payload")
+    out = np.empty((n,), dtype=object)
+    for i, ln in enumerate(lens.tolist()):
+        out[i] = payload[off:off + ln]
+        off += ln
+    return out
+
+
+def _encode_num_lane(arr: np.ndarray) -> bytes:
+    a = np.ascontiguousarray(arr)
+    if a.dtype.byteorder == ">":          # packs are little-endian on disk
+        a = a.astype(a.dtype.newbyteorder("<"))
+    return a.tobytes()
+
+
+def _decode_num_lane(payload: bytes, dtype: str, nrows: int) -> np.ndarray:
+    arr = np.frombuffer(payload, dtype=np.dtype(dtype))
+    if arr.shape[0] != nrows:
+        raise PackFormatError(
+            f"lane has {arr.shape[0]} row(s), meta declares {nrows}")
+    return arr                             # read-only by construction
+
+
+# --------------------------------------------------------------------------
+# object <-> blob
+# --------------------------------------------------------------------------
+
+def encode_object(obj) -> bytes:
+    """Serialize one sealed object as a self-verifying pack blob.
+
+    Deterministic: identical lane content encodes to identical bytes, so
+    the digest doubles as the dedup/exchange key (ForkBase-style)."""
+    lanes: List[Tuple[str, str, bytes]] = []   # (name, codec, payload)
+
+    def num(name: str, arr: np.ndarray) -> None:
+        a = np.ascontiguousarray(arr)
+        code = a.dtype.str if a.dtype.byteorder != ">" else \
+            a.dtype.newbyteorder("<").str
+        lanes.append((name, code, _encode_num_lane(arr)))
+
+    if isinstance(obj, DataObject):
+        key_is_row = obj.key_lo is obj.row_lo
+        num("commit_ts", obj.commit_ts)
+        num("row_lo", obj.row_lo)
+        num("row_hi", obj.row_hi)
+        if not key_is_row:
+            num("key_lo", obj.key_lo)
+            num("key_hi", obj.key_hi)
+        cols: List[Tuple[str, str]] = []
+        for name, arr in obj.cols.items():
+            if arr.dtype == object:
+                cols.append((name, "lob"))
+                lanes.append((name, "lob", _encode_lob_lane(arr)))
+            else:
+                cols.append((name, np.ascontiguousarray(arr).dtype.str))
+                num(name, arr)
+        sig_lob = sorted(obj.lob_sigs)
+        for name in sig_lob:
+            num("lob_sig:" + name, obj.lob_sigs[name])
+        meta = {"kind": "data", "nrows": int(obj.nrows),
+                "nbytes": int(obj.nbytes), "key_is_row": key_is_row,
+                "cols": cols, "sig_lob": sig_lob,
+                "lanes": [(n, c) for n, c, _ in lanes]}
+    elif isinstance(obj, TombstoneObject):
+        num("commit_ts", obj.commit_ts)
+        num("target", obj.target)
+        num("key_lo", obj.key_lo)
+        num("key_hi", obj.key_hi)
+        meta = {"kind": "tomb", "nrows": int(obj.nrows),
+                "target_oids": [int(o) for o in obj.target_oids],
+                "lanes": [(n, c) for n, c, _ in lanes]}
+    else:
+        raise TypeError(f"cannot pack {type(obj).__name__}")
+
+    out = [PACK_HEADER,
+           encode_frame(json.dumps(meta, sort_keys=True,
+                                   separators=(",", ":")).encode())]
+    out.extend(encode_frame(payload) for _, _, payload in lanes)
+    return b"".join(out)
+
+
+def blob_digest(blob: bytes) -> str:
+    return hashlib.sha256(blob).hexdigest()
+
+
+def check_pack_header(blob: bytes) -> int:
+    """Validate the pack header; returns the offset where frames begin."""
+    if blob[:4] != PACK_MAGIC:
+        raise PackFormatError(
+            f"bad magic {blob[:4]!r}: not a datagit pack file")
+    if len(blob) < len(PACK_HEADER):
+        raise PackFormatError("pack header truncated")
+    if blob[4] != PACK_VERSION:
+        raise PackFormatError(
+            f"pack format version {blob[4]} is not supported "
+            f"(this build reads DGPK v{PACK_VERSION})")
+    return len(PACK_HEADER)
+
+
+def decode_object(blob: bytes, oid: int):
+    """Rebuild a sealed object from a pack blob, binding it to ``oid``.
+
+    Every frame CRC is verified on the way in (TornFrame/CorruptFrame are
+    the same typed errors the WAL raises); lane shapes are validated
+    against the meta frame before any object is constructed."""
+    start = check_pack_header(blob)
+    frames = [payload for payload, _ in iter_frames(blob, start)]
+    if not frames:
+        raise PackFormatError("pack has no meta frame")
+    try:
+        meta = json.loads(frames[0].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as err:
+        raise PackFormatError(f"bad meta frame: {err}") from None
+    lanes = meta.get("lanes", [])
+    if len(frames) - 1 != len(lanes):
+        raise PackFormatError(
+            f"pack has {len(frames) - 1} lane frame(s), meta declares "
+            f"{len(lanes)}")
+    nrows = int(meta["nrows"])
+    decoded: Dict[str, np.ndarray] = {}
+    for (name, codec), payload in zip(lanes, frames[1:]):
+        decoded[name] = (_decode_lob_lane(payload) if codec == "lob"
+                         else _decode_num_lane(payload, codec, nrows))
+    if meta["kind"] == "data":
+        row_lo, row_hi = decoded["row_lo"], decoded["row_hi"]
+        if meta["key_is_row"]:
+            # NoPK tables: the key signature IS the row signature — keep
+            # the array identity so Δ emission can tag streams key==row
+            key_lo, key_hi = row_lo, row_hi
+        else:
+            key_lo, key_hi = decoded["key_lo"], decoded["key_hi"]
+        return DataObject(
+            oid=oid, nrows=nrows,
+            cols={name: decoded[name] for name, _ in meta["cols"]},
+            commit_ts=decoded["commit_ts"],
+            row_lo=row_lo, row_hi=row_hi, key_lo=key_lo, key_hi=key_hi,
+            lob_sigs={name: decoded["lob_sig:" + name]
+                      for name in meta["sig_lob"]},
+            nbytes=int(meta["nbytes"]))
+    if meta["kind"] == "tomb":
+        return TombstoneObject(
+            oid=oid, nrows=nrows, target=decoded["target"],
+            key_lo=decoded["key_lo"], key_hi=decoded["key_hi"],
+            commit_ts=decoded["commit_ts"],
+            target_oids=tuple(meta["target_oids"]))
+    raise PackFormatError(f"unknown pack kind {meta['kind']!r}")
+
+
+# --------------------------------------------------------------------------
+# the pack directory (tier 2)
+# --------------------------------------------------------------------------
+
+def _atomic_write(path: str, blob: bytes) -> None:
+    """Durable all-or-nothing file write: tmp + fsync + rename + dir fsync.
+
+    Readers never see a partial file — the crash point fires with the tmp
+    fully written but not yet renamed, and every reader ignores ``.tmp``."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        crash_point(CP_PACK_WRITE)
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+class PackDir:
+    """A local pack directory (tier 2), optionally faulting through to a
+    remote directory (tier 3) for digests not yet local.
+
+    Layout: ``<root>/objects/<sha256-hex>.dgp`` — the same layout a remote
+    uses, so push/fetch are file copies keyed by digest."""
+
+    def __init__(self, root: str, origin: Optional[str] = None):
+        self.root = root
+        self.objects_dir = os.path.join(root, "objects")
+        self.origin = origin            # remote dir for fault-through reads
+        self.metrics = None             # bound by ObjectStore.attach_packs
+
+    # ----------------------------------------------------------- layout
+    def ensure(self) -> None:
+        os.makedirs(self.objects_dir, exist_ok=True)
+
+    def path(self, digest: str) -> str:
+        return os.path.join(self.objects_dir, digest + PACK_SUFFIX)
+
+    def has(self, digest: str) -> bool:
+        return os.path.exists(self.path(digest))
+
+    def digests(self) -> Set[str]:
+        if not os.path.isdir(self.objects_dir):
+            return set()
+        return {f[:-len(PACK_SUFFIX)] for f in os.listdir(self.objects_dir)
+                if f.endswith(PACK_SUFFIX)}
+
+    # ------------------------------------------------------------- write
+    def encode(self, obj) -> Tuple[str, bytes]:
+        blob = encode_object(obj)
+        return blob_digest(blob), blob
+
+    def store(self, digest: str, blob: bytes) -> bool:
+        """Write a pack blob under its digest; returns False when already
+        present (content-addressed: identical digest == identical bytes)."""
+        if self.has(digest):
+            return False
+        self.ensure()
+        _atomic_write(self.path(digest), blob)
+        return True
+
+    def release(self, digest: str) -> None:
+        """Drop the local pack file for a GC'd digest (best-effort: a
+        crash mid-sweep only leaves content-addressed garbage behind)."""
+        try:
+            os.unlink(self.path(digest))
+        except FileNotFoundError:
+            pass
+
+    # -------------------------------------------------------------- read
+    def read(self, digest: str) -> bytes:
+        """The verified blob for ``digest`` — local file first, then a
+        fault-through fetch from ``origin`` (cached locally)."""
+        p = self.path(digest)
+        if os.path.exists(p):
+            with open(p, "rb") as f:
+                return f.read()
+        if self.origin is not None:
+            src = os.path.join(self.origin, "objects", digest + PACK_SUFFIX)
+            with open(src, "rb") as f:
+                blob = f.read()
+            if blob_digest(blob) != digest:
+                raise PackFormatError(
+                    f"remote object {digest[:12]}… fails its digest")
+            self.store(digest, blob)
+            if self.metrics is not None:
+                self.metrics.add("store.objects_pulled")
+            return blob
+        raise KeyError(f"no pack for digest {digest[:12]}…")
+
+    def load(self, digest: str, oid: int):
+        return decode_object(self.read(digest), oid)
+
+    # ------------------------------------------------------------ verify
+    def verify(self, digest: str) -> List[str]:
+        """Integrity issues for one digest (empty list = clean)."""
+        p = self.path(digest)
+        if not os.path.exists(p):
+            if self.origin is not None:
+                return []               # fault-through remote backs it
+            return [f"pack {digest[:12]}… missing from {self.objects_dir}"]
+        with open(p, "rb") as f:
+            blob = f.read()
+        if blob_digest(blob) != digest:
+            return [f"pack {digest[:12]}… content does not match its "
+                    "digest (bit rot or a renamed file)"]
+        try:
+            start = check_pack_header(blob)
+            for _ in iter_frames(blob, start):
+                pass
+        except StoreFormatError as err:
+            return [f"pack {digest[:12]}…: {err}"]
+        return []
+
+
+def attach_packs(store, root: str, origin: Optional[str] = None) -> PackDir:
+    """Attach (or return the existing) pack tier of an ``ObjectStore``."""
+    if store.packs is not None:
+        return store.packs
+    backend = PackDir(root, origin=origin)
+    store.attach_packs(backend)
+    return backend

@@ -161,7 +161,23 @@ def load_repo(store: str) -> Repo:
             # is not self-healing — main() surfaces the typed error and
             # points at `fsck --repair`
     n_loaded = len(wal.records)
-    engine = Engine.replay(wal)     # adopts `wal`, so new records append
+    refs_path = store + ".refs"
+    refs_origin = None
+    if os.path.exists(refs_path) and not rewrite:
+        # refs-mode store (ISSUE 10): rebuild from the refs snapshot and
+        # fault objects from the pack tier lazily — only WAL records past
+        # the snapshot (a crash tail) replay. The WAL stays authoritative
+        # locally; the refs file is a derived cache refreshed at save.
+        from .store.packs import PackDir
+        from .store.remote import decode_refs, import_refs
+        with open(refs_path, "rb") as f:
+            payload = decode_refs(f.read())
+        refs_origin = payload.get("origin")
+        packs = PackDir(store + ".packs", origin=refs_origin)
+        engine = import_refs(payload, wal, packs)
+    else:
+        engine = Engine.replay(wal)  # adopts `wal`, so new records append
+        refs_path = None
     repo = Repo(engine)
     if len(wal.records) != n_loaded:
         # replay dropped a torn trailing commit group: the on-disk frames
@@ -171,6 +187,8 @@ def load_repo(store: str) -> Repo:
     repo._persisted_records = len(wal.records)
     repo._persisted_offset = clean_end
     repo._rewrite_store = rewrite
+    repo._refs_path = refs_path
+    repo._refs_origin = refs_origin
     return repo
 
 
@@ -178,6 +196,12 @@ def save_repo(store: str, repo: Repo) -> None:
     done = getattr(repo, "_persisted_records", 0)
     new = repo.engine.wal.records[done:]
     exists = os.path.exists(store)
+    if not new and exists:
+        # nothing appended: read-only commands must never touch the store
+        # file — even a pending legacy upgrade / torn-group rewrite waits
+        # for the next MUTATING command (the load path handles the old
+        # format again until then)
+        return
     if getattr(repo, "_rewrite_store", False):
         # legacy upgrade (or a dropped torn txn group): rewrite the whole
         # store in the framed format, atomically via rename
@@ -194,8 +218,7 @@ def save_repo(store: str, repo: Repo) -> None:
         repo._persisted_offset = os.path.getsize(store)
         repo._persisted_records = len(repo.engine.wal.records)
         repo._rewrite_store = False
-        return
-    if not new and exists:
+        _save_refs(store, repo)
         return
     offset = getattr(repo, "_persisted_offset", 0)
     with open(store, "r+b" if exists else "wb") as f:
@@ -227,6 +250,26 @@ def save_repo(store: str, repo: Repo) -> None:
         repo.engine.wal.fsyncs += 1
         repo._persisted_offset = f.tell()
     repo._persisted_records = done + len(new)
+    _save_refs(store, repo)
+
+
+def _save_refs(store: str, repo: Repo) -> None:
+    """Refresh the refs snapshot of a refs-mode store (ISSUE 10).
+
+    Runs AFTER the WAL bytes are durable: locally the WAL is the commit
+    point and the refs file only caches the replayed state, so a crash
+    between the two just means the next load replays a short tail."""
+    refs_path = getattr(repo, "_refs_path", None)
+    if refs_path is None:
+        return
+    from .store.packs import _atomic_write, attach_packs
+    from .store.remote import encode_refs, export_refs
+    e = repo.engine
+    origin = getattr(repo, "_refs_origin", None)
+    attach_packs(e.store, store + ".packs", origin=origin)
+    e.store.spill_all()             # every live object gets a pack copy
+    _atomic_write(refs_path, encode_refs(export_refs(
+        e, dict(e.store._packed), origin=e.store.packs.origin)))
 
 
 # --------------------------------------------------------------------------
@@ -317,6 +360,8 @@ def _compile(args, repo: Repo) -> Optional[str]:
         return (f"CLONE TABLE {_ident(args.new, 'table name')} "
                 f"FROM {_q(args.ref)}"
                 + (" MATERIALIZE" if args.materialize else ""))
+    if c == "push":
+        return f"PUSH TO {_q(args.remote)}"
     if c == "diff":
         stmt = f"DIFF {_q(args.a)} AGAINST {_q(args.b)}"
         if args.table:
@@ -397,9 +442,10 @@ def _compile(args, repo: Repo) -> Optional[str]:
 #: subcommands that only read — skipped on store write-back. ``sql`` is
 #: NOT here: raw statements may mutate, so their WAL must persist. ``gc``
 #: IS here: it is deliberately un-WAL-logged, so the write-back would be
-#: byte-identical wasted I/O.
+#: byte-identical wasted I/O. ``push``/``fetch`` write to the REMOTE (or
+#: the pack sidecar), never to the store file itself.
 _READ_ONLY = {"diff", "log", "branches", "snapshots", "prs", "tables",
-              "status", "stats", "gc"}
+              "status", "stats", "gc", "push", "fetch"}
 
 #: error types with a deliberate user-facing shape (ref/statement/VCS
 #: semantics, durable-format damage); anything else caught below gets its
@@ -521,10 +567,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("table", nargs="?", default=None)
     p.add_argument("-d", "--delete", action="store_true")
 
-    p = sub.add_parser("clone", help="clone a table from any ref")
-    p.add_argument("new")
-    p.add_argument("ref")
+    p = sub.add_parser("clone", help="clone a table from any ref, or — "
+                                     "with one arg — clone a whole repo "
+                                     "from a remote directory into --store")
+    p.add_argument("new", help="new table name (table clone) or the "
+                               "remote directory (repo clone)")
+    p.add_argument("ref", nargs="?", default=None)
     p.add_argument("--materialize", action="store_true")
+    p.add_argument("--shallow", action="store_true",
+                   help="repo clone only: skip fetching objects — fault "
+                        "them from the origin on first read")
 
     p = sub.add_parser("diff", help="diff two refs")
     p.add_argument("a")
@@ -574,6 +626,19 @@ def build_parser() -> argparse.ArgumentParser:
                         ("status", "full repo summary"),
                         ("gc", "mark-sweep garbage collection")):
         sub.add_parser(name, help=help_)
+
+    p = sub.add_parser("push", help="ship missing objects + the WAL to a "
+                                    "remote directory (fast-forward only)")
+    p.add_argument("remote")
+
+    p = sub.add_parser("pull", help="fast-forward this store to a "
+                                    "remote's state (fetches only "
+                                    "missing objects)")
+    p.add_argument("remote")
+
+    p = sub.add_parser("fetch", help="copy missing objects from a remote "
+                                     "without changing repo state")
+    p.add_argument("remote")
 
     p = sub.add_parser("stats", help="metrics registry snapshot")
     p.add_argument("--format", choices=("text", "json"), default="text")
@@ -682,6 +747,21 @@ def _cmd(args, tracer: Optional[telemetry.Tracer]) -> int:
             save_repo(args.store, Repo())
             print(f"initialized empty store at {args.store}")
             return 0
+        if args.cmd == "clone" and args.ref is None:
+            # repo-level clone (ISSUE 10): `new` is the remote directory
+            # and --store names the NEW store — which must not exist yet
+            from .store.remote import clone as _repo_clone
+            if args.materialize:
+                raise ValueError("clone: --materialize is a table-clone "
+                                 "flag (repo clones fetch packs instead; "
+                                 "use --shallow to skip even that)")
+            st = _repo_clone(args.new, args.store, shallow=args.shallow)
+            print(f"cloned {args.new} into {args.store}: "
+                  f"{st['records']} record(s), "
+                  + (f"shallow (objects fault in from the origin)"
+                     if st["shallow"]
+                     else f"{st['objects_fetched']} object(s) fetched"))
+            return 0
         if not os.path.exists(args.store):
             # a typo'd --store must not silently create a store elsewhere
             print(f"error: no store at {args.store} — run `init` first "
@@ -698,6 +778,22 @@ def _cmd(args, tracer: Optional[telemetry.Tracer]) -> int:
                              args.nopk))
         elif args.cmd == "mutate":
             print(mutate_table(repo, args.table, args.rows, args.seed))
+        elif args.cmd == "pull":
+            # native (not a compiled statement): the CLI supplies the
+            # store's pack sidecar and flips the store to refs-mode so
+            # subsequent loads import refs instead of replaying data
+            st = repo.pull(args.remote, pack_dir=args.store + ".packs")
+            if st.get("up_to_date"):
+                print(f"pull {args.remote}: already up to date")
+            else:
+                repo._refs_path = args.store + ".refs"
+                repo._refs_origin = repo.engine.store.packs.origin
+                print(f"pull {args.remote}: {st['objects_pulled']} "
+                      f"object(s), {st['records_pulled']} record(s)")
+        elif args.cmd == "fetch":
+            st = repo.fetch(args.remote, pack_dir=args.store + ".packs")
+            print(f"fetch {args.remote}: {st['objects_pulled']} object(s) "
+                  f"({st['bytes_pulled']} bytes)")
         elif args.cmd == "sql":
             checks_failed = False
             for res in execute_script(repo, args.statements):

@@ -28,10 +28,15 @@ from repro.core.faults import corrupt_object_bit, flip_bit
 from repro.core.wal import MAGIC, STORE_HEADER
 from repro.vcs_cli import load_repo, save_repo
 
+import repro.store  # noqa: F401  — registers the store.* crash points
+
 # the engine-level op script exercises these; cli.* seams need a store
-# file and are swept separately below
-ENGINE_POINTS = sorted(p for p in registered() if not p.startswith("cli."))
+# file and store.* seams need a pack directory — both swept separately
+# (store.* in tests/test_store_tiers.py)
+ENGINE_POINTS = sorted(p for p in registered()
+                       if not p.startswith(("cli.", "store.")))
 CLI_POINTS = sorted(p for p in registered() if p.startswith("cli."))
+STORE_POINTS = sorted(p for p in registered() if p.startswith("store."))
 
 
 def script(e):

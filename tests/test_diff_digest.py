@@ -136,12 +136,28 @@ def _apply_setup(pk, overlap, n_rows=30_000, csize=1_500,
     return engine, sn1, sn3
 
 
-def run_apply_workload(pk: bool):
+def run_apply_workload(pk: bool, pack_root=None):
     """Apply-path digests: merge in every conflict mode, revert, publish.
 
     The scan digest pins the POST-APPLY table bytes (object contents,
-    rowids, signatures) — the seal path itself, not just the DiffResult."""
+    rowids, signatures) — the seal path itself, not just the DiffResult.
+
+    With ``pack_root`` set (ISSUE 10), every engine gets a pack tier and
+    is fully evicted before AND after each apply: the same goldens then
+    also pin that spill/evict/fault-in round trips are byte-invisible."""
     from benchmarks.vcs_tables import _mk_engine
+    seq = [0]
+
+    def _tier(engine):
+        if pack_root is None:
+            return
+        import os
+        from repro.store import attach_packs
+        if engine.store.packs is None:
+            seq[0] += 1
+            attach_packs(engine.store,
+                         os.path.join(str(pack_root), f"p{seq[0]}"))
+        engine.store.evict_all()
     out = {}
     # merges: disjoint edits under FAIL; overlapping under SKIP/ACCEPT/CELL
     modes = [("fail", ConflictMode.FAIL, 0.0, False),
@@ -151,7 +167,9 @@ def run_apply_workload(pk: bool):
         modes.append(("cell", ConflictMode.CELL, 0.5, True))
     for name, mode, overlap, cell_cols in modes:
         engine, sn1, sn3 = _apply_setup(pk, overlap, cell_cols=cell_cols)
+        _tier(engine)
         rep = three_way_merge(engine, "lineitem", sn3, base=sn1, mode=mode)
+        _tier(engine)
         out[f"merge_{name}"] = (
             f"{rep.inserted}/{rep.deleted}/{rep.true_conflicts}/"
             f"{rep.false_conflicts}/{rep.cell_merged}/"
@@ -159,18 +177,22 @@ def run_apply_workload(pk: bool):
     # no-base merges (cross-delta §5.3 path)
     engine, sn1, sn3 = _apply_setup(pk, 0.5)
     engine._base.clear()
+    _tier(engine)
     rep = three_way_merge(engine, "lineitem", sn3, base=None,
                           mode=ConflictMode.ACCEPT)
+    _tier(engine)
     out["merge_nobase"] = (f"{rep.inserted}/{rep.deleted}/"
                            f"{rep.true_conflicts}/"
                            + scan_digest(engine, "lineitem"))
     # revert: undo the ACCEPT merge via the inverse delta
     engine, sn1, sn3 = _apply_setup(pk, 0.0)
     pre = engine.create_snapshot("pre", "lineitem")
+    _tier(engine)
     three_way_merge(engine, "lineitem", sn3, base=sn1,
                     mode=ConflictMode.ACCEPT)
     post = engine.create_snapshot("post", "lineitem")
     engine.revert("lineitem", pre, post)
+    _tier(engine)
     out["revert"] = scan_digest(engine, "lineitem")
     # publish + revert_publish through the workflow porcelain
     engine, base = _mk_engine(30_000, pk)
@@ -179,9 +201,11 @@ def run_apply_workload(pk: bool):
     idx = np.sort(rng.choice(30_000, size=1_500, replace=False))
     _edit(engine, "dev/lineitem", base, idx, pk, tag=3)
     pr = engine.open_pr("main", "dev")
+    _tier(engine)
     pr.publish()
     out["publish"] = scan_digest(engine, "lineitem")
     pr.revert_publish()
+    _tier(engine)
     out["publish_revert"] = scan_digest(engine, "lineitem")
     return out
 
@@ -239,6 +263,15 @@ def test_diff_pipeline_byte_identical(pk):
 @pytest.mark.parametrize("pk", [True, False])
 def test_apply_path_byte_identical(pk):
     got = run_apply_workload(pk)
+    assert got == GOLDEN_APPLY[pk], got
+
+
+@pytest.mark.parametrize("pk", [True, False])
+def test_apply_path_byte_identical_from_evicted_store(pk, tmp_path):
+    """ISSUE 10: the SAME goldens with every engine spilled to a pack
+    tier and fully evicted around each apply — merge/revert/publish over
+    faulted-in objects must land byte-identical tables."""
+    got = run_apply_workload(pk, pack_root=tmp_path)
     assert got == GOLDEN_APPLY[pk], got
 
 

@@ -1,0 +1,461 @@
+"""Tiered store + remote suite (ISSUE 10).
+
+Pins the four contracts of ``repro.store``:
+
+* tier transparency — spill/evict/fault-in never changes what a reader
+  sees: content digests are byte-identical across any cache state, LRU
+  eviction honours access recency, and GC releases pack files;
+* crash safety — every ``store.*`` seam (pack write, spill, push
+  manifest, pull apply) is swept with fault injection: recovery from the
+  durable WAL lands on an all-or-nothing clean-run state, a crashed push
+  leaves the remote readable at its OLD state, a crashed pull leaves the
+  local engine untouched;
+* remote exchange — push/pull/fetch move ONLY the missing objects
+  (counter-pinned), pulls rehash zero rows, and shallow clones fault
+  objects from origin on first read;
+* the surfaces — fsck catches pack bit rot, ``status`` reports the
+  crc32c impl + tier occupancy, read-only CLI commands never rewrite the
+  store file, and the two-repo CLI round trip ends byte-identical with
+  clean fsck on both sides.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import VCS_SCHEMA as SCH
+from conftest import content_digest, kv_batch as _batch
+from test_wal_roundtrip import digests
+
+from repro.core import Engine, FaultPlan, InjectedCrash, WAL, fsck, inject
+from repro.core import telemetry
+from repro.core import wal as walmod
+from repro.core.faults import flip_bit
+from repro.store import PackDir, attach_packs, blob_digest, pull, push
+from repro.store.remote import RemoteError, fetch, read_remote
+from repro import vcs_cli
+
+from test_crash_recovery import STORE_POINTS
+
+
+def _counters(e):
+    return telemetry.stats_json(e)["metrics"]
+
+
+def _seed(rows=60, packs_root=None):
+    e = Engine()
+    if packs_root is not None:
+        attach_packs(e.store, packs_root)
+    e.create_table("t", SCH)
+    e.insert("t", _batch(range(rows)))
+    return e
+
+
+# --------------------------------------------------------------------------
+# tier transparency
+# --------------------------------------------------------------------------
+
+def test_spill_evict_fault_digest_identity(tmp_path):
+    """The capstone tier property: spill + evict + reopen-by-scan gives
+    byte-identical content, and every tier transition is counted."""
+    e = _seed(packs_root=str(tmp_path / "packs"))
+    e.create_snapshot("s1", "t")
+    e.update_by_keys("t", _batch(range(10), vals=np.arange(10) * 3.0))
+    before = content_digest(e, "t")
+    e.store.spill_all()
+    e.store.evict_all()
+    assert not e.store._objects and e.store._packed   # heap empty, tier 2 full
+    assert content_digest(e, "t") == before           # faulted back in
+    c = _counters(e)
+    assert c["store.spills"] > 0 and c["store.evictions"] > 0
+    assert c["store.faults"] > 0 and c["store.bytes_packed"] > 0
+    # a second scan is all heap hits, no new faults
+    n_faults = c["store.faults"]
+    assert content_digest(e, "t") == before
+    c2 = _counters(e)
+    assert c2["store.faults"] == n_faults and c2["store.hits"] > c["store.hits"]
+
+
+def test_oids_live_bytes_and_delete_span_both_tiers(tmp_path):
+    e = _seed(rows=20, packs_root=str(tmp_path / "packs"))
+    all_oids = sorted(e.store.oids())
+    e.store.evict_all()
+    assert sorted(e.store.oids()) == all_oids
+    assert e.store.live_bytes() > 0
+    # delete of a packed-only object works and releases its pack file
+    victim = all_oids[0]
+    digest = e.store.digest_of(victim)
+    assert e.store.packs.has(digest)
+    e.store.delete(victim)
+    assert not e.store.has(victim)
+    assert not e.store.packs.has(digest)              # refcount hit 0
+
+
+def test_shrink_heap_evicts_lru_first(tmp_path):
+    e = Engine()
+    attach_packs(e.store, str(tmp_path / "packs"))
+    e.create_table("t", SCH)
+    for i in range(4):
+        e.insert("t", _batch(range(i * 10, i * 10 + 10)))
+    oids = sorted(e.store._objects)
+    e.store.shrink_heap(0)
+    assert not e.store._objects                       # target 0 evicts all
+    for o in oids[1:]:
+        e.store.get(o)                                # fault all back in...
+    keep = e.store.get(oids[0]).nbytes                # ...oldest oid LAST:
+    e.store.shrink_heap(keep)                         # it is now the MRU
+    assert oids[0] in e.store._objects
+    for o in oids[1:]:
+        assert o not in e.store._objects              # LRU tail evicted
+    assert sorted(e.store.oids()) == oids             # all still readable
+
+
+def test_gc_prunes_pack_files(tmp_path):
+    e = _seed(rows=30, packs_root=str(tmp_path / "packs"))
+    e.store.spill_all()
+    assert len(e.store.packs.digests()) > 0
+    e.update_by_keys("t", _batch(range(30), vals=np.arange(30) * 2.0))
+    e.store.spill_all()
+    e.gc()
+    # exactly the live packed set remains on disk — a GC'd oid's pack file
+    # is released with it (refcounted by digest); survivors still verify
+    assert e.store.packs.digests() == \
+        {ent[0] for ent in e.store._packed.values()}
+    for _, ent in sorted(e.store._packed.items()):
+        assert e.store.packs.verify(ent[0]) == []
+
+
+# --------------------------------------------------------------------------
+# crash sweep: every store.* seam, all-or-nothing
+# --------------------------------------------------------------------------
+
+def store_script(box, root):
+    """Spill/evict, push to a fresh remote, advance the remote through a
+    second engine, pull back. Each yield is a legal recovery target for
+    the engine in ``box`` (pull swaps the engine, hence the box)."""
+    e = box["e"]
+    attach_packs(e.store, os.path.join(root, "packs"))
+    e.create_table("t", SCH);                          yield "create"
+    e.insert("t", _batch(range(40)));                  yield "seed"
+    e.store.spill_all();                               yield "spill"
+    e.store.evict_all();                               yield "evict"
+    e.insert("t", _batch(range(40, 50)));              yield "grow"
+    remote = os.path.join(root, "remote")
+    os.makedirs(remote, exist_ok=True)
+    push(e, remote);                                   yield "push"
+    b, _ = pull(Engine(), remote,
+                pack_dir=os.path.join(root, "bpacks"))
+    b.insert("t", _batch(range(50, 55)));              yield "b_grow"
+    push(b, remote);                                   yield "b_push"
+    box["e"], _ = pull(e, remote);                     yield "pull"
+
+
+@pytest.fixture(scope="module")
+def store_oracle(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("oracle"))
+    box = {"e": Engine()}
+    plan = FaultPlan({})
+    states = [digests(box["e"])]
+    with inject(plan):
+        for _ in store_script(box, root):
+            states.append(digests(box["e"]))
+    return states, dict(plan.hits)
+
+
+def test_store_points_all_registered():
+    assert STORE_POINTS == ["store.pack.write", "store.pull.apply",
+                            "store.push.manifest", "store.spill"]
+
+
+@pytest.mark.parametrize("point", STORE_POINTS)
+def test_store_crash_sweep_all_or_nothing(point, store_oracle, tmp_path):
+    states, hits = store_oracle
+    assert hits.get(point, 0) > 0, \
+        f"store script never reaches crash point {point!r} — extend it"
+    for n in range(1, hits[point] + 1):
+        root = str(tmp_path / f"run{n}")
+        os.makedirs(root)
+        box = {"e": Engine()}
+        tripped = False
+        with inject(FaultPlan.at(point, n)) as plan:
+            try:
+                for _ in store_script(box, root):
+                    pass
+            except InjectedCrash as crash:
+                tripped = True
+                assert crash.point == point and crash.hit == n
+        assert tripped and plan.tripped == point
+        recovered = Engine.replay(
+            WAL.deserialize(box["e"].wal.serialize()))
+        assert digests(recovered) in states, (
+            f"crash at {point} hit {n}: recovered state matches no "
+            "clean-run state (partial operation survived)")
+        report = fsck(recovered)
+        assert report.ok, (point, n, [str(i) for i in report.issues])
+
+
+def test_push_manifest_crash_leaves_remote_at_old_state(tmp_path):
+    """The refs swing is the commit point: a push that dies after shipping
+    objects + WAL but before the refs write is INVISIBLE to readers."""
+    e = _seed(packs_root=str(tmp_path / "packs"))
+    remote = str(tmp_path / "remote")
+    os.makedirs(remote)
+    push(e, remote)
+    old_payload, old_records = read_remote(remote)
+    e.insert("t", _batch(range(60, 80)))
+    with inject(FaultPlan.at("store.push.manifest")):
+        with pytest.raises(InjectedCrash):
+            push(e, remote)
+    payload, records = read_remote(remote)            # still readable...
+    assert payload["n_records"] == old_payload["n_records"]
+    assert len(records) == len(old_records)           # ...at the OLD state
+    stats = push(e, remote)                           # retry completes
+    assert stats["records_pushed"] > 0
+    assert read_remote(remote)[0]["n_records"] > old_payload["n_records"]
+
+
+def test_pull_apply_crash_leaves_local_untouched(tmp_path):
+    e = _seed(packs_root=str(tmp_path / "packs"))
+    remote = str(tmp_path / "remote")
+    os.makedirs(remote)
+    push(e, remote)
+    b, _ = pull(Engine(), remote, pack_dir=str(tmp_path / "bpacks"))
+    b.insert("t", _batch(range(60, 70)))
+    push(b, remote)
+    before = digests(e)
+    with inject(FaultPlan.at("store.pull.apply")):
+        with pytest.raises(InjectedCrash):
+            pull(e, remote)
+    assert digests(e) == before                       # engine never swung
+    e2, stats = pull(e, remote)                       # retry completes
+    assert stats["records_pulled"] > 0
+    assert digests(e2) == digests(b)
+
+
+def test_spill_crash_keeps_heap_authoritative(tmp_path):
+    e = _seed(rows=10, packs_root=str(tmp_path / "packs"))
+    before = content_digest(e, "t")
+    with inject(FaultPlan.at("store.spill")):
+        with pytest.raises(InjectedCrash):
+            e.store.spill_all()
+    # nothing moved to the packed map; readers are unaffected
+    assert not e.store._packed
+    assert content_digest(e, "t") == before
+    e.store.spill_all()                               # retry is clean
+    assert len(e.store._packed) == len(e.store._objects) > 0
+    assert content_digest(e, "t") == before
+
+
+# --------------------------------------------------------------------------
+# remote exchange: only-missing-objects, zero rehash
+# --------------------------------------------------------------------------
+
+def test_push_pull_move_only_missing_objects(tmp_path):
+    remote = str(tmp_path / "remote")
+    os.makedirs(remote)
+    a = _seed(packs_root=str(tmp_path / "apacks"))
+    s1 = push(a, remote)
+    assert s1["objects_pushed"] == len(set(a.store.oids()))
+    assert push(a, remote)["objects_pushed"] == 0     # idempotent
+    b, sp = pull(Engine(), remote, pack_dir=str(tmp_path / "bpacks"))
+    assert sp["objects_pulled"] == s1["objects_pushed"]
+    assert _counters(b)["commit.rows_rehashed"] == 0  # pull rehashes nothing
+    b.insert("t", _batch(range(60, 70)))
+    new = set(b.store.oids()) - set(a.store.oids())
+    s2 = push(b, remote)
+    assert s2["objects_pushed"] == len(new)           # dedup: missing set only
+    a2, s3 = pull(a, remote)
+    assert s3["objects_pulled"] == len(new)
+    assert _counters(a2)["store.objects_pulled"] == len(new)
+    assert _counters(a2)["commit.rows_rehashed"] == 0
+    assert content_digest(a2, "t") == content_digest(b, "t")
+    assert pull(a2, remote)[1]["up_to_date"]
+
+
+def test_push_refuses_diverged_pull_refuses_behind(tmp_path):
+    remote = str(tmp_path / "remote")
+    os.makedirs(remote)
+    a = _seed(rows=10, packs_root=str(tmp_path / "apacks"))
+    push(a, remote)
+    b, _ = pull(Engine(), remote, pack_dir=str(tmp_path / "bpacks"))
+    b.insert("t", _batch(range(10, 15)))
+    push(b, remote)
+    a.insert("t", _batch(range(20, 25)))              # diverge locally
+    with pytest.raises(RemoteError, match="pull first"):
+        push(a, remote)
+    with pytest.raises(RemoteError):
+        pull(a, remote)                               # diverged pull refused
+
+
+def test_fetch_prefetches_without_state_swing(tmp_path):
+    remote = str(tmp_path / "remote")
+    os.makedirs(remote)
+    a = _seed(rows=20, packs_root=str(tmp_path / "apacks"))
+    push(a, remote)
+    b = Engine()
+    st = fetch(b, remote, pack_dir=str(tmp_path / "bpacks"))
+    assert st["objects_pulled"] > 0
+    assert not b.tables                               # refs untouched
+    assert b.store.packs.digests() == PackDir(remote).digests()
+    assert fetch(b, remote)["objects_pulled"] == 0    # second fetch: no-op
+
+
+def test_shallow_clone_faults_objects_on_first_read(tmp_path):
+    from repro.store import clone
+    remote = str(tmp_path / "remote")
+    os.makedirs(remote)
+    a = _seed(rows=50, packs_root=str(tmp_path / "apacks"))
+    before = content_digest(a, "t")
+    push(a, remote)
+    dest = str(tmp_path / "b.wal")
+    st = clone(remote, dest, shallow=True)
+    assert st["shallow"] and st["objects_fetched"] == 0
+    rb = vcs_cli.load_repo(dest)
+    assert not rb.engine.store._objects               # nothing resident
+    assert content_digest(rb.engine, "t") == before   # faults from origin
+    assert _counters(rb.engine)["store.objects_pulled"] > 0
+    st2 = clone(remote, str(tmp_path / "c.wal"))      # deep clone: eager
+    assert st2["objects_fetched"] > 0
+
+
+# --------------------------------------------------------------------------
+# fsck + status surfaces
+# --------------------------------------------------------------------------
+
+def test_fsck_catches_pack_bit_rot(tmp_path):
+    e = _seed(rows=20, packs_root=str(tmp_path / "packs"))
+    e.store.spill_all()
+    assert fsck(e).ok
+    digest = sorted(ent[0] for ent in e.store._packed.values())[0]
+    flip_bit(e.store.packs.path(digest), 200)
+    report = fsck(e)
+    assert not report.ok
+    assert any(i.kind == "pack_corrupt" for i in report.issues)
+    assert report.packs_checked == len(e.store._packed)
+
+
+def test_status_reports_crc32c_and_tiers(tmp_path):
+    from repro.core import Repo
+    repo = Repo()
+    repo.engine.create_table("t", SCH)
+    repo.engine.insert("t", _batch(range(10)))
+    st = repo.status()
+    assert st["crc32c"] == walmod.CRC32C_IMPL
+    assert st["store"]["resident"] > 0 and st["store"]["packed"] == 0
+    assert st["store"]["packs"] is None
+    attach_packs(repo.engine.store, str(tmp_path / "packs"))
+    repo.engine.store.evict_all()
+    st = repo.status()
+    assert st["store"]["resident"] == 0 and st["store"]["packed"] > 0
+    assert st["store"]["packs"] == str(tmp_path / "packs")
+
+
+def test_pure_python_crc32c_warns_once(monkeypatch, capsys):
+    """Past the byte threshold the fallback accounting warns exactly once
+    (satellite 2). ``_note_py_crc32c`` is the unconditional seam: on this
+    host the C impl may be loaded, so drive the helper directly — it is
+    exactly what the fallback ``crc32c`` calls per hash."""
+    monkeypatch.setattr(walmod, "_py_crc32c_bytes", 0)
+    monkeypatch.setattr(walmod, "_py_crc32c_warned", False)
+    monkeypatch.setattr(walmod, "_PY_CRC32C_WARN_BYTES", 1024)
+    walmod._note_py_crc32c(512)
+    assert capsys.readouterr().err == ""              # under threshold
+    walmod._note_py_crc32c(1024)
+    walmod._note_py_crc32c(4096)
+    err = capsys.readouterr().err
+    assert err.count("pure-python crc32c fallback") == 1
+
+
+# --------------------------------------------------------------------------
+# CLI: read-only commands never rewrite; two-repo round trip
+# --------------------------------------------------------------------------
+
+def _sig(path):
+    st = os.stat(path)
+    with open(path, "rb") as f:
+        return st.st_mtime_ns, st.st_size, f.read()
+
+
+def test_read_only_cli_commands_never_rewrite_store(tmp_path):
+    store = str(tmp_path / "a.wal")
+    assert vcs_cli.main(["--store", store, "init"]) == 0
+    assert vcs_cli.main(["--store", store, "seed", "t", "--rows", "50"]) == 0
+    before = _sig(store)
+    for argv in (["status"], ["log", "t"], ["stats"], ["tables"],
+                 ["branches"], ["sql", "STATUS"]):
+        assert vcs_cli.main(["--store", store] + argv) == 0, argv
+        assert _sig(store) == before, f"{argv} rewrote the store file"
+    # a mutating command DOES write
+    assert vcs_cli.main(["--store", store, "seed", "u", "--rows", "5"]) == 0
+    assert _sig(store) != before
+
+
+def test_read_only_cli_leaves_legacy_pickle_store_alone(tmp_path):
+    """A legacy store pends a format upgrade — but only a MUTATING command
+    may perform it (satellite 1)."""
+    import pickle
+    store = str(tmp_path / "legacy.wal")
+    e = Engine()
+    e.create_table("t", SCH)
+    e.insert("t", _batch(range(5)))
+    with open(store, "wb") as f:
+        pickle.dump(e.wal.records, f)
+    before = _sig(store)
+    assert vcs_cli.main(["--store", store, "status"]) == 0
+    assert _sig(store) == before                      # untouched
+    assert vcs_cli.main(["--store", store, "seed", "u", "--rows", "3"]) == 0
+    assert _sig(store) != before                      # upgrade happened
+    with open(store, "rb") as f:
+        assert f.read(4) == walmod.MAGIC              # ...to DGWS framing
+
+
+def test_cli_two_repo_round_trip(tmp_path, capsys):
+    """seed A -> push -> shallow-clone B -> mutate/PR/publish in B -> push
+    back -> pull into A; content digests identical, fsck clean both sides,
+    and B's clone faulted zero objects up front (satellite 5 inner loop)."""
+    a_store = str(tmp_path / "a.wal")
+    b_store = str(tmp_path / "b.wal")
+    remote = str(tmp_path / "origin")
+    run = lambda s, *argv: vcs_cli.main(["--store", s] + list(argv))
+    assert run(a_store, "init") == 0
+    assert run(a_store, "seed", "orders", "--rows", "500") == 0
+    assert run(a_store, "push", remote) == 0
+    assert run(b_store, "clone", remote, "--shallow") == 0
+    capsys.readouterr()
+    assert run(b_store, "status") == 0
+    out = capsys.readouterr().out
+    assert "crc32c=" in out and "resident=0" in out   # shallow: nothing local
+    # work happens in B: branch, mutate, PR, publish
+    assert run(b_store, "branch", "dev", "-t", "orders") == 0
+    assert run(b_store, "mutate", "dev/orders", "--rows", "40") == 0
+    assert run(b_store, "pr", "open", "dev") == 0
+    assert run(b_store, "publish", "1") == 0
+    assert run(b_store, "push", remote) == 0
+    assert run(a_store, "pull", remote) == 0
+    ra = vcs_cli.load_repo(a_store)
+    rb = vcs_cli.load_repo(b_store)
+    assert content_digest(ra.engine, "orders") == \
+        content_digest(rb.engine, "orders")
+    for r in (ra, rb):
+        report = fsck(r.engine)
+        assert report.ok, [str(i) for i in report.issues]
+    assert run(a_store, "fsck") == 0
+    assert run(b_store, "fsck") == 0
+    assert run(a_store, "pull", remote) == 0          # idempotent
+    out = capsys.readouterr().out
+    assert "up to date" in out
+
+
+def test_cli_sql_push_pull_fetch(tmp_path, capsys):
+    a = str(tmp_path / "a.wal")
+    b = str(tmp_path / "b.wal")
+    remote = str(tmp_path / "origin")
+    assert vcs_cli.main(["--store", a, "init"]) == 0
+    assert vcs_cli.main(["--store", a, "seed", "t", "--rows", "20"]) == 0
+    assert vcs_cli.main(["--store", a, "sql", f"PUSH TO '{remote}'"]) == 0
+    assert vcs_cli.main(["--store", b, "clone", remote]) == 0
+    assert vcs_cli.main(["--store", b, "sql", f"FETCH FROM '{remote}'"]) == 0
+    assert vcs_cli.main(["--store", b, "sql", f"PULL FROM '{remote}'"]) == 0
+    out = capsys.readouterr().out
+    assert "up to date" in out

@@ -50,6 +50,13 @@ PINNED_METRICS = [
     "probe.objects_pruned",
     "probe.queries",
     "probe.shard_parts",
+    "store.bytes_packed",
+    "store.evictions",
+    "store.faults",
+    "store.hits",
+    "store.objects_pulled",
+    "store.objects_pushed",
+    "store.spills",
     "vis.builds",
     "vis.derives",
     "vis.extends",
@@ -118,7 +125,7 @@ def test_stats_json_golden_schema():
     repo = _mk_repo()
     doc = telemetry.stats_json(repo.engine)
     assert set(doc) == {"schema", "metrics"}
-    assert doc["schema"] == telemetry.STATS_SCHEMA == 2
+    assert doc["schema"] == telemetry.STATS_SCHEMA == 3
     assert list(doc["metrics"]) == PINNED_METRICS  # sorted AND complete
     # engine=None (CLI arms before the store loads): same keys, all zero
     empty = telemetry.stats_json(None)
